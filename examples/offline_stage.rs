@@ -1,0 +1,62 @@
+//! Offline stage walkthrough (paper §IV-A, Fig. 3): camera profiling,
+//! K-Means clustering, and per-cluster training-dataset assembly, with the
+//! crops labeled by the real cloud CNN over PJRT.
+//!
+//! Requires `make artifacts`. Run:
+//!
+//!     cargo run --release --example offline_stage
+
+use surveiledge::cluster::silhouette;
+use surveiledge::coordinator::{offline_stage, OfflineConfig};
+use surveiledge::runtime::service::InferenceService;
+use surveiledge::types::CLASS_NAMES;
+use surveiledge::video::standard_deployment;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("SURVEILEDGE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let svc = InferenceService::spawn(artifacts.into(), vec![1])?;
+
+    // 8 cameras: even = road scenes, odd = square scenes.
+    let n = 8;
+    let mut cams = standard_deployment(n, 96, 128, 33);
+    let stage = offline_stage(
+        &mut cams,
+        &svc.handle,
+        &OfflineConfig { duration: 60.0, k: 2, ..OfflineConfig::default() },
+    )?;
+
+    println!("== camera profiles (proportion vectors, Fig. 3) ==\n");
+    println!("           {}", CLASS_NAMES.map(|c| format!("{c:>8}")).join(""));
+    for p in &stage.profiles {
+        let cells: String = p.proportions.iter().map(|x| format!("{x:>8.2}")).collect();
+        let kind = if p.camera.0 % 2 == 0 { "road  " } else { "square" };
+        println!(
+            "cam{:<2} {kind} {cells}   -> cluster {}",
+            p.camera.0,
+            stage.clustering.assignment[p.camera.0 as usize]
+        );
+    }
+
+    println!("\n== clustering ==");
+    for (i, centre) in stage.clustering.centres.iter().enumerate() {
+        let cells: String = centre.iter().map(|x| format!("{x:>8.2}")).collect();
+        println!("cluster {i} profile: {cells}");
+    }
+    println!("silhouette: {:.3}", silhouette(&stage.profiles, &stage.clustering));
+    println!("inertia:    {:.4}", stage.clustering.inertia);
+
+    println!("\n== context-specific datasets ==");
+    for (i, ds) in stage.datasets.iter().enumerate() {
+        let mut counts = [0usize; 8];
+        for c in &ds.crops {
+            counts[c.label.index()] += 1;
+        }
+        println!("cluster {i}: {} crops, label mix:", ds.crops.len());
+        for (name, cnt) in CLASS_NAMES.iter().zip(counts.iter()) {
+            if *cnt > 0 {
+                println!("    {name:>8}: {cnt}");
+            }
+        }
+    }
+    Ok(())
+}

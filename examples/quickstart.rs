@@ -1,0 +1,46 @@
+//! Quickstart: run a 2-minute single-edge-plus-cloud query for "moped"
+//! and print a paper-style result row per scheme.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses calibrated synthetic confidences so it runs without the artifact
+//! bundle; pass `--pjrt` after `make artifacts` to route every
+//! classification through the real AOT-compiled CNNs.
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::harness::{ComputeMode, Harness, PjrtCtx};
+use surveiledge::metrics::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let pjrt = std::env::args().any(|a| a == "--pjrt");
+    let cfg = Config { duration: 120.0, ..Config::single_edge() };
+
+    println!(
+        "scenario: 1 edge ({} cameras), 1 cloud, query = {}, interval = {}s, {}s of stream\n",
+        cfg.total_cameras(),
+        cfg.query,
+        cfg.interval,
+        cfg.duration
+    );
+
+    let mut rows = Vec::new();
+    for scheme in Scheme::all() {
+        let mode = if pjrt {
+            ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(&cfg, 30)?))
+        } else {
+            ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+        };
+        let mut harness = Harness::new(cfg.clone(), mode);
+        let result = harness.run(scheme)?;
+        println!(
+            "{:20} {:4} tasks, {:4} uploads, p99 latency {:.2}s",
+            scheme.name(),
+            result.tasks,
+            result.uploads,
+            result.latency.percentile(0.99)
+        );
+        rows.push(result.row);
+    }
+    println!("\n{}", render_table("quickstart (Table II layout)", &rows));
+    Ok(())
+}

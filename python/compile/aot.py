@@ -1,0 +1,264 @@
+"""AOT build pipeline (`make artifacts`). Python runs ONCE, here.
+
+Outputs under ``artifacts/``:
+  * ``*.hlo.txt``           — HLO text modules (edge/cloud inference at batch
+                              1 and 8, edge train step, framediff) that the
+                              Rust PJRT runtime loads. HLO *text* (not
+                              serialized proto) is mandatory: xla_extension
+                              0.5.1 rejects jax>=0.5 64-bit-id protos.
+  * ``edge_pretrained.bin`` — generic EdgeCNN weights (backbone pretrained on
+                              the 8-class corpus + generic 2-class query head)
+  * ``cloud_trained.bin``   — high-accuracy CloudCNN weights (ground truth)
+  * ``manifest.json``       — shapes, param manifests, artifact inventory
+  * ``golden_*.bin``        — cross-language golden vectors pinning the Rust
+                              sprite renderer / resize / CNN numerics
+
+Weights are runtime *arguments* to the HLO (never baked constants), so one
+compiled executable serves every fine-tuned weight version.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+
+FRAME_H, FRAME_W = 96, 128  # detection frame resolution (see rust/src/video)
+EDGE_TRAIN_BATCH = 32
+QUERY_CLS = data.CLS_MOPED  # paper's running example query object
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def write_blob(path, arr: np.ndarray):
+    """Raw little-endian f32 blob with an 8-byte length header."""
+    arr = np.ascontiguousarray(arr, np.float32)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", arr.size))
+        f.write(arr.tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Stage 1: build-time training
+# ---------------------------------------------------------------------------
+
+def train_cloud(args):
+    """Train the ground-truth CloudCNN to high accuracy on the full corpus."""
+    print("[aot] rendering cloud corpus ...")
+    xs, ys = data.make_dataset(args.cloud_corpus, seed=11)
+    xt, yt = data.make_dataset(1024, seed=12)
+    params = model.init_params(model.cloud_param_manifest(), seed=1)
+    print(f"[aot] training CloudCNN ({sum(int(np.prod(s)) for _, s in model.cloud_param_manifest())} params, "
+          f"{args.cloud_steps} steps) ...")
+    t0 = time.time()
+    params, _ = train.train_loop(
+        model.cloud_logits, model.CLOUD_HEAD_CLASSES, params, xs, ys,
+        steps=args.cloud_steps, batch=64, lr=2e-3, seed=2,
+        log_every=max(args.cloud_steps // 8, 1), eval_data=(xt, yt))
+    acc = train.evaluate(model.cloud_logits, model.CLOUD_HEAD_CLASSES, params, xt, yt)
+    print(f"[aot] CloudCNN test acc {acc:.4f} in {time.time()-t0:.1f}s")
+    return params, acc
+
+
+def pretrain_edge(args):
+    """Pretrain the EdgeCNN backbone on the generic 8-class corpus (the
+    'ImageNet pre-training' stand-in), then train a generic 2-class query
+    head (the 'No Fine-tune' scheme's weights)."""
+    print("[aot] rendering edge pretraining corpus ...")
+    xs, ys = data.make_dataset(args.edge_corpus, seed=21)
+    xt, yt = data.make_dataset(512, seed=22)
+
+    # 8-class pretraining uses a temporary 8-class head on the same backbone.
+    man8 = model.edge_param_manifest()[:-2] + [
+        ("head8_w", (model.EDGE_FEAT, data.NUM_CLASSES)), ("head8_b", (data.NUM_CLASSES,))]
+    params8 = model.init_params(man8, seed=3)
+    print(f"[aot] pretraining EdgeCNN backbone ({args.edge_steps} steps) ...")
+    params8, _ = train.train_loop(
+        model.edge_logits, data.NUM_CLASSES, params8, xs, ys,
+        steps=args.edge_steps, batch=64, lr=2e-3, seed=4,
+        log_every=max(args.edge_steps // 6, 1), eval_data=(xt, yt))
+    acc8 = train.evaluate(model.edge_logits, data.NUM_CLASSES, params8, xt, yt)
+    print(f"[aot] EdgeCNN 8-class pretrain acc {acc8:.4f}")
+
+    # Swap the 8-class head for a fresh 2-class query head and give it a
+    # short generic (non-context-specific) training run: these are the
+    # weights an edge would use with *no* fine-tuning.
+    backbone = params8[:-2]
+    head = model.init_params([("head_w", (model.EDGE_FEAT, 2)), ("head_b", (2,))], seed=5)
+    params2 = backbone + head
+    bx, by = data.make_binary_dataset(2048, QUERY_CLS, seed=23)
+    mask = [False] * len(backbone) + [True, True]  # head-only generic training
+    params2, _ = train.train_loop(
+        model.edge_logits, 2, params2, bx, by,
+        steps=args.edge_head_steps, batch=64, lr=5e-3, seed=6, mask=mask)
+    btx, bty = data.make_binary_dataset(512, QUERY_CLS, seed=24)
+    acc2 = train.evaluate(model.edge_logits, 2, params2, btx, bty)
+    print(f"[aot] EdgeCNN generic-head binary acc {acc2:.4f}")
+    return params2, acc8, acc2
+
+
+# ---------------------------------------------------------------------------
+# Stage 2: lowering
+# ---------------------------------------------------------------------------
+
+def lower_all(outdir, edge_params, cloud_params):
+    f32 = jnp.float32
+    eman, cman = model.edge_param_manifest(), model.cloud_param_manifest()
+    especs = [jax.ShapeDtypeStruct(s, f32) for _, s in eman]
+    cspecs = [jax.ShapeDtypeStruct(s, f32) for _, s in cman]
+    arts = {}
+
+    for bsz in (1, 8):
+        x = jax.ShapeDtypeStruct((bsz, data.IMG, data.IMG, 3), f32)
+
+        def edge_infer(*a):
+            return (model.edge_forward(list(a[:-1]), a[-1], use_kernels=True),)
+
+        n = lower_to_file(edge_infer, especs + [x], f"{outdir}/edge_infer_b{bsz}.hlo.txt")
+        arts[f"edge_infer_b{bsz}"] = {"file": f"edge_infer_b{bsz}.hlo.txt", "batch": bsz, "bytes": n}
+        print(f"[aot] lowered edge_infer_b{bsz} ({n} chars)")
+
+        def cloud_infer(*a):
+            return (model.cloud_forward(list(a[:-1]), a[-1], use_kernels=True),)
+
+        n = lower_to_file(cloud_infer, cspecs + [x], f"{outdir}/cloud_infer_b{bsz}.hlo.txt")
+        arts[f"cloud_infer_b{bsz}"] = {"file": f"cloud_infer_b{bsz}.hlo.txt", "batch": bsz, "bytes": n}
+        print(f"[aot] lowered cloud_infer_b{bsz} ({n} chars)")
+
+    xtr = jax.ShapeDtypeStruct((EDGE_TRAIN_BATCH, data.IMG, data.IMG, 3), f32)
+    ytr = jax.ShapeDtypeStruct((EDGE_TRAIN_BATCH,), jnp.int32)
+
+    def edge_train_step(*a):
+        params, x, y = list(a[:-2]), a[-2], a[-1]
+        return train.edge_grad_step(params, x, y)
+
+    n = lower_to_file(edge_train_step, especs + [xtr, ytr], f"{outdir}/edge_train_b{EDGE_TRAIN_BATCH}.hlo.txt")
+    arts["edge_train"] = {"file": f"edge_train_b{EDGE_TRAIN_BATCH}.hlo.txt", "batch": EDGE_TRAIN_BATCH, "bytes": n}
+    print(f"[aot] lowered edge_train ({n} chars)")
+
+    from .kernels import framediff as k_framediff
+    ftrip = jax.ShapeDtypeStruct((1, FRAME_H, FRAME_W, 3), f32)
+
+    def fd(prev, cur, nxt):
+        return (k_framediff(prev, cur, nxt, threshold=0.1),)
+
+    n = lower_to_file(fd, [ftrip, ftrip, ftrip], f"{outdir}/framediff.hlo.txt")
+    arts["framediff"] = {"file": "framediff.hlo.txt", "batch": 1, "bytes": n,
+                         "frame": [FRAME_H, FRAME_W], "threshold": 0.1}
+    print(f"[aot] lowered framediff ({n} chars)")
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Stage 3: golden vectors (cross-language pinning)
+# ---------------------------------------------------------------------------
+
+def write_golden(outdir, edge_params, cloud_params):
+    """Golden sprites + CNN outputs the Rust tests compare against."""
+    sprites, meta = [], []
+    for cls in range(data.NUM_CLASSES):
+        p = data.SpriteParams(
+            cls=cls, size=24,
+            base=(0.8, 0.2, 0.2), accent=(0.2, 0.3, 0.8), bg=(0.45, 0.47, 0.44),
+            rot=0.15, jx=0.05, jy=-0.04, noise=0.06, seed=1000 + cls)
+        img = data.render_sprite(p)
+        sprites.append(img.ravel())
+        meta.append({"cls": cls, "size": 24, "rot": 0.15, "jx": 0.05, "jy": -0.04,
+                     "noise": 0.06, "seed": 1000 + cls,
+                     "base": [0.8, 0.2, 0.2], "accent": [0.2, 0.3, 0.8],
+                     "bg": [0.45, 0.47, 0.44]})
+    write_blob(f"{outdir}/golden_sprites.bin", np.concatenate(sprites))
+
+    # resize golden: sprite 24 -> 32
+    img24 = data.render_sprite(data.SpriteParams(
+        cls=0, size=24, base=(0.7, 0.5, 0.1), accent=(0.1, 0.1, 0.9),
+        bg=(0.5, 0.5, 0.5), rot=0.0, jx=0.0, jy=0.0, noise=0.0, seed=7))
+    write_blob(f"{outdir}/golden_resize_in.bin", img24)
+    write_blob(f"{outdir}/golden_resize_out.bin", data.bilinear_resize(img24, 32, 32))
+
+    # CNN inference goldens on a fixed batch of 8 (one per class)
+    batch = np.stack([data.render_example(data.SpriteParams(
+        cls=c, size=22, base=(0.6, 0.25, 0.3), accent=(0.25, 0.6, 0.3),
+        bg=(0.45, 0.47, 0.44), rot=-0.1, jx=0.02, jy=0.03, noise=0.05,
+        seed=2000 + c)) for c in range(8)])
+    eout = np.asarray(model.edge_forward(edge_params, jnp.asarray(batch), use_kernels=False))
+    cout = np.asarray(model.cloud_forward(cloud_params, jnp.asarray(batch), use_kernels=False))
+    write_blob(f"{outdir}/golden_batch.bin", batch)
+    write_blob(f"{outdir}/golden_edge_probs.bin", eout)
+    write_blob(f"{outdir}/golden_cloud_probs.bin", cout)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--cloud-steps", type=int, default=int(os.environ.get("AOT_CLOUD_STEPS", 400)))
+    ap.add_argument("--edge-steps", type=int, default=int(os.environ.get("AOT_EDGE_STEPS", 250)))
+    ap.add_argument("--edge-head-steps", type=int, default=120)
+    ap.add_argument("--cloud-corpus", type=int, default=int(os.environ.get("AOT_CLOUD_CORPUS", 6000)))
+    ap.add_argument("--edge-corpus", type=int, default=int(os.environ.get("AOT_EDGE_CORPUS", 4000)))
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    t0 = time.time()
+    cloud_params, cloud_acc = train_cloud(args)
+    edge_params, edge_acc8, edge_acc2 = pretrain_edge(args)
+
+    write_blob(f"{outdir}/cloud_trained.bin", model.flatten_params(cloud_params))
+    write_blob(f"{outdir}/edge_pretrained.bin", model.flatten_params(edge_params))
+
+    arts = lower_all(outdir, edge_params, cloud_params)
+    golden_meta = write_golden(outdir, edge_params, cloud_params)
+
+    manifest = {
+        "version": 1,
+        "img": data.IMG,
+        "frame": [FRAME_H, FRAME_W],
+        "classes": data.CLASSES,
+        "query_cls": QUERY_CLS,
+        "edge_train_batch": EDGE_TRAIN_BATCH,
+        "edge_params": [{"name": n, "shape": list(s)} for n, s in model.edge_param_manifest()],
+        "cloud_params": [{"name": n, "shape": list(s)} for n, s in model.cloud_param_manifest()],
+        "edge_head_group": model.edge_head_param_count(),
+        "artifacts": arts,
+        "weights": {
+            "edge_pretrained": "edge_pretrained.bin",
+            "cloud_trained": "cloud_trained.bin",
+        },
+        "train_acc": {"cloud": cloud_acc, "edge8": edge_acc8, "edge_generic_binary": edge_acc2},
+        "golden": golden_meta,
+    }
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t0:.1f}s -> {outdir}")
+
+
+if __name__ == "__main__":
+    main()

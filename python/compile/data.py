@@ -1,0 +1,300 @@
+"""Synthetic surveillance-object corpus (build-time side).
+
+This module is the *specification* of the sprite renderer: the Rust serving
+substrate (``rust/src/video/sprite.rs``) implements the exact same per-pixel
+analytic rasterizer, so the distribution the edge/cloud CNNs are trained on
+(here) matches the distribution the detector crops at serving time (there).
+
+Design rules that make the two implementations bit-comparable:
+
+* Shapes are **analytic masks** evaluated per pixel in canonical coordinates
+  (u, v) in [-1, 1]^2 — no curve rasterisation, no anti-aliasing.
+* All arithmetic is f32.
+* Per-pixel noise comes from an integer hash (``pixel_noise``), not a
+  stateful RNG, so it is identical across languages given (x, y, seed).
+* Bilinear resize uses the half-pixel-center convention (align_corners=False)
+  with edge clamping.
+
+A golden test (``python/tests/test_golden.py`` + ``rust/src/video/sprite.rs``
+tests against ``artifacts/golden_sprites.bin``) pins the two implementations
+together.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Class ids — keep in sync with rust/src/types (ClassId).
+CLASSES = ["car", "bus", "truck", "moped", "bicycle", "person", "dog", "cart"]
+NUM_CLASSES = len(CLASSES)
+CLS_CAR, CLS_BUS, CLS_TRUCK, CLS_MOPED = 0, 1, 2, 3
+CLS_BICYCLE, CLS_PERSON, CLS_DOG, CLS_CART = 4, 5, 6, 7
+
+IMG = 32  # CNN input resolution (IMG x IMG x 3)
+
+WHEEL = np.array([0.13, 0.13, 0.15], np.float32)  # dark wheel/tyre colour
+
+
+@dataclasses.dataclass
+class SpriteParams:
+    """Fully explicit, RNG-free description of one rendered object."""
+
+    cls: int
+    size: int                 # raster canvas (size x size), sprite fills it
+    base: tuple               # primary body colour (r, g, b) in [0, 1]
+    accent: tuple             # secondary colour
+    bg: tuple                 # background colour
+    rot: float = 0.0          # rotation, radians (small)
+    jx: float = 0.0           # centre jitter in canonical units
+    jy: float = 0.0
+    noise: float = 0.0        # additive noise amplitude
+    seed: int = 0             # pixel-noise seed
+
+
+# ----------------------------------------------------------------------------
+# Deterministic per-pixel noise (cross-language identical)
+# ----------------------------------------------------------------------------
+
+def _hash32(x: np.ndarray) -> np.ndarray:
+    """lowbias32 integer hash (u32 -> u32); same constants in Rust."""
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(0x7FEB352D)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(15)
+    x = (x * np.uint32(0x846CA68B)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def pixel_noise(xs: np.ndarray, ys: np.ndarray, seed: int) -> np.ndarray:
+    """Uniform noise in [-1, 1] per pixel, vectorised; f32."""
+    h = _hash32(
+        (xs.astype(np.uint32) * np.uint32(73856093))
+        ^ (ys.astype(np.uint32) * np.uint32(19349663))
+        ^ np.uint32((seed * 83492791) & 0xFFFFFFFF)
+    )
+    return (h.astype(np.float32) / np.float32(4294967295.0)) * np.float32(2.0) - np.float32(1.0)
+
+
+# ----------------------------------------------------------------------------
+# Analytic masks. All take canonical coords (u right, v down) and return bool.
+# ----------------------------------------------------------------------------
+
+def _rect(u, v, cx, cy, hw, hh):
+    return (np.abs(u - cx) <= hw) & (np.abs(v - cy) <= hh)
+
+
+def _ellipse(u, v, cx, cy, ru, rv):
+    return ((u - cx) / ru) ** 2 + ((v - cy) / rv) ** 2 <= 1.0
+
+
+def _circle(u, v, cx, cy, r):
+    return _ellipse(u, v, cx, cy, r, r)
+
+
+def _ring(u, v, cx, cy, r, w):
+    d2 = (u - cx) ** 2 + (v - cy) ** 2
+    return (d2 <= (r + w) ** 2) & (d2 >= (r - w) ** 2)
+
+
+def _seg(u, v, x1, y1, x2, y2, w):
+    """Distance-to-segment <= w."""
+    dx, dy = x2 - x1, y2 - y1
+    ll = dx * dx + dy * dy
+    t = np.clip(((u - x1) * dx + (v - y1) * dy) / np.maximum(ll, 1e-9), 0.0, 1.0)
+    px, py = x1 + t * dx, y1 + t * dy
+    return (u - px) ** 2 + (v - py) ** 2 <= w * w
+
+
+def class_layers(cls: int, base, accent):
+    """Ordered (mask_fn, colour) layers for a class. Later layers paint over."""
+    b = np.asarray(base, np.float32)
+    a = np.asarray(accent, np.float32)
+    w = WHEEL
+    if cls == CLS_CAR:
+        return [
+            (lambda u, v: _rect(u, v, 0.0, 0.08, 0.72, 0.26), b),
+            (lambda u, v: _rect(u, v, -0.05, -0.22, 0.36, 0.16), a),
+            (lambda u, v: _circle(u, v, -0.42, 0.42, 0.16), w),
+            (lambda u, v: _circle(u, v, 0.42, 0.42, 0.16), w),
+        ]
+    if cls == CLS_BUS:
+        return [
+            (lambda u, v: _rect(u, v, 0.0, 0.0, 0.85, 0.45), b),
+            (lambda u, v: _rect(u, v, 0.0, -0.2, 0.75, 0.1), a),
+            (lambda u, v: _circle(u, v, -0.5, 0.5, 0.14), w),
+            (lambda u, v: _circle(u, v, 0.5, 0.5, 0.14), w),
+        ]
+    if cls == CLS_TRUCK:
+        return [
+            (lambda u, v: _rect(u, v, -0.58, 0.0, 0.2, 0.3), a),
+            (lambda u, v: _rect(u, v, 0.18, -0.08, 0.55, 0.38), b),
+            (lambda u, v: _circle(u, v, -0.58, 0.42, 0.13), w),
+            (lambda u, v: _circle(u, v, 0.05, 0.44, 0.13), w),
+            (lambda u, v: _circle(u, v, 0.6, 0.44, 0.13), w),
+        ]
+    if cls == CLS_MOPED:
+        return [
+            (lambda u, v: _circle(u, v, -0.45, 0.42, 0.2), w),
+            (lambda u, v: _circle(u, v, 0.45, 0.42, 0.2), w),
+            (lambda u, v: _rect(u, v, 0.08, 0.08, 0.28, 0.2), b),
+            (lambda u, v: _seg(u, v, 0.35, -0.3, 0.3, 0.1, 0.06), a),
+            (lambda u, v: _rect(u, v, 0.35, -0.35, 0.14, 0.05), a),
+            (lambda u, v: _rect(u, v, -0.28, -0.1, 0.16, 0.07), b),
+        ]
+    if cls == CLS_BICYCLE:
+        return [
+            (lambda u, v: _ring(u, v, -0.45, 0.32, 0.3, 0.07), w),
+            (lambda u, v: _ring(u, v, 0.45, 0.32, 0.3, 0.07), w),
+            (lambda u, v: _seg(u, v, -0.45, 0.32, 0.05, -0.3, 0.05), b),
+            (lambda u, v: _seg(u, v, 0.05, -0.3, 0.45, 0.32, 0.05), b),
+            (lambda u, v: _seg(u, v, -0.45, 0.32, 0.0, 0.32, 0.05), b),
+            (lambda u, v: _rect(u, v, 0.05, -0.38, 0.12, 0.04), a),
+        ]
+    if cls == CLS_PERSON:
+        return [
+            (lambda u, v: _rect(u, v, -0.1, 0.55, 0.08, 0.3), a),
+            (lambda u, v: _rect(u, v, 0.12, 0.55, 0.08, 0.3), a),
+            (lambda u, v: _ellipse(u, v, 0.0, -0.02, 0.24, 0.38), b),
+            (lambda u, v: _circle(u, v, 0.0, -0.56, 0.18), a),
+        ]
+    if cls == CLS_DOG:
+        return [
+            (lambda u, v: _rect(u, v, -0.3, 0.5, 0.06, 0.22), b),
+            (lambda u, v: _rect(u, v, 0.3, 0.5, 0.06, 0.22), b),
+            (lambda u, v: _ellipse(u, v, 0.0, 0.12, 0.48, 0.24), b),
+            (lambda u, v: _circle(u, v, 0.52, -0.1, 0.17), b),
+            (lambda u, v: _seg(u, v, -0.48, 0.0, -0.68, -0.3, 0.05), b),
+        ]
+    if cls == CLS_CART:
+        return [
+            (lambda u, v: _rect(u, v, 0.1, -0.02, 0.48, 0.3), b),
+            (lambda u, v: _circle(u, v, 0.1, 0.45, 0.18), w),
+            (lambda u, v: _seg(u, v, -0.38, -0.1, -0.75, -0.45, 0.05), a),
+        ]
+    raise ValueError(f"bad class {cls}")
+
+
+def render_sprite(p: SpriteParams) -> np.ndarray:
+    """Rasterise one sprite onto its background; returns (size, size, 3) f32."""
+    s = p.size
+    idx = np.arange(s, dtype=np.float32)
+    # half-pixel centres mapped to [-1, 1]
+    u = ((2.0 * idx + 1.0) / np.float32(s) - 1.0)[None, :] * np.ones((s, 1), np.float32)
+    v = ((2.0 * idx + 1.0) / np.float32(s) - 1.0)[:, None] * np.ones((1, s), np.float32)
+    # inverse-transform pixel coords into canonical sprite space
+    uc = (u - np.float32(p.jx)).astype(np.float32)
+    vc = (v - np.float32(p.jy)).astype(np.float32)
+    c, sn = np.float32(np.cos(p.rot)), np.float32(np.sin(p.rot))
+    ur = uc * c + vc * sn
+    vr = -uc * sn + vc * c
+
+    img = np.empty((s, s, 3), np.float32)
+    img[:] = np.asarray(p.bg, np.float32)
+    for mask_fn, colour in class_layers(p.cls, p.base, p.accent):
+        m = mask_fn(ur, vr)
+        img[m] = colour
+
+    if p.noise > 0.0:
+        ys, xs = np.meshgrid(np.arange(s, dtype=np.uint32), np.arange(s, dtype=np.uint32), indexing="ij")
+        for ch in range(3):
+            n = pixel_noise(xs, ys, p.seed + ch * 1013904223)
+            img[:, :, ch] += np.float32(p.noise) * n
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def bilinear_resize(img: np.ndarray, oh: int, ow: int) -> np.ndarray:
+    """Half-pixel-centre bilinear resize with edge clamp; (H,W,C) f32."""
+    ih, iw = img.shape[0], img.shape[1]
+    ry = np.float32(ih) / np.float32(oh)
+    rx = np.float32(iw) / np.float32(ow)
+    ys = (np.arange(oh, dtype=np.float32) + 0.5) * ry - 0.5
+    xs = (np.arange(ow, dtype=np.float32) + 0.5) * rx - 0.5
+    y0 = np.clip(np.floor(ys), 0, ih - 1).astype(np.int32)
+    x0 = np.clip(np.floor(xs), 0, iw - 1).astype(np.int32)
+    y1 = np.minimum(y0 + 1, ih - 1)
+    x1 = np.minimum(x0 + 1, iw - 1)
+    fy = np.clip(ys - y0.astype(np.float32), 0.0, 1.0).astype(np.float32)[:, None, None]
+    fx = np.clip(xs - x0.astype(np.float32), 0.0, 1.0).astype(np.float32)[None, :, None]
+    a = img[y0][:, x0]
+    b = img[y0][:, x1]
+    c = img[y1][:, x0]
+    d = img[y1][:, x1]
+    top = a * (1.0 - fx) + b * fx
+    bot = c * (1.0 - fx) + d * fx
+    return (top * (1.0 - fy) + bot * fy).astype(np.float32)
+
+
+# ----------------------------------------------------------------------------
+# Corpus sampling
+# ----------------------------------------------------------------------------
+
+def sample_params(rng: np.random.RandomState, cls: int, *, hard: bool = True) -> SpriteParams:
+    """Sample render params. ``hard`` adds the jitter/noise that separates
+    edge-CNN accuracy from cloud-CNN accuracy (the paper's accuracy gap)."""
+    def colour(lo=0.15, hi=0.95):
+        return tuple(rng.uniform(lo, hi, 3).astype(np.float32).tolist())
+
+    size = int(rng.randint(14, 31))
+    p = SpriteParams(
+        cls=cls,
+        size=size,
+        base=colour(),
+        accent=colour(),
+        bg=tuple((np.array([0.45, 0.47, 0.44], np.float32) + rng.uniform(-0.18, 0.18, 3).astype(np.float32)).tolist()),
+        rot=float(rng.uniform(-0.35, 0.35)) if hard else 0.0,
+        jx=float(rng.uniform(-0.12, 0.12)) if hard else 0.0,
+        jy=float(rng.uniform(-0.12, 0.12)) if hard else 0.0,
+        noise=float(rng.uniform(0.02, 0.14)) if hard else 0.0,
+        seed=int(rng.randint(0, 2**31 - 1)),
+    )
+    return p
+
+
+def render_example(p: SpriteParams) -> np.ndarray:
+    """Render + resize to the CNN input resolution."""
+    return bilinear_resize(render_sprite(p), IMG, IMG)
+
+
+def make_dataset(n: int, seed: int, class_weights=None, hard: bool = True):
+    """Build (x, y): x (n, IMG, IMG, 3) f32, y (n,) int32.
+
+    ``class_weights`` mirrors the paper's proportional negative sampling: a
+    length-8 vector of per-class probabilities (the cluster profile).
+    """
+    rng = np.random.RandomState(seed)
+    if class_weights is None:
+        class_weights = np.full(NUM_CLASSES, 1.0 / NUM_CLASSES)
+    class_weights = np.asarray(class_weights, np.float64)
+    class_weights = class_weights / class_weights.sum()
+    ys = rng.choice(NUM_CLASSES, size=n, p=class_weights).astype(np.int32)
+    xs = np.stack([render_example(sample_params(rng, int(c), hard=hard)) for c in ys])
+    return xs.astype(np.float32), ys
+
+
+def make_binary_dataset(n: int, query_cls: int, seed: int, profile=None, pos_frac: float = 0.5):
+    """Query-specific dataset: label 1 = query class, 0 = other.
+
+    Negatives are sampled proportionally to ``profile`` (the cluster
+    proportion vector) per the paper's negative-selection rule (§IV-B).
+    """
+    rng = np.random.RandomState(seed)
+    if profile is None:
+        profile = np.full(NUM_CLASSES, 1.0 / NUM_CLASSES)
+    neg_w = np.asarray(profile, np.float64).copy()
+    neg_w[query_cls] = 0.0
+    if neg_w.sum() <= 0:
+        neg_w = np.ones(NUM_CLASSES)
+        neg_w[query_cls] = 0.0
+    neg_w = neg_w / neg_w.sum()
+    xs, ys = [], []
+    for _ in range(n):
+        if rng.uniform() < pos_frac:
+            c = query_cls
+        else:
+            c = int(rng.choice(NUM_CLASSES, p=neg_w))
+        xs.append(render_example(sample_params(rng, c)))
+        ys.append(1 if c == query_cls else 0)
+    return np.stack(xs).astype(np.float32), np.asarray(ys, np.int32)

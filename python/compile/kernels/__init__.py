@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO)."""
+
+from .conv2d import conv2d
+from .dense import dense, pointwise
+from .depthwise import depthwise
+from .framediff import framediff
+
+__all__ = ["conv2d", "dense", "pointwise", "depthwise", "framediff"]

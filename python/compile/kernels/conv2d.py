@@ -1,0 +1,79 @@
+"""Pallas conv2d kernel: im2col -> MXU matmul.
+
+TPU adaptation of the dense-conv hot loop (DESIGN.md §Hardware-Adaptation):
+instead of porting a CUDA threadblock conv, the convolution is phrased as an
+(M, K) x (K, N) matmul so the inner loop is a single ``jnp.dot`` that maps
+onto the MXU systolic array. The grid runs one program per (image,
+out-channel tile); BlockSpec streams one padded image + one weight tile into
+VMEM per step, which is the HBM<->VMEM schedule a GPU kernel would express
+with threadblocks + shared memory.
+
+VMEM budget per program (f32): padded image H'*W'*Ci + weight tile
+KH*KW*Ci*Tc + output tile Ho*Wo*Tc — sized well under 2 MiB for every layer
+in this repo (see DESIGN.md §Perf).
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, ho, wo, act):
+    """One program: one padded image x one out-channel tile."""
+    x = x_ref[0]            # (Hp, Wp, Ci)
+    ci = x.shape[-1]
+    # im2col: KH*KW strided views, stacked on a new trailing axis.
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (dy, dx, 0),
+                    (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, ci),
+                    (stride, stride, 1),
+                )
+            )
+    patches = jnp.stack(cols, axis=2)                    # (Ho, Wo, KH*KW, Ci)
+    m = patches.reshape(ho * wo, kh * kw * ci)           # (M, K)
+    wmat = w_ref[...].reshape(kh * kw * ci, -1)          # (K, Tc)
+    acc = jnp.dot(m, wmat, preferred_element_type=jnp.float32)
+    out = acc.reshape(ho, wo, -1) + b_ref[...]
+    o_ref[0] = ref.apply_act(out, act)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "cout_tile"))
+def conv2d(x, w, b, *, stride: int = 1, act: int = ref.ACT_NONE, cout_tile: int = 0):
+    """NHWC SAME conv via pallas. x (B,H,W,Ci), w (KH,KW,Ci,Co), b (Co)."""
+    bsz, h, wdt, ci = x.shape
+    kh, kw, _, co = w.shape
+    tc = cout_tile if cout_tile > 0 else co
+    assert co % tc == 0, f"cout {co} not divisible by tile {tc}"
+    plo, phi = ref.same_pads(kh, stride, h)
+    qlo, qhi = ref.same_pads(kw, stride, wdt)
+    xp = jnp.pad(x, ((0, 0), (plo, phi), (qlo, qhi), (0, 0)))
+    hp, wp = h + plo + phi, wdt + qlo + qhi
+    ho, wo = -(-h // stride), -(-wdt // stride)
+
+    kern = functools.partial(_kernel, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo, act=act)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz, co // tc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, ci), lambda ib, ic: (ib, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ci, tc), lambda ib, ic: (0, 0, 0, ic)),
+            pl.BlockSpec((tc,), lambda ib, ic: (ic,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, tc), lambda ib, ic: (ib, 0, 0, ic)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, co), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

@@ -1,0 +1,52 @@
+"""Pallas fused dense (+bias +activation) kernel.
+
+Used both for classifier heads and for MobileNet pointwise (1x1) convs: a
+pointwise conv over NHWC is exactly ``reshape(B*H*W, Ci) @ (Ci, Co)``.
+Grid tiles the N (out-feature) axis so each program computes an
+(M, K) x (K, Tn) MXU matmul with the weight tile resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = ref.apply_act(acc + b_ref[...], act)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "n_tile"))
+def dense(x, w, b, *, act: int = ref.ACT_NONE, n_tile: int = 0):
+    """x (M,K) @ w (K,N) + b (N), fused activation."""
+    m, k = x.shape
+    _, n = w.shape
+    tn = n_tile if n_tile > 0 else n
+    assert n % tn == 0, f"n {n} not divisible by tile {tn}"
+    kern = functools.partial(_kernel, act=act)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, tn), lambda i: (0, i)),
+            pl.BlockSpec((tn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def pointwise(x, w, b, *, act: int = ref.ACT_NONE):
+    """1x1 conv over NHWC via the dense kernel. x (B,H,W,Ci), w (Ci,Co)."""
+    bsz, h, wdt, ci = x.shape
+    co = w.shape[1]
+    out = dense(x.reshape(bsz * h * wdt, ci), w, b, act=act)
+    return out.reshape(bsz, h, wdt, co)

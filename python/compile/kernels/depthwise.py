@@ -1,0 +1,60 @@
+"""Pallas depthwise-conv kernel (MobileNet's core op).
+
+Depthwise conv has no channel contraction, so it is a VPU (vector unit)
+kernel, not an MXU one: per grid step we stream one padded image into
+VMEM and accumulate KH*KW shifted, strided slices scaled by the per-channel
+taps — elementwise MACs over a (Ho, Wo, C) tile. Channels stay in the minor
+dimension (lane axis on TPU) so the multiply broadcasts across lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, stride, ho, wo, act):
+    x = x_ref[0]                          # (Hp, Wp, C)
+    c = x.shape[-1]
+    acc = jnp.zeros((ho, wo, c), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = jax.lax.slice(
+                x,
+                (dy, dx, 0),
+                (dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + sl * w_ref[dy, dx]  # (C,) broadcast over lanes
+    o_ref[0] = ref.apply_act(acc + b_ref[...], act)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act"))
+def depthwise(x, w, b, *, stride: int = 1, act: int = ref.ACT_NONE):
+    """NHWC SAME depthwise conv via pallas. x (B,H,W,C), w (KH,KW,C), b (C)."""
+    bsz, h, wdt, c = x.shape
+    kh, kw, _ = w.shape
+    plo, phi = ref.same_pads(kh, stride, h)
+    qlo, qhi = ref.same_pads(kw, stride, wdt)
+    xp = jnp.pad(x, ((0, 0), (plo, phi), (qlo, qhi), (0, 0)))
+    hp, wp = h + plo + phi, wdt + qlo + qhi
+    ho, wo = -(-h // stride), -(-wdt // stride)
+
+    kern = functools.partial(_kernel, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo, act=act)
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda ib: (ib, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda ib: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda ib: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda ib: (ib, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(xp, w, b)

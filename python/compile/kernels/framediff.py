@@ -1,0 +1,67 @@
+"""Pallas frame-difference kernel (paper §IV-C dense stage).
+
+The per-frame detection hot loop: three consecutive frames in, one binary
+motion mask out. All stages are fused into a single VPU kernel so the
+triplet is read from HBM exactly once:
+
+    d1 = |f_k - f_{k-1}|;  d2 = |f_{k+1} - f_k|
+    da = min(d1, d2)                  (elementwise conjunction, eq. 3)
+    gray = mean_c(da)                 (grayscale)
+    bin  = gray > threshold           (eq. 4, maxval normalised to 1.0)
+    dil  = 3x3 max-filter(bin)        (eq. 5, dilation)
+    ero  = 3x3 min-filter(dil)        (eq. 6, erosion)
+
+Grid = one program per triplet; the (H, W, 3) blocks stay channel-minor so
+the abs/min/mean run across lanes. Morphology shifts are static slices of a
+zero/one-padded VMEM tile. Contour extraction (irregular, data-dependent)
+stays in the Rust coordinator (rust/src/detect) per DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _morph(x, op):
+    """3x3 max/min filter over (H, W) with neutral-value padding."""
+    pad_val = 0.0 if op == "max" else 1.0
+    xp = jnp.pad(x, ((1, 1), (1, 1)), constant_values=pad_val)
+    h, w = x.shape
+    out = xp[0:h, 0:w]
+    for dy in range(3):
+        for dx in range(3):
+            if dy == 0 and dx == 0:
+                continue
+            sl = xp[dy:dy + h, dx:dx + w]
+            out = jnp.maximum(out, sl) if op == "max" else jnp.minimum(out, sl)
+    return out
+
+
+def _kernel(prev_ref, cur_ref, nxt_ref, o_ref, *, threshold):
+    prev, cur, nxt = prev_ref[0], cur_ref[0], nxt_ref[0]
+    d1 = jnp.abs(cur - prev)
+    d2 = jnp.abs(nxt - cur)
+    da = jnp.minimum(d1, d2)
+    gray = jnp.mean(da, axis=-1)
+    binary = (gray > threshold).astype(jnp.float32)
+    o_ref[0] = _morph(_morph(binary, "max"), "min")
+
+
+@functools.partial(jax.jit, static_argnames=("threshold",))
+def framediff(prev, cur, nxt, *, threshold: float = 0.1):
+    """(B,H,W,3) triplet -> (B,H,W) binary motion mask."""
+    bsz, h, w, c = prev.shape
+    kern = functools.partial(_kernel, threshold=threshold)
+    spec = pl.BlockSpec((1, h, w, c), lambda ib: (ib, 0, 0, 0))
+    return pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((1, h, w), lambda ib: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, w), jnp.float32),
+        interpret=True,
+    )(prev, cur, nxt)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the implementations used inside the *training* graph
+(``compile/train.py``): JAX cannot differentiate through interpret-mode
+pallas_call cleanly, and the kernels only need to be on the inference hot
+path. ``python/tests/test_kernels.py`` asserts kernel == ref across a
+hypothesis sweep of shapes/dtypes, which pins both paths together.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Activation codes shared with the pallas kernels.
+ACT_NONE, ACT_RELU, ACT_RELU6 = 0, 1, 2
+
+
+def apply_act(x, act: int):
+    if act == ACT_NONE:
+        return x
+    if act == ACT_RELU:
+        return jnp.maximum(x, 0.0)
+    if act == ACT_RELU6:
+        return jnp.clip(x, 0.0, 6.0)
+    raise ValueError(f"bad act {act}")
+
+
+def same_pads(k: int, s: int, size: int):
+    """TF-style SAME padding amounts (lo, hi) for kernel k, stride s."""
+    out = -(-size // s)  # ceil div
+    pad = max(0, (out - 1) * s + k - size)
+    return pad // 2, pad - pad // 2
+
+
+def conv2d(x, w, b, *, stride: int = 1, act: int = ACT_NONE):
+    """NHWC conv, SAME padding. x (B,H,W,Ci), w (KH,KW,Ci,Co), b (Co)."""
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return apply_act(out + b, act)
+
+
+def depthwise(x, w, b, *, stride: int = 1, act: int = ACT_NONE):
+    """Depthwise NHWC conv, SAME. x (B,H,W,C), w (KH,KW,C), b (C)."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, :, None, :],
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return apply_act(out + b, act)
+
+
+def dense(x, w, b, *, act: int = ACT_NONE):
+    """x (B,K) @ w (K,N) + b (N)."""
+    return apply_act(jnp.dot(x, w) + b, act)
+
+
+def framediff(prev, cur, nxt, *, threshold: float = 0.1):
+    """Paper §IV-C dense stage on a frame triplet (B,H,W,3) -> (B,H,W) mask.
+
+    d1 = |f_k - f_{k-1}|, d2 = |f_{k+1} - f_k|; the paper's per-element
+    "bitwise logical conjunction" is realised as the elementwise minimum
+    (the t-norm AND for intensity images); grayscale = channel mean;
+    fixed-level threshold -> binary; 3x3 dilation then 3x3 erosion
+    (morphological closing).  Output in {0, 1} f32.
+    """
+    d1 = jnp.abs(cur - prev)
+    d2 = jnp.abs(nxt - cur)
+    da = jnp.minimum(d1, d2)
+    gray = jnp.mean(da, axis=-1)
+    binary = (gray > threshold).astype(jnp.float32)
+    dil = window_morph(binary, op="max")
+    ero = window_morph(dil, op="min")
+    return ero
+
+
+def window_morph(x, *, op: str):
+    """3x3 dilation (max) / erosion (min) over (B,H,W) with edge-neutral pad."""
+    pad_val = 0.0 if op == "max" else 1.0
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1)), constant_values=pad_val)
+    h, w = x.shape[1], x.shape[2]
+    shifts = [xp[:, dy:dy + h, dx:dx + w] for dy in range(3) for dx in range(3)]
+    stack = jnp.stack(shifts, axis=0)
+    return jnp.max(stack, axis=0) if op == "max" else jnp.min(stack, axis=0)

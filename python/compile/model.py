@@ -1,0 +1,207 @@
+"""L2 JAX models: EdgeCNN (CQ-specific, MobileNet-style) and CloudCNN
+(high-accuracy, ResNet-style).
+
+Both models are defined over explicit parameter lists (ordered ``(name,
+shape)`` manifests) rather than a framework pytree, because the Rust runtime
+feeds weights positionally into the AOT HLO executables.
+
+``use_kernels=True`` routes the forward pass through the L1 Pallas kernels
+(inference artifacts); ``use_kernels=False`` uses the pure-jnp ref ops
+(training graph — differentiable). ``python/tests/test_model.py`` asserts
+both paths agree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import data
+from .kernels import ref
+from .kernels import conv2d as k_conv2d, depthwise as k_depthwise
+from .kernels import dense as k_dense, pointwise as k_pointwise
+
+IMG = data.IMG
+NUM_CLASSES = data.NUM_CLASSES
+
+# ---------------------------------------------------------------------------
+# EdgeCNN: stem conv + 4 depthwise-separable blocks + GAP + 2-class head.
+# ~15k params; the "CQ-specific CNN" the paper fine-tunes per query/cluster.
+# (stride, cout) per ds block; stem is 3x3 s2 3->16.
+# ---------------------------------------------------------------------------
+
+EDGE_BLOCKS = [(1, 32), (2, 64), (1, 64), (2, 128)]
+EDGE_STEM = 16
+EDGE_FEAT = EDGE_BLOCKS[-1][1]
+EDGE_HEAD_CLASSES = 2  # (not-query, query)
+
+
+def edge_param_manifest():
+    """Ordered (name, shape) list. Head params are last (fine-tune groups)."""
+    man = [("stem_w", (3, 3, 3, EDGE_STEM)), ("stem_b", (EDGE_STEM,))]
+    cin = EDGE_STEM
+    for i, (_, cout) in enumerate(EDGE_BLOCKS):
+        man += [
+            (f"ds{i}_dw_w", (3, 3, cin)), (f"ds{i}_dw_b", (cin,)),
+            (f"ds{i}_pw_w", (cin, cout)), (f"ds{i}_pw_b", (cout,)),
+        ]
+        cin = cout
+    man += [("head_w", (EDGE_FEAT, EDGE_HEAD_CLASSES)), ("head_b", (EDGE_HEAD_CLASSES,))]
+    return man
+
+
+def edge_head_param_count():
+    """Number of trailing manifest entries that form the fine-tune head group
+    (head + last ds block), mirroring the paper's partial fine-tuning."""
+    return 2 + 4  # head_w/head_b + ds3 (dw_w, dw_b, pw_w, pw_b)
+
+
+def edge_forward(params, x, *, use_kernels: bool):
+    """params: list of arrays per edge_param_manifest(); x (B,32,32,3).
+    Returns softmax probs (B, 2); probs[:, 1] is the query confidence f."""
+    x = normalize_input(x)
+    it = iter(params)
+    nxt = lambda: next(it)
+    sw, sb = nxt(), nxt()
+    if use_kernels:
+        h = k_conv2d(x, sw, sb, stride=2, act=ref.ACT_RELU6)
+    else:
+        h = ref.conv2d(x, sw, sb, stride=2, act=ref.ACT_RELU6)
+    for stride, _ in EDGE_BLOCKS:
+        dww, dwb, pww, pwb = nxt(), nxt(), nxt(), nxt()
+        if use_kernels:
+            h = k_depthwise(h, dww, dwb, stride=stride, act=ref.ACT_RELU6)
+            h = k_pointwise(h, pww, pwb, act=ref.ACT_RELU6)
+        else:
+            h = ref.depthwise(h, dww, dwb, stride=stride, act=ref.ACT_RELU6)
+            b, hh, ww, ci = h.shape
+            h = ref.dense(h.reshape(b * hh * ww, ci), pww, pwb, act=ref.ACT_RELU6)
+            h = h.reshape(b, hh, ww, -1)
+    feat = jnp.mean(h, axis=(1, 2))  # GAP -> (B, EDGE_FEAT)
+    hw, hb = nxt(), nxt()
+    if use_kernels:
+        logits = k_dense(feat, hw, hb, act=ref.ACT_NONE)
+    else:
+        logits = ref.dense(feat, hw, hb, act=ref.ACT_NONE)
+    return softmax(logits)
+
+
+def normalize_input(x):
+    """[0,1] pixels -> zero-centred. Baked into every graph so the Rust
+    runtime always feeds raw [0,1] crops."""
+    return (x - 0.5) * 2.0
+
+
+def softmax(logits):
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(z)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def edge_logits(params, x, *, use_kernels: bool):
+    """Same as edge_forward but returns raw logits (training graph)."""
+    x = normalize_input(x)
+    it = iter(params)
+    nxt = lambda: next(it)
+    sw, sb = nxt(), nxt()
+    conv = k_conv2d if use_kernels else ref.conv2d
+    dw = k_depthwise if use_kernels else ref.depthwise
+    h = conv(x, sw, sb, stride=2, act=ref.ACT_RELU6)
+    for stride, _ in EDGE_BLOCKS:
+        dww, dwb, pww, pwb = nxt(), nxt(), nxt(), nxt()
+        h = dw(h, dww, dwb, stride=stride, act=ref.ACT_RELU6)
+        b, hh, ww, ci = h.shape
+        if use_kernels:
+            h = k_pointwise(h, pww, pwb, act=ref.ACT_RELU6)
+        else:
+            h = ref.dense(h.reshape(b * hh * ww, ci), pww, pwb, act=ref.ACT_RELU6).reshape(b, hh, ww, -1)
+    feat = jnp.mean(h, axis=(1, 2))
+    hw, hb = nxt(), nxt()
+    if use_kernels:
+        return k_dense(feat, hw, hb, act=ref.ACT_NONE)
+    return ref.dense(feat, hw, hb, act=ref.ACT_NONE)
+
+
+# ---------------------------------------------------------------------------
+# CloudCNN: stem s2 + 3 residual stages + GAP + 8-class head. The paper's
+# "high-accuracy CNN" (ResNet-152 stand-in, treated as ground truth).
+# ---------------------------------------------------------------------------
+
+CLOUD_STAGES = [16, 32, 64]  # channels per stage; 1 residual block each
+CLOUD_HEAD_CLASSES = NUM_CLASSES
+
+
+def cloud_param_manifest():
+    man = [("stem_w", (3, 3, 3, CLOUD_STAGES[0])), ("stem_b", (CLOUD_STAGES[0],))]
+    cin = CLOUD_STAGES[0]
+    for s, ch in enumerate(CLOUD_STAGES):
+        if ch != cin:
+            man += [(f"st{s}_down_w", (3, 3, cin, ch)), (f"st{s}_down_b", (ch,))]
+            cin = ch
+        man += [
+            (f"st{s}_c1_w", (3, 3, ch, ch)), (f"st{s}_c1_b", (ch,)),
+            (f"st{s}_c2_w", (3, 3, ch, ch)), (f"st{s}_c2_b", (ch,)),
+        ]
+    man += [("head_w", (CLOUD_STAGES[-1], CLOUD_HEAD_CLASSES)), ("head_b", (CLOUD_HEAD_CLASSES,))]
+    return man
+
+
+def cloud_logits(params, x, *, use_kernels: bool):
+    """x (B,32,32,3) -> logits (B,8)."""
+    conv = k_conv2d if use_kernels else ref.conv2d
+    x = normalize_input(x)
+    it = iter(params)
+    nxt = lambda: next(it)
+    sw, sb = nxt(), nxt()
+    h = conv(x, sw, sb, stride=2, act=ref.ACT_RELU)  # 16x16
+    cin = CLOUD_STAGES[0]
+    for s, ch in enumerate(CLOUD_STAGES):
+        if ch != cin:
+            dw_, db_ = nxt(), nxt()
+            h = conv(h, dw_, db_, stride=2, act=ref.ACT_RELU)  # downsample
+            cin = ch
+        w1, b1, w2, b2 = nxt(), nxt(), nxt(), nxt()
+        r = conv(h, w1, b1, stride=1, act=ref.ACT_RELU)
+        r = conv(r, w2, b2, stride=1, act=ref.ACT_NONE)
+        h = jnp.maximum(h + r, 0.0)
+    feat = jnp.mean(h, axis=(1, 2))
+    hw, hb = nxt(), nxt()
+    if use_kernels:
+        return k_dense(feat, hw, hb, act=ref.ACT_NONE)
+    return ref.dense(feat, hw, hb, act=ref.ACT_NONE)
+
+
+def cloud_forward(params, x, *, use_kernels: bool):
+    return softmax(cloud_logits(params, x, use_kernels=use_kernels))
+
+
+# ---------------------------------------------------------------------------
+# Init + (de)serialisation
+# ---------------------------------------------------------------------------
+
+def init_params(manifest, seed: int):
+    """He-normal init for weights, zeros for biases; deterministic."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in manifest:
+        if name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else int(shape[0])
+            std = np.sqrt(2.0 / max(fan_in, 1))
+            out.append(jnp.asarray(rng.randn(*shape).astype(np.float32) * std))
+    return out
+
+
+def flatten_params(params) -> np.ndarray:
+    return np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+
+
+def unflatten_params(flat: np.ndarray, manifest):
+    out, off = [], 0
+    for _, shape in manifest:
+        n = int(np.prod(shape))
+        out.append(jnp.asarray(flat[off:off + n].reshape(shape)))
+        off += n
+    assert off == flat.size, f"param blob size mismatch: {off} != {flat.size}"
+    return out

@@ -1,0 +1,139 @@
+"""Training graphs: cross-entropy loss + gradient step.
+
+Two uses:
+  1. Build-time pretraining in ``aot.py`` (python-side loop, jitted).
+  2. The ``edge_train`` AOT artifact: a single step lowered to HLO that the
+     Rust coordinator calls during *online* fine-tuning (paper §IV-B).
+
+The artifact returns raw gradients (+ loss + batch accuracy) and the Rust
+side applies momentum-SGD itself. Keeping the optimizer in Rust is what
+makes the paper's three training schemes (Fig. 5) expressible with one HLO:
+"fine-tune" masks updates to the head group, "all fine-tune" updates
+everything, "no fine-tune" never calls it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+
+def ce_loss_and_acc(logits_fn, params, x, y, num_classes: int):
+    """Mean softmax cross-entropy + accuracy. y: int labels (B,)."""
+    logits = logits_fn(params, x, use_kernels=False)
+    logz = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * logz, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+def grad_step(logits_fn, num_classes: int):
+    """Returns f(params, x, y) -> (grads, loss, acc)."""
+    def loss_fn(params, x, y):
+        return ce_loss_and_acc(logits_fn, params, x, y, num_classes)
+
+    def step(params, x, y):
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, x, y)
+        return grads, loss, acc
+
+    return step
+
+
+def edge_grad_step(params, x, y):
+    """The lowered ``edge_train`` entry point: flat param list in, flat
+    gradient list out (same manifest order), plus loss and accuracy."""
+    grads, loss, acc = grad_step(model.edge_logits, model.EDGE_HEAD_CLASSES)(params, x, y)
+    return tuple(grads) + (loss, acc)
+
+
+# ---------------------------------------------------------------------------
+# Build-time training loop (python side only)
+# ---------------------------------------------------------------------------
+
+class Momentum:
+    def __init__(self, params, lr: float, mu: float = 0.9):
+        self.lr, self.mu = lr, mu
+        self.vel = [jnp.zeros_like(p) for p in params]
+
+    def update(self, params, grads, mask=None):
+        newp, newv = [], []
+        for i, (p, g, v) in enumerate(zip(params, grads, self.vel)):
+            if mask is not None and not mask[i]:
+                newp.append(p)
+                newv.append(v)
+                continue
+            v2 = self.mu * v - self.lr * g
+            newp.append(p + v2)
+            newv.append(v2)
+        self.vel = newv
+        return newp
+
+
+class Adam:
+    def __init__(self, params, lr: float, b1=0.9, b2=0.999, eps=1e-8):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.m = [jnp.zeros_like(p) for p in params]
+        self.v = [jnp.zeros_like(p) for p in params]
+        self.t = 0
+
+    def update(self, params, grads, mask=None):
+        self.t += 1
+        c1 = 1.0 - self.b1 ** self.t
+        c2 = 1.0 - self.b2 ** self.t
+        newp = []
+        for i, (p, g) in enumerate(zip(params, grads)):
+            if mask is not None and not mask[i]:
+                newp.append(p)
+                continue
+            self.m[i] = self.b1 * self.m[i] + (1 - self.b1) * g
+            self.v[i] = self.b2 * self.v[i] + (1 - self.b2) * g * g
+            mh = self.m[i] / c1
+            vh = self.v[i] / c2
+            newp.append(p - self.lr * mh / (jnp.sqrt(vh) + self.eps))
+        return newp
+
+
+def train_loop(logits_fn, num_classes, params, xs, ys, *, steps, batch, lr,
+               seed=0, mask=None, log_every=0, eval_data=None, opt="adam"):
+    """Jitted training loop (Adam by default) with warmup + cosine decay
+    over an in-memory dataset."""
+    step_fn = jax.jit(grad_step(logits_fn, num_classes))
+    opt = Adam(params, lr) if opt == "adam" else Momentum(params, lr)
+    rng = np.random.RandomState(seed)
+    n = xs.shape[0]
+    history = []
+    warmup = max(steps // 20, 1)
+    for it in range(steps):
+        if it < warmup:
+            opt.lr = lr * (it + 1) / warmup
+        else:
+            t = (it - warmup) / max(steps - warmup, 1)
+            opt.lr = lr * 0.5 * (1.0 + np.cos(np.pi * t))
+        idx = rng.randint(0, n, size=batch)
+        bx = jnp.asarray(xs[idx])
+        by = jnp.asarray(ys[idx])
+        grads, loss, acc = step_fn(params, bx, by)
+        params = opt.update(params, grads, mask=mask)
+        if log_every and (it % log_every == 0 or it == steps - 1):
+            ev = evaluate(logits_fn, num_classes, params, *eval_data) if eval_data else float(acc)
+            history.append((it, float(loss), ev))
+            print(f"  step {it:4d} loss {float(loss):.4f} acc {ev:.4f}")
+    return params, history
+
+
+def evaluate(logits_fn, num_classes, params, xs, ys, batch=256):
+    fwd = jax.jit(functools.partial(logits_fn, use_kernels=False))
+    correct, total = 0, 0
+    for off in range(0, xs.shape[0], batch):
+        bx = jnp.asarray(xs[off:off + batch])
+        by = ys[off:off + batch]
+        pred = np.asarray(jnp.argmax(fwd(params, bx), axis=-1))
+        correct += int((pred == by).sum())
+        total += by.shape[0]
+    return correct / max(total, 1)

@@ -1,0 +1,110 @@
+"""Artifact-bundle tests: manifest <-> file consistency (runs only when
+``make artifacts`` has produced a bundle)."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import data, model
+
+ARTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ARTDIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def read_blob(path):
+    with open(path, "rb") as f:
+        (n,) = struct.unpack("<Q", f.read(8))
+        arr = np.frombuffer(f.read(), np.float32)
+    assert arr.size == n, f"{path}: header says {n}, got {arr.size}"
+    return arr
+
+
+def test_all_artifact_files_exist(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = os.path.join(ARTDIR, art["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) == art["bytes"], name
+    for _, fn in manifest["weights"].items():
+        assert os.path.exists(os.path.join(ARTDIR, fn))
+
+
+def test_hlo_text_parses_as_hlo(manifest):
+    """Every artifact must be HLO text (ENTRY present), not a proto dump."""
+    for name, art in manifest["artifacts"].items():
+        with open(os.path.join(ARTDIR, art["file"])) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, name
+        assert "ENTRY" in head or "ENTRY" in open(os.path.join(ARTDIR, art["file"])).read(), name
+
+
+def test_weight_blob_sizes_match_manifests(manifest):
+    eman = model.edge_param_manifest()
+    cman = model.cloud_param_manifest()
+    esize = sum(int(np.prod(s)) for _, s in eman)
+    csize = sum(int(np.prod(s)) for _, s in cman)
+    assert read_blob(os.path.join(ARTDIR, "edge_pretrained.bin")).size == esize
+    assert read_blob(os.path.join(ARTDIR, "cloud_trained.bin")).size == csize
+
+
+def test_manifest_param_entries_match_model(manifest):
+    for entry, (name, shape) in zip(manifest["edge_params"], model.edge_param_manifest()):
+        assert entry["name"] == name and tuple(entry["shape"]) == tuple(shape)
+    for entry, (name, shape) in zip(manifest["cloud_params"], model.cloud_param_manifest()):
+        assert entry["name"] == name and tuple(entry["shape"]) == tuple(shape)
+
+
+def test_trained_accuracy_recorded(manifest):
+    """The bundle must carry usable weights: cloud near-oracle, edge in the
+    paper's 'lightweight CNN' band (clearly above chance, clearly below cloud)."""
+    acc = manifest["train_acc"]
+    assert acc["cloud"] >= 0.93, acc
+    assert 0.5 <= acc["edge8"] <= acc["cloud"], acc
+
+
+def test_golden_blob_shapes(manifest):
+    g = read_blob(os.path.join(ARTDIR, "golden_sprites.bin"))
+    assert g.size == data.NUM_CLASSES * 24 * 24 * 3
+    b = read_blob(os.path.join(ARTDIR, "golden_batch.bin"))
+    assert b.size == 8 * data.IMG * data.IMG * 3
+    ep = read_blob(os.path.join(ARTDIR, "golden_edge_probs.bin"))
+    cp = read_blob(os.path.join(ARTDIR, "golden_cloud_probs.bin"))
+    assert ep.size == 8 * 2 and cp.size == 8 * data.NUM_CLASSES
+    np.testing.assert_allclose(ep.reshape(8, 2).sum(-1), 1.0, atol=1e-4)
+    np.testing.assert_allclose(cp.reshape(8, 8).sum(-1), 1.0, atol=1e-4)
+
+
+def test_golden_probs_reproducible(manifest):
+    """Re-running the forward pass on stored weights reproduces the golden
+    probabilities (pins weight serialisation + model numerics)."""
+    import jax.numpy as jnp
+    eman = model.edge_param_manifest()
+    flat = read_blob(os.path.join(ARTDIR, "edge_pretrained.bin"))
+    params = model.unflatten_params(flat, eman)
+    batch = read_blob(os.path.join(ARTDIR, "golden_batch.bin")).reshape(8, data.IMG, data.IMG, 3)
+    probs = np.asarray(model.edge_forward(params, jnp.asarray(batch), use_kernels=False))
+    want = read_blob(os.path.join(ARTDIR, "golden_edge_probs.bin")).reshape(8, 2)
+    np.testing.assert_allclose(probs, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cloud_is_near_oracle_on_fresh_data(manifest):
+    """The deployed cloud weights must behave as the ground-truth CNN."""
+    import jax.numpy as jnp
+    cman = model.cloud_param_manifest()
+    flat = read_blob(os.path.join(ARTDIR, "cloud_trained.bin"))
+    params = model.unflatten_params(flat, cman)
+    xs, ys = data.make_dataset(256, seed=777)
+    probs = np.asarray(model.cloud_forward(params, jnp.asarray(xs), use_kernels=False))
+    acc = (probs.argmax(-1) == ys).mean()
+    assert acc >= 0.9, f"cloud acc {acc} on fresh data"

@@ -1,0 +1,136 @@
+"""Synthetic corpus spec tests: determinism, hash pinning, resize, sampling.
+
+The pinned hash/noise values here are duplicated in
+``rust/src/video/sprite.rs`` unit tests — if either side drifts, both test
+suites fail, which is what keeps the training distribution (python) equal to
+the serving distribution (rust).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def test_hash32_pinned_values():
+    """Cross-language pins: same constants asserted in rust/src/video/sprite.rs."""
+    xs = np.array([0, 1, 2, 12345, 0xFFFFFFFF], np.uint32)
+    got = data._hash32(xs)
+    # reference values computed once from the spec; pinned in both languages
+    want = np.array([0, 1753845952, 3507691905, 2435775735, 1734902346], np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pixel_noise_range_and_determinism():
+    ys, xs = np.meshgrid(np.arange(16, dtype=np.uint32), np.arange(16, dtype=np.uint32), indexing="ij")
+    a = data.pixel_noise(xs, ys, 42)
+    b = data.pixel_noise(xs, ys, 42)
+    c = data.pixel_noise(xs, ys, 43)
+    np.testing.assert_array_equal(a, b)
+    assert np.abs(a).max() <= 1.0
+    assert not np.array_equal(a, c)
+    # noise is not degenerate
+    assert a.std() > 0.3
+
+
+@settings(**SETTINGS)
+@given(cls=st.integers(0, data.NUM_CLASSES - 1), size=st.integers(10, 40),
+       seed=st.integers(0, 2**31 - 1))
+def test_render_sprite_shape_range(cls, size, seed):
+    p = data.SpriteParams(cls=cls, size=size, base=(0.8, 0.2, 0.2),
+                          accent=(0.2, 0.2, 0.8), bg=(0.5, 0.5, 0.5),
+                          noise=0.1, seed=seed)
+    img = data.render_sprite(p)
+    assert img.shape == (size, size, 3)
+    assert img.dtype == np.float32
+    assert img.min() >= 0.0 and img.max() <= 1.0
+
+
+def test_render_sprite_deterministic():
+    p = data.SpriteParams(cls=3, size=24, base=(0.7, 0.3, 0.1),
+                          accent=(0.1, 0.6, 0.7), bg=(0.45, 0.45, 0.45),
+                          rot=0.2, jx=0.05, jy=-0.03, noise=0.08, seed=99)
+    a, b = data.render_sprite(p), data.render_sprite(p)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_render_sprite_classes_differ():
+    """Distinct classes must render visibly distinct sprites."""
+    imgs = []
+    for cls in range(data.NUM_CLASSES):
+        p = data.SpriteParams(cls=cls, size=24, base=(0.8, 0.2, 0.2),
+                              accent=(0.2, 0.2, 0.8), bg=(0.5, 0.5, 0.5))
+        imgs.append(data.render_sprite(p))
+    for i in range(len(imgs)):
+        for j in range(i + 1, len(imgs)):
+            assert np.abs(imgs[i] - imgs[j]).mean() > 0.005, (i, j)
+
+
+def test_sprite_differs_from_background():
+    p = data.SpriteParams(cls=0, size=24, base=(0.9, 0.1, 0.1),
+                          accent=(0.1, 0.1, 0.9), bg=(0.5, 0.5, 0.5))
+    img = data.render_sprite(p)
+    bg = np.full_like(img, 0.5)
+    frac = (np.abs(img - bg).max(axis=-1) > 0.05).mean()
+    assert 0.1 < frac < 0.9  # sprite covers a sane fraction of the canvas
+
+
+@settings(**SETTINGS)
+@given(ih=st.integers(4, 40), iw=st.integers(4, 40), seed=st.integers(0, 2**31 - 1))
+def test_bilinear_resize_identity(ih, iw, seed):
+    rng = np.random.RandomState(seed)
+    img = rng.rand(ih, iw, 3).astype(np.float32)
+    out = data.bilinear_resize(img, ih, iw)
+    np.testing.assert_allclose(out, img, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(s=st.integers(4, 40), seed=st.integers(0, 2**31 - 1))
+def test_bilinear_resize_constant_preserved(s, seed):
+    rng = np.random.RandomState(seed)
+    c = rng.rand(3).astype(np.float32)
+    img = np.broadcast_to(c, (s, s, 3)).astype(np.float32)
+    out = data.bilinear_resize(img, 32, 32)
+    np.testing.assert_allclose(out, np.broadcast_to(c, (32, 32, 3)), atol=1e-6)
+
+
+def test_bilinear_resize_range_bounded():
+    rng = np.random.RandomState(0)
+    img = rng.rand(17, 23, 3).astype(np.float32)
+    out = data.bilinear_resize(img, 32, 32)
+    assert out.min() >= img.min() - 1e-6 and out.max() <= img.max() + 1e-6
+
+
+def test_make_dataset_labels_and_shapes():
+    xs, ys = data.make_dataset(64, seed=7)
+    assert xs.shape == (64, data.IMG, data.IMG, 3)
+    assert ys.shape == (64,)
+    assert ys.min() >= 0 and ys.max() < data.NUM_CLASSES
+    assert xs.dtype == np.float32
+
+
+def test_make_dataset_class_weights():
+    w = np.zeros(data.NUM_CLASSES)
+    w[2] = 1.0
+    _, ys = data.make_dataset(32, seed=8, class_weights=w)
+    assert (ys == 2).all()
+
+
+def test_make_binary_dataset_proportional_negatives():
+    """Paper §IV-B: negatives sampled proportionally to the cluster profile."""
+    profile = np.zeros(data.NUM_CLASSES)
+    profile[data.CLS_MOPED] = 0.5   # query class: must be excluded from negatives
+    profile[data.CLS_CAR] = 0.5
+    xs, ys = data.make_binary_dataset(200, data.CLS_MOPED, seed=9, profile=profile,
+                                      pos_frac=0.5)
+    assert set(np.unique(ys)).issubset({0, 1})
+    assert 0.3 < ys.mean() < 0.7
+
+
+def test_make_binary_dataset_deterministic():
+    a = data.make_binary_dataset(16, 3, seed=10)
+    b = data.make_binary_dataset(16, 3, seed=10)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])

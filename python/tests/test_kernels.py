@@ -1,0 +1,164 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/activations; assert_allclose against ref.
+This is the core correctness signal for the compute layer: the inference
+artifacts lower through these kernels, the training graph through the refs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d, depthwise, dense, pointwise, framediff
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    ci=st.integers(1, 6),
+    co=st.sampled_from([2, 4, 8]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from([ref.ACT_NONE, ref.ACT_RELU, ref.ACT_RELU6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, h, w, ci, co, k, stride, act, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, b, h, w, ci)
+    wt = _rand(rng, k, k, ci, co)
+    bias = _rand(rng, co)
+    got = conv2d(x, wt, bias, stride=stride, act=act)
+    want = ref.conv2d(x, wt, bias, stride=stride, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 12),
+    c=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]),
+    act=st.sampled_from([ref.ACT_NONE, ref.ACT_RELU, ref.ACT_RELU6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_depthwise_matches_ref(b, h, w, c, stride, act, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, b, h, w, c)
+    wt = _rand(rng, 3, 3, c)
+    bias = _rand(rng, c)
+    got = depthwise(x, wt, bias, stride=stride, act=act)
+    want = ref.depthwise(x, wt, bias, stride=stride, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 16),
+    k=st.integers(1, 32),
+    nt=st.sampled_from([(4, 1), (4, 2), (8, 4), (12, 3), (16, 16)]),
+    act=st.sampled_from([ref.ACT_NONE, ref.ACT_RELU, ref.ACT_RELU6]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(m, k, nt, act, seed):
+    n, tile = nt
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, m, k)
+    wt = _rand(rng, k, n)
+    bias = _rand(rng, n)
+    got = dense(x, wt, bias, act=act, n_tile=tile)
+    want = ref.dense(x, wt, bias, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(6, 24),
+    w=st.integers(6, 24),
+    ci=st.integers(1, 8),
+    co=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pointwise_matches_ref(b, h, w, ci, co, seed):
+    rng = np.random.RandomState(seed)
+    x = _rand(rng, b, h, w, ci)
+    wt = _rand(rng, ci, co)
+    bias = _rand(rng, co)
+    got = pointwise(x, wt, bias, act=ref.ACT_RELU6)
+    flat = ref.dense(x.reshape(b * h * w, ci), wt, bias, act=ref.ACT_RELU6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(flat).reshape(b, h, w, co),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 32),
+    w=st.integers(4, 32),
+    thr=st.floats(0.02, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_framediff_matches_ref(b, h, w, thr, seed):
+    rng = np.random.RandomState(seed)
+    frames = [jnp.asarray(rng.rand(b, h, w, 3).astype(np.float32)) for _ in range(3)]
+    got = framediff(*frames, threshold=thr)
+    want = ref.framediff(*frames, threshold=thr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_framediff_static_scene_is_empty():
+    """No motion => empty mask, regardless of scene content."""
+    rng = np.random.RandomState(0)
+    f = jnp.asarray(rng.rand(1, 16, 16, 3).astype(np.float32))
+    mask = framediff(f, f, f, threshold=0.05)
+    assert float(jnp.sum(mask)) == 0.0
+
+
+def test_framediff_detects_moving_block():
+    """A block moving across an otherwise static scene is detected at its
+    current location (conjunction of the two difference images)."""
+    base = np.full((1, 24, 24, 3), 0.5, np.float32)
+    prev, cur, nxt = base.copy(), base.copy(), base.copy()
+    prev[0, 4:10, 2:8] = 1.0
+    cur[0, 4:10, 8:14] = 1.0
+    nxt[0, 4:10, 14:20] = 1.0
+    mask = np.asarray(framediff(jnp.asarray(prev), jnp.asarray(cur), jnp.asarray(nxt),
+                                threshold=0.1))
+    # mask must fire inside the current block position...
+    assert mask[0, 6:8, 10:12].min() == 1.0
+    # ...and be silent far away from all three positions
+    assert mask[0, 18:, :].max() == 0.0
+
+
+def test_framediff_binary_output():
+    rng = np.random.RandomState(1)
+    frames = [jnp.asarray(rng.rand(2, 12, 12, 3).astype(np.float32)) for _ in range(3)]
+    mask = np.asarray(framediff(*frames, threshold=0.2))
+    assert set(np.unique(mask)).issubset({0.0, 1.0})
+
+
+def test_conv2d_tiled_equals_untiled():
+    rng = np.random.RandomState(3)
+    x = _rand(rng, 2, 8, 8, 4)
+    wt = _rand(rng, 3, 3, 4, 8)
+    bias = _rand(rng, 8)
+    a = conv2d(x, wt, bias, stride=1, cout_tile=4)
+    b = conv2d(x, wt, bias, stride=1, cout_tile=0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_dense_rejects_bad_tile():
+    rng = np.random.RandomState(4)
+    with pytest.raises(AssertionError):
+        dense(_rand(rng, 2, 4), _rand(rng, 4, 6), _rand(rng, 6), n_tile=4)

@@ -1,0 +1,115 @@
+"""L2 model tests: shapes, kernel/ref path agreement, (de)serialisation."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def edge_params():
+    return model.init_params(model.edge_param_manifest(), seed=1)
+
+
+@pytest.fixture(scope="module")
+def cloud_params():
+    return model.init_params(model.cloud_param_manifest(), seed=2)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    xs, _ = data.make_dataset(4, seed=5)
+    return jnp.asarray(xs)
+
+
+def test_edge_manifest_consistency(edge_params):
+    man = model.edge_param_manifest()
+    assert len(man) == len(edge_params)
+    for (name, shape), p in zip(man, edge_params):
+        assert tuple(p.shape) == tuple(shape), name
+
+
+def test_cloud_manifest_consistency(cloud_params):
+    man = model.cloud_param_manifest()
+    assert len(man) == len(cloud_params)
+    for (name, shape), p in zip(man, cloud_params):
+        assert tuple(p.shape) == tuple(shape), name
+
+
+def test_edge_head_group_is_suffix():
+    """Head group entries must be the manifest tail (rust indexes by suffix)."""
+    man = model.edge_param_manifest()
+    k = model.edge_head_param_count()
+    tail = [n for n, _ in man[-k:]]
+    assert tail == ["ds3_dw_w", "ds3_dw_b", "ds3_pw_w", "ds3_pw_b", "head_w", "head_b"]
+
+
+def test_edge_forward_probs(edge_params, batch):
+    probs = model.edge_forward(edge_params, batch, use_kernels=False)
+    assert probs.shape == (4, 2)
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, atol=1e-5)
+    assert (np.asarray(probs) >= 0).all()
+
+
+def test_cloud_forward_probs(cloud_params, batch):
+    probs = model.cloud_forward(cloud_params, batch, use_kernels=False)
+    assert probs.shape == (4, data.NUM_CLASSES)
+    np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, atol=1e-5)
+
+
+def test_edge_kernel_path_matches_ref(edge_params, batch):
+    a = model.edge_forward(edge_params, batch, use_kernels=False)
+    b = model.edge_forward(edge_params, batch, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_cloud_kernel_path_matches_ref(cloud_params, batch):
+    a = model.cloud_forward(cloud_params, batch, use_kernels=False)
+    b = model.cloud_forward(cloud_params, batch, use_kernels=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_edge_logits_match_forward(edge_params, batch):
+    logits = model.edge_logits(edge_params, batch, use_kernels=False)
+    probs = model.edge_forward(edge_params, batch, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(model.softmax(logits)), np.asarray(probs),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flatten_unflatten_roundtrip(edge_params):
+    man = model.edge_param_manifest()
+    flat = model.flatten_params(edge_params)
+    back = model.unflatten_params(flat, man)
+    for p, q in zip(edge_params, back):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_unflatten_rejects_wrong_size():
+    man = model.edge_param_manifest()
+    n = sum(int(np.prod(s)) for _, s in man)
+    with pytest.raises(AssertionError):
+        model.unflatten_params(np.zeros(n + 1, np.float32), man)
+
+
+def test_init_params_deterministic():
+    a = model.init_params(model.edge_param_manifest(), seed=9)
+    b = model.init_params(model.edge_param_manifest(), seed=9)
+    for p, q in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_normalize_input_centred():
+    x = jnp.asarray(np.array([0.0, 0.5, 1.0], np.float32))
+    np.testing.assert_allclose(np.asarray(model.normalize_input(x)), [-1.0, 0.0, 1.0])
+
+
+def test_batch_independence(edge_params):
+    """Row i of a batched forward equals a singleton forward (no cross-batch
+    leakage through the pallas grid)."""
+    xs, _ = data.make_dataset(3, seed=6)
+    full = model.edge_forward(edge_params, jnp.asarray(xs), use_kernels=True)
+    for i in range(3):
+        one = model.edge_forward(edge_params, jnp.asarray(xs[i:i + 1]), use_kernels=True)
+        np.testing.assert_allclose(np.asarray(full[i]), np.asarray(one[0]),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,96 @@
+//! Regenerates the data behind Figs. 6, 7 and 8: per-scheme latency PDFs
+//! (sub-figure (a)) and per-frame latency series (sub-figures (b)-(d),
+//! grouped per edge for the multi-edge settings). Output is CSV blocks,
+//! ready to plot.
+//!
+//!     cargo bench --bench bench_figures
+//!
+//! Env knobs: BENCH_DURATION (default 240), FIG_CSV_DIR (write CSVs there
+//! in addition to stdout summaries).
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::harness::{ComputeMode, Harness, SchemeResult};
+use surveiledge::metrics::render_csv;
+
+fn duration() -> f64 {
+    std::env::var("BENCH_DURATION").ok().and_then(|v| v.parse().ok()).unwrap_or(240.0)
+}
+
+fn synth() -> ComputeMode {
+    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+}
+
+fn run(cfg: &Config, scheme: Scheme) -> anyhow::Result<SchemeResult> {
+    let mut h = Harness::new(cfg.clone(), synth());
+    h.run(scheme)
+}
+
+fn dump(name: &str, csv: &str) {
+    if let Ok(dir) = std::env::var("FIG_CSV_DIR") {
+        let _ = std::fs::create_dir_all(&dir);
+        let _ = std::fs::write(format!("{dir}/{name}.csv"), csv);
+        println!("  wrote {dir}/{name}.csv");
+    }
+}
+
+fn figure(fig: &str, cfg: Config, edges: &[u32]) -> anyhow::Result<()> {
+    println!("## Fig. {fig} — latency PDFs + per-frame series\n");
+    for scheme in Scheme::all() {
+        let r = run(&cfg, scheme)?;
+        // (a): PDF of per-frame latency.
+        let (centres, dens) = r.latency.pdf(40);
+        let csv = render_csv(&["latency_s", "density"], &[&centres, &dens]);
+        println!(
+            "Fig.{fig}(a) {:20} mean={:7.2}s std={:6.2}s p99={:7.2}s  (PDF: {} bins)",
+            r.row.scheme,
+            r.latency.mean(),
+            r.latency.std(),
+            r.latency.percentile(0.99),
+            centres.len()
+        );
+        dump(&format!("fig{fig}_pdf_{}", r.row.scheme.replace(['(', ')'], "")), &csv);
+
+        // (b)-(d): per-frame series, per home edge.
+        for &edge in edges {
+            let times: Vec<f64> = r
+                .per_frame
+                .iter()
+                .filter(|(_, _, e)| *e == edge)
+                .map(|(t, _, _)| *t)
+                .collect();
+            let lats: Vec<f64> = r
+                .per_frame
+                .iter()
+                .filter(|(_, _, e)| *e == edge)
+                .map(|(_, l, _)| *l)
+                .collect();
+            if lats.is_empty() {
+                continue;
+            }
+            let mean = lats.iter().sum::<f64>() / lats.len() as f64;
+            let max = lats.iter().cloned().fold(0.0, f64::max);
+            println!(
+                "         edge{edge}: {:5} frames, mean {:7.2}s, max {:7.2}s",
+                lats.len(),
+                mean,
+                max
+            );
+            let csv = render_csv(&["t", "latency_s"], &[&times, &lats]);
+            dump(
+                &format!("fig{fig}_series_{}_edge{edge}", r.row.scheme.replace(['(', ')'], "")),
+                &csv,
+            );
+        }
+    }
+    println!();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# SurveilEdge — Figs. 6-8 reproduction\n");
+    let d = duration();
+    figure("6", Config { duration: d, ..Config::single_edge() }, &[1])?;
+    figure("7", Config { duration: d, ..Config::homogeneous() }, &[1, 2, 3])?;
+    figure("8", Config { duration: d, ..Config::heterogeneous() }, &[1, 2, 3])?;
+    Ok(())
+}

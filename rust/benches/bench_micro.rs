@@ -1,0 +1,154 @@
+//! Micro-benchmarks of the hot-path components (benchkit harness):
+//! allocator decision, threshold update, estimators, detection stages,
+//! bus publish, paramdb put, renderer — plus the PJRT inference calls
+//! when the artifact bundle is present. Drives the §Perf pass.
+//!
+//!     cargo bench --bench bench_micro
+//!
+//! Env: BENCH_TARGET_SECS per benchmark (default 1.0).
+
+use surveiledge::benchkit::Bench;
+use surveiledge::bus::{Broker, Message, QoS};
+use surveiledge::detect::framediff::framediff_native;
+use surveiledge::detect::{detect, DetectConfig};
+use surveiledge::estimator::{adaptive_mean_update, fit_lognormal3, LatencyEstimator};
+use surveiledge::paramdb::{ParamDb, Value};
+use surveiledge::sched::{allocate, NodeLoad, ThresholdConfig, ThresholdController};
+use surveiledge::testkit::Rng;
+use surveiledge::types::{ClassId, Image, NodeId};
+use surveiledge::video::sprite::{render_sprite, SpriteParams};
+use surveiledge::video::{standard_deployment, Camera};
+
+fn rand_image(rng: &mut Rng, h: usize, w: usize) -> Image {
+    let mut img = Image::new(h, w);
+    for v in img.data.iter_mut() {
+        *v = rng.f32();
+    }
+    img
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(42);
+
+    Bench::header("L3 hot-path micro-benchmarks");
+
+    // --- scheduler -------------------------------------------------------
+    let loads: Vec<NodeLoad> = (0..4)
+        .map(|i| NodeLoad {
+            node: NodeId(i),
+            queue: (i * 3) as usize,
+            t_infer: 0.1 + i as f64 * 0.05,
+            penalty: if i == 0 { 0.4 } else { 0.0 },
+        })
+        .collect();
+    bench.run("sched::allocate (4 nodes)", || allocate(&loads));
+
+    let mut ctl = ThresholdController::new(0.8, ThresholdConfig::default());
+    let mut q = 0usize;
+    bench.run("sched::threshold_update", || {
+        q = (q + 1) % 20;
+        ctl.update(q, 0.25);
+        ctl.alpha
+    });
+
+    // --- estimators --------------------------------------------------------
+    bench.run("estimator::eq17_update", || adaptive_mean_update(0.31, 0.42));
+
+    let mut est = LatencyEstimator::new(0.3);
+    let mut x = 0.25f64;
+    bench.run("estimator::combined_observe", || {
+        x = 0.2 + (x * 7.13) % 0.4;
+        est.observe(x);
+        est.estimate()
+    });
+
+    let samples: Vec<f64> = {
+        let mut r = Rng::new(9);
+        (0..256).map(|_| r.lognormal3(-1.0, 0.4, 0.1)).collect()
+    };
+    bench.run("estimator::lognormal3_fit (n=256)", || fit_lognormal3(&samples));
+
+    // --- detection ----------------------------------------------------------
+    let prev = rand_image(&mut rng, 96, 128);
+    let cur = rand_image(&mut rng, 96, 128);
+    let nxt = rand_image(&mut rng, 96, 128);
+    bench.run("detect::framediff_native 96x128", || framediff_native(&prev, &cur, &nxt, 0.1));
+
+    let mut cam = standard_deployment(1, 96, 128, 5).remove(0);
+    let f0 = cam.frame_at(30.0).image;
+    let f1 = cam.frame_at(31.0).image;
+    let f2 = cam.frame_at(32.0).image;
+    let dcfg = DetectConfig::default();
+    bench.run("detect::full_pipeline 96x128", || detect(&f0, &f1, &f2, &dcfg));
+
+    // --- substrate ------------------------------------------------------------
+    let broker = Broker::new();
+    let (_rx, _id) = broker.subscribe("bench/#", 1 << 14);
+    let payload = vec![0u8; 256];
+    bench.run("bus::publish qos0 (1 sub, 256B)", || {
+        broker.publish(Message::new("bench/x", payload.clone()), QoS::AtMostOnce)
+    });
+
+    let db = ParamDb::new();
+    bench.run("paramdb::put", || db.put("t/1", Value::F64(0.25)));
+    bench.run("paramdb::get", || db.get_f64("t/1"));
+
+    // --- renderer / video -------------------------------------------------------
+    let sprite_params = SpriteParams {
+        cls: ClassId::Moped,
+        size: 24,
+        base: [0.8, 0.2, 0.2],
+        accent: [0.2, 0.3, 0.8],
+        bg: [0.45, 0.47, 0.44],
+        rot: 0.1,
+        jx: 0.0,
+        jy: 0.0,
+        noise: 0.08,
+        seed: 7,
+    };
+    bench.run("sprite::render 24x24", || render_sprite(&sprite_params));
+
+    let mut cam2 = Camera::new(
+        standard_deployment(1, 96, 128, 6).remove(0).spec,
+        96,
+        128,
+    );
+    let mut t = 0.0;
+    bench.run("video::frame_at 96x128", || {
+        t += 1.0;
+        cam2.frame_at(t).seq
+    });
+
+    let crop = rand_image(&mut rng, 24, 24);
+    bench.run("image::resize 24->32", || crop.resize(32, 32));
+
+    // --- PJRT (artifact-dependent) ----------------------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Bench::header("PJRT inference (AOT artifacts)");
+        let engine = surveiledge::runtime::Engine::new(std::path::Path::new("artifacts"))?;
+        let edge1 = engine.edge_model(1, &engine.edge_pretrained()?)?;
+        let edge8 = engine.edge_model(8, &engine.edge_pretrained()?)?;
+        let cloud1 = engine.cloud_model(1, &engine.cloud_trained()?)?;
+        let fd = engine.framediff()?;
+        let crop1 = vec![0.5f32; 32 * 32 * 3];
+        let crop8 = vec![0.5f32; 8 * 32 * 32 * 3];
+        bench.run("pjrt::edge_infer b1", || edge1.infer(&crop1).unwrap().len());
+        bench.run("pjrt::edge_infer b8", || edge8.infer(&crop8).unwrap().len());
+        bench.run("pjrt::cloud_infer b1", || cloud1.infer(&crop1).unwrap().len());
+        let fh = engine.manifest.frame_h;
+        let fw = engine.manifest.frame_w;
+        let fr = vec![0.4f32; fh * fw * 3];
+        bench.run("pjrt::framediff_hlo", || fd.mask(&fr, &fr, &fr).unwrap().len());
+        // Ablation companion: native vs HLO dense stage at the same size.
+        let p2 = Image { h: fh, w: fw, data: fr.clone() };
+        bench.run("detect::framediff_native (same size)", || {
+            framediff_native(&p2, &p2, &p2, 0.1)
+        });
+    } else {
+        println!("\n(artifacts/ not built; skipping PJRT micro-benchmarks)");
+    }
+
+    println!("\n{} benchmarks completed", bench.results().len());
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Regenerates the paper's Tables II, III and IV: the four query schemes
+//! on the single / homogeneous / heterogeneous settings.
+//!
+//!     cargo bench --bench bench_tables
+//!
+//! Env knobs: BENCH_DURATION (stream seconds, default 240),
+//! BENCH_PJRT=1 to route classifications through the AOT artifacts.
+
+use surveiledge::config::Config;
+use surveiledge::harness::{run_all_schemes, ComputeMode, PjrtCtx};
+use surveiledge::metrics::render_table;
+
+fn duration() -> f64 {
+    std::env::var("BENCH_DURATION").ok().and_then(|v| v.parse().ok()).unwrap_or(240.0)
+}
+
+fn use_pjrt() -> bool {
+    std::env::var("BENCH_PJRT").map(|v| v == "1").unwrap_or(false)
+}
+
+fn run_setting(title: &str, mut cfg: Config) -> anyhow::Result<()> {
+    cfg.duration = duration();
+    let pjrt = use_pjrt();
+    let t0 = std::time::Instant::now();
+    let results = run_all_schemes(&cfg, &mut || {
+        Ok(if pjrt {
+            ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(&cfg, 30)?))
+        } else {
+            ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+        })
+    })?;
+    let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
+    println!("{}", render_table(title, &rows));
+    for r in &results {
+        println!(
+            "  {:20} tasks={} uploads={} p50={:.2}s p99={:.2}s std={:.2}s",
+            r.row.scheme,
+            r.tasks,
+            r.uploads,
+            r.latency.percentile(0.5),
+            r.latency.percentile(0.99),
+            r.latency.std()
+        );
+    }
+    // Paper headline ratios for this setting.
+    let find = |name: &str| rows.iter().find(|r| r.scheme == name).unwrap();
+    let se = find("SurveilEdge");
+    let eo = find("edge-only");
+    let co = find("cloud-only");
+    println!(
+        "  headline: vs cloud-only {:.1}x faster, {:.1}x less bandwidth; vs edge-only {:.1}x faster, +{:.1}% accuracy",
+        co.avg_latency / se.avg_latency.max(1e-9),
+        co.bandwidth_mb / se.bandwidth_mb.max(1e-9),
+        eo.avg_latency / se.avg_latency.max(1e-9),
+        (se.accuracy - eo.accuracy) * 100.0
+    );
+    println!(
+        "  ({} compute, {:.1}s wall)\n",
+        if pjrt { "PJRT" } else { "synthetic" },
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# SurveilEdge — Tables II-IV reproduction\n");
+    run_setting("Table II — single edge and cloud", Config::single_edge())?;
+    run_setting("Table III — homogeneous edges and cloud", Config::homogeneous())?;
+    run_setting("Table IV — heterogeneous edges and cloud", Config::heterogeneous())?;
+    Ok(())
+}

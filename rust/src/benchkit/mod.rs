@@ -1,0 +1,169 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets are `harness = false` binaries that call
+//! [`Bench::run`] for micro benches (warmup + timed iterations,
+//! mean/p50/p99) and print paper-style tables for the macro experiments.
+//! Output is markdown so `EXPERIMENTS.md` can embed it directly.
+
+use std::time::Instant;
+
+/// Result of one micro-benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "| {} | {} | {} | {} | {} | {} |",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Micro-benchmark runner.
+pub struct Bench {
+    /// Target wall time per benchmark (seconds).
+    pub target_time: f64,
+    /// Warmup time (seconds).
+    pub warmup_time: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // Env overrides so CI can shrink bench time.
+        let target_time = std::env::var("BENCH_TARGET_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Bench { target_time, warmup_time: 0.2, max_iters: 1_000_000, results: Vec::new() }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one unit of work and return
+    /// a value (returned values are passed through `std::hint::black_box`).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + per-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed().as_secs_f64() < self.warmup_time {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters.max(1) as f64;
+        let iters = ((self.target_time / per_iter.max(1e-9)) as usize)
+            .clamp(10, self.max_iters);
+
+        let mut samples_ns = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let pct = |q: f64| samples_ns[((q * (samples_ns.len() - 1) as f64) as usize).min(samples_ns.len() - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.5),
+            p99_ns: pct(0.99),
+            min_ns: samples_ns[0],
+        };
+        println!("{}", result.row());
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Print the table header (call before the first `run`).
+    pub fn header(title: &str) {
+        println!("\n## {title}\n");
+        println!("| benchmark | iters | mean | p50 | p99 | min |");
+        println!("|-----------|-------|------|-----|-----|-----|");
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200 s");
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench { target_time: 0.05, warmup_time: 0.01, max_iters: 100_000, results: vec![] };
+        let r = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+        assert!(r.min_ns <= r.p50_ns);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn row_renders() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 100,
+            mean_ns: 1000.0,
+            p50_ns: 900.0,
+            p99_ns: 2000.0,
+            min_ns: 800.0,
+        };
+        let row = r.row();
+        assert!(row.contains("| x |"));
+        assert!(row.contains("1.00 µs"));
+    }
+}

@@ -1,0 +1,359 @@
+//! MQTT-like publish/subscribe message bus (paper: Mosquitto/MQTT is the
+//! transport between cameras, edges and the Cloud).
+//!
+//! In-process broker with MQTT topic semantics:
+//! * topic levels separated by `/`,
+//! * `+` matches exactly one level, `#` matches the remaining levels,
+//! * retained messages are delivered to late subscribers,
+//! * QoS 0 (fire and forget, may drop on a full queue) and QoS 1
+//!   (blocking enqueue — at-least-once within the process).
+//!
+//! Nodes exchange three kinds of traffic over it (same topics the paper's
+//! prototype uses conceptually): crop uploads (`task/...`), verdicts
+//! (`verdict/...`), and parameter-DB replication (`paramdb/...`).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+/// A published message. Payloads are opaque bytes; the `meta` map carries
+/// small typed fields so hot-path messages avoid serialisation.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub topic: String,
+    pub payload: Arc<Vec<u8>>,
+    pub retained: bool,
+}
+
+impl Message {
+    pub fn new(topic: impl Into<String>, payload: Vec<u8>) -> Message {
+        Message { topic: topic.into(), payload: Arc::new(payload), retained: false }
+    }
+
+    pub fn retained(topic: impl Into<String>, payload: Vec<u8>) -> Message {
+        Message { topic: topic.into(), payload: Arc::new(payload), retained: true }
+    }
+}
+
+/// Delivery guarantee for a publish call.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum QoS {
+    /// Drop if a subscriber queue is full.
+    AtMostOnce,
+    /// Block until every matching subscriber queue accepts the message.
+    AtLeastOnce,
+}
+
+/// Does `filter` (with MQTT wildcards) match `topic`?
+pub fn topic_matches(filter: &str, topic: &str) -> bool {
+    let mut f = filter.split('/');
+    let mut t = topic.split('/');
+    loop {
+        match (f.next(), t.next()) {
+            (Some("#"), _) => return true,
+            (Some("+"), Some(_)) => continue,
+            (Some(fl), Some(tl)) if fl == tl => continue,
+            (None, None) => return true,
+            _ => return false,
+        }
+    }
+}
+
+struct Subscription {
+    filter: String,
+    sender: SyncSender<Message>,
+    id: u64,
+}
+
+struct BrokerInner {
+    subs: Mutex<Vec<Subscription>>,
+    retained: Mutex<HashMap<String, Message>>,
+    next_id: Mutex<u64>,
+    stats: Mutex<BusStats>,
+}
+
+/// Broker throughput counters (observability + bandwidth accounting).
+#[derive(Clone, Copy, Default, Debug)]
+pub struct BusStats {
+    pub published: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub bytes: u64,
+}
+
+/// The in-process broker. Cheap to clone; all clones share state.
+#[derive(Clone)]
+pub struct Broker {
+    inner: Arc<BrokerInner>,
+}
+
+impl Default for Broker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Broker {
+    pub fn new() -> Broker {
+        Broker {
+            inner: Arc::new(BrokerInner {
+                subs: Mutex::new(Vec::new()),
+                retained: Mutex::new(HashMap::new()),
+                next_id: Mutex::new(1),
+                stats: Mutex::new(BusStats::default()),
+            }),
+        }
+    }
+
+    /// Subscribe with a bounded queue; returns the receiving end and the
+    /// subscription id (for unsubscribe). Retained messages matching the
+    /// filter are delivered immediately.
+    pub fn subscribe(&self, filter: &str, capacity: usize) -> (Receiver<Message>, u64) {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        let id = {
+            let mut next = self.inner.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        // Deliver retained state first.
+        {
+            let retained = self.inner.retained.lock().unwrap();
+            for (topic, msg) in retained.iter() {
+                if topic_matches(filter, topic) {
+                    let _ = tx.try_send(msg.clone());
+                }
+            }
+        }
+        self.inner.subs.lock().unwrap().push(Subscription {
+            filter: filter.to_string(),
+            sender: tx,
+            id,
+        });
+        (rx, id)
+    }
+
+    pub fn unsubscribe(&self, id: u64) {
+        self.inner.subs.lock().unwrap().retain(|s| s.id != id);
+    }
+
+    /// Publish; returns the number of subscribers the message reached.
+    pub fn publish(&self, msg: Message, qos: QoS) -> usize {
+        if msg.retained {
+            self.inner
+                .retained
+                .lock()
+                .unwrap()
+                .insert(msg.topic.clone(), msg.clone());
+        }
+        let mut delivered = 0usize;
+        let mut dropped = 0usize;
+        let mut dead: Vec<u64> = Vec::new();
+        // Snapshot matching senders, then send with the registry lock
+        // RELEASED: a blocking QoS-1 send into a full queue must never
+        // prevent other threads from publishing (deadlock otherwise: a
+        // consumer that needs to publish its own result to make progress
+        // would wait on the registry lock forever).
+        let targets: Vec<(u64, SyncSender<Message>)> = {
+            let subs = self.inner.subs.lock().unwrap();
+            subs.iter()
+                .filter(|s| topic_matches(&s.filter, &msg.topic))
+                .map(|s| (s.id, s.sender.clone()))
+                .collect()
+        };
+        for (id, sender) in targets {
+            match qos {
+                QoS::AtMostOnce => match sender.try_send(msg.clone()) {
+                    Ok(()) => delivered += 1,
+                    Err(TrySendError::Full(_)) => dropped += 1,
+                    Err(TrySendError::Disconnected(_)) => dead.push(id),
+                },
+                QoS::AtLeastOnce => match sender.send(msg.clone()) {
+                    Ok(()) => delivered += 1,
+                    Err(_) => dead.push(id),
+                },
+            }
+        }
+        if !dead.is_empty() {
+            let mut subs = self.inner.subs.lock().unwrap();
+            subs.retain(|s| !dead.contains(&s.id));
+        }
+        let mut stats = self.inner.stats.lock().unwrap();
+        stats.published += 1;
+        stats.delivered += delivered as u64;
+        stats.dropped += dropped as u64;
+        stats.bytes += msg.payload.len() as u64 * delivered.max(1) as u64;
+        delivered
+    }
+
+    pub fn stats(&self) -> BusStats {
+        *self.inner.stats.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+    use std::time::Duration;
+
+    #[test]
+    fn exact_topic_delivery() {
+        let b = Broker::new();
+        let (rx, _) = b.subscribe("task/edge1", 8);
+        b.publish(Message::new("task/edge1", vec![1, 2, 3]), QoS::AtLeastOnce);
+        b.publish(Message::new("task/edge2", vec![9]), QoS::AtLeastOnce);
+        let m = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.payload.as_slice(), &[1, 2, 3]);
+        assert!(rx.try_recv().is_err(), "must not receive other topics");
+    }
+
+    #[test]
+    fn wildcard_matching() {
+        assert!(topic_matches("task/+", "task/edge1"));
+        assert!(!topic_matches("task/+", "task/edge1/crop"));
+        assert!(topic_matches("task/#", "task/edge1/crop"));
+        assert!(topic_matches("#", "anything/at/all"));
+        assert!(topic_matches("a/+/c", "a/b/c"));
+        assert!(!topic_matches("a/+/c", "a/b/d"));
+        assert!(!topic_matches("a/b", "a"));
+        assert!(!topic_matches("a", "a/b"));
+        assert!(topic_matches("a/b", "a/b"));
+    }
+
+    #[test]
+    fn plus_wildcard_receives_all_edges() {
+        let b = Broker::new();
+        let (rx, _) = b.subscribe("verdict/+", 16);
+        for i in 0..3 {
+            b.publish(Message::new(format!("verdict/edge{i}"), vec![i]), QoS::AtLeastOnce);
+        }
+        let got: Vec<u8> = (0..3).map(|_| rx.recv().unwrap().payload[0]).collect();
+        assert_eq!(got, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn retained_delivered_to_late_subscriber() {
+        let b = Broker::new();
+        b.publish(Message::retained("cfg/alpha", vec![80]), QoS::AtLeastOnce);
+        let (rx, _) = b.subscribe("cfg/#", 4);
+        let m = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(m.payload.as_slice(), &[80]);
+    }
+
+    #[test]
+    fn retained_overwritten_by_topic() {
+        let b = Broker::new();
+        b.publish(Message::retained("cfg/alpha", vec![1]), QoS::AtLeastOnce);
+        b.publish(Message::retained("cfg/alpha", vec![2]), QoS::AtLeastOnce);
+        let (rx, _) = b.subscribe("cfg/alpha", 4);
+        assert_eq!(rx.recv().unwrap().payload.as_slice(), &[2]);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn qos0_drops_on_full_queue() {
+        let b = Broker::new();
+        let (_rx, _) = b.subscribe("x", 1);
+        assert_eq!(b.publish(Message::new("x", vec![1]), QoS::AtMostOnce), 1);
+        // queue full now
+        assert_eq!(b.publish(Message::new("x", vec![2]), QoS::AtMostOnce), 0);
+        assert_eq!(b.stats().dropped, 1);
+    }
+
+    #[test]
+    fn unsubscribe_stops_delivery() {
+        let b = Broker::new();
+        let (rx, id) = b.subscribe("t", 4);
+        b.unsubscribe(id);
+        assert_eq!(b.publish(Message::new("t", vec![1]), QoS::AtLeastOnce), 0);
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn dead_subscriber_pruned() {
+        let b = Broker::new();
+        {
+            let (_rx, _) = b.subscribe("t", 4);
+            // _rx dropped here
+        }
+        assert_eq!(b.publish(Message::new("t", vec![1]), QoS::AtLeastOnce), 0);
+        // Second publish should find zero subscriptions (pruned).
+        assert_eq!(b.publish(Message::new("t", vec![2]), QoS::AtLeastOnce), 0);
+    }
+
+    #[test]
+    fn blocked_qos1_publish_does_not_block_other_publishers() {
+        // Regression test for the consumer-produces-too deadlock: thread A
+        // blocks on a full QoS-1 queue; thread B must still be able to
+        // publish (and by consuming A's topic, unblock A).
+        let b = Broker::new();
+        let (rx_full, _) = b.subscribe("full", 1);
+        b.publish(Message::new("full", vec![0]), QoS::AtLeastOnce); // fills it
+        let blocker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                // Blocks until rx_full is drained.
+                b.publish(Message::new("full", vec![1]), QoS::AtLeastOnce)
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50));
+        // B: publish to an unrelated topic — must complete immediately.
+        let (rx_other, _) = b.subscribe("other", 4);
+        let n = b.publish(Message::new("other", vec![2]), QoS::AtLeastOnce);
+        assert_eq!(n, 1);
+        assert_eq!(rx_other.recv_timeout(Duration::from_secs(1)).unwrap().payload[0], 2);
+        // Drain the full queue; the blocked publisher finishes.
+        assert_eq!(rx_full.recv_timeout(Duration::from_secs(1)).unwrap().payload[0], 0);
+        assert_eq!(blocker.join().unwrap(), 1);
+        assert_eq!(rx_full.recv_timeout(Duration::from_secs(1)).unwrap().payload[0], 1);
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let b = Broker::new();
+        let (rx, _) = b.subscribe("work/#", 64);
+        let pubber = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..50u8 {
+                    b.publish(Message::new(format!("work/{i}"), vec![i]), QoS::AtLeastOnce);
+                }
+            })
+        };
+        let mut got = Vec::new();
+        for _ in 0..50 {
+            got.push(rx.recv_timeout(Duration::from_secs(2)).unwrap().payload[0]);
+        }
+        pubber.join().unwrap();
+        assert_eq!(got.len(), 50);
+    }
+
+    #[test]
+    fn prop_wildcard_matches_are_consistent() {
+        check("topic_wildcards", |rng, _| {
+            let depth = rng.range_usize(1, 5);
+            let topic: Vec<String> = (0..depth).map(|i| format!("l{}", rng.range_usize(0, 3) + i)).collect();
+            let topic_str = topic.join("/");
+            // Exact filter always matches.
+            assert!(topic_matches(&topic_str, &topic_str));
+            // Replacing any single level with + still matches.
+            for i in 0..depth {
+                let mut f = topic.clone();
+                f[i] = "+".into();
+                assert!(topic_matches(&f.join("/"), &topic_str));
+            }
+            // Truncating to a prefix + "#" matches.
+            for i in 0..depth {
+                let mut f: Vec<String> = topic[..i].to_vec();
+                f.push("#".into());
+                assert!(topic_matches(&f.join("/"), &topic_str));
+            }
+            // A filter with an extra level does not match.
+            let mut longer = topic.clone();
+            longer.push("zzz".into());
+            assert!(!topic_matches(&longer.join("/"), &topic_str));
+        });
+    }
+}
+pub mod tcp;

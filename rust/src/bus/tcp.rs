@@ -1,0 +1,315 @@
+//! TCP transport for the bus: a length-prefixed frame protocol that
+//! bridges a remote client into the in-process [`super::Broker`] — the
+//! deployment shape the paper uses (Mosquitto over TCP between edges and
+//! the Cloud).
+//!
+//! Frame layout (little-endian):
+//!   u8   kind        (0 = SUB, 1 = PUB, 2 = PUB-retained, 3 = PING)
+//!   u16  topic_len   topic bytes follow
+//!   u32  payload_len payload bytes follow (PUB only)
+//!
+//! A client SUBscribes with a filter, then receives PUB frames for every
+//! matching message; PUBs from the client are forwarded into the broker.
+//! QoS over TCP is at-most-once (the transport buffers; local subscribers
+//! keep their configured QoS).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{Broker, Message, QoS};
+
+/// Frame kinds.
+pub const KIND_SUB: u8 = 0;
+pub const KIND_PUB: u8 = 1;
+pub const KIND_PUB_RETAINED: u8 = 2;
+pub const KIND_PING: u8 = 3;
+
+/// Encode one frame.
+pub fn encode_frame(kind: u8, topic: &str, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(7 + topic.len() + payload.len());
+    out.push(kind);
+    out.extend_from_slice(&(topic.len() as u16).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(topic.as_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read one frame from a stream. Returns `None` on clean EOF.
+pub fn read_frame(stream: &mut impl Read) -> crate::Result<Option<(u8, String, Vec<u8>)>> {
+    let mut header = [0u8; 7];
+    match stream.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let kind = header[0];
+    let topic_len = u16::from_le_bytes([header[1], header[2]]) as usize;
+    let payload_len = u32::from_le_bytes([header[3], header[4], header[5], header[6]]) as usize;
+    anyhow::ensure!(topic_len <= 4096, "oversized topic ({topic_len})");
+    anyhow::ensure!(payload_len <= 64 << 20, "oversized payload ({payload_len})");
+    let mut topic = vec![0u8; topic_len];
+    stream.read_exact(&mut topic)?;
+    let mut payload = vec![0u8; payload_len];
+    stream.read_exact(&mut payload)?;
+    Ok(Some((kind, String::from_utf8(topic)?, payload)))
+}
+
+/// A broker exposed over TCP. Accepts any number of clients; each client
+/// may SUB once (more SUBs add filters) and PUB freely.
+pub struct TcpBridge {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpBridge {
+    /// Serve `broker` on 127.0.0.1:<port> (0 = ephemeral).
+    pub fn serve(broker: Broker, port: u16) -> crate::Result<TcpBridge> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("bus-tcp-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let broker = broker.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("bus-tcp-client".into())
+                                .spawn(move || client_loop(stream, broker, stop3));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(TcpBridge { addr, stop, accept_thread: Some(accept_thread) })
+    }
+}
+
+impl Drop for TcpBridge {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn client_loop(stream: TcpStream, broker: Broker, stop: Arc<AtomicBool>) {
+    let mut reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = reader.set_read_timeout(Some(Duration::from_millis(100)));
+    let writer = Arc::new(std::sync::Mutex::new(stream));
+    let mut forwarders: Vec<JoinHandle<()>> = Vec::new();
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                // timeouts surface as io errors; keep polling on timeout
+                if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                    if matches!(
+                        ioe.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) {
+                        continue;
+                    }
+                }
+                break;
+            }
+        };
+        match frame {
+            (KIND_SUB, filter, _) => {
+                // Forward matching broker traffic to this client.
+                let (rx, _id) = broker.subscribe(&filter, 1024);
+                let writer = writer.clone();
+                let stop = stop.clone();
+                forwarders.push(std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        match rx.recv_timeout(Duration::from_millis(100)) {
+                            Ok(msg) => {
+                                let kind = if msg.retained { KIND_PUB_RETAINED } else { KIND_PUB };
+                                let frame = encode_frame(kind, &msg.topic, &msg.payload);
+                                let mut w = writer.lock().unwrap();
+                                if w.write_all(&frame).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(_) => break,
+                        }
+                    }
+                }));
+            }
+            (KIND_PUB, topic, payload) => {
+                broker.publish(Message::new(topic, payload), QoS::AtMostOnce);
+            }
+            (KIND_PUB_RETAINED, topic, payload) => {
+                broker.publish(Message::retained(topic, payload), QoS::AtMostOnce);
+            }
+            (KIND_PING, _, _) => {
+                let mut w = writer.lock().unwrap();
+                let _ = w.write_all(&encode_frame(KIND_PING, "", &[]));
+            }
+            _ => break, // unknown frame: drop the client
+        }
+    }
+}
+
+/// Client side: connect, subscribe, publish, receive.
+pub struct TcpClient {
+    stream: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: SocketAddr) -> crate::Result<TcpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpClient { stream })
+    }
+
+    pub fn subscribe(&mut self, filter: &str) -> crate::Result<()> {
+        self.stream.write_all(&encode_frame(KIND_SUB, filter, &[]))?;
+        Ok(())
+    }
+
+    pub fn publish(&mut self, topic: &str, payload: &[u8]) -> crate::Result<()> {
+        self.stream.write_all(&encode_frame(KIND_PUB, topic, payload))?;
+        Ok(())
+    }
+
+    pub fn publish_retained(&mut self, topic: &str, payload: &[u8]) -> crate::Result<()> {
+        self.stream
+            .write_all(&encode_frame(KIND_PUB_RETAINED, topic, payload))?;
+        Ok(())
+    }
+
+    /// Blocking receive of the next PUB frame addressed to this client.
+    pub fn recv(&mut self, timeout: Duration) -> crate::Result<Option<(String, Vec<u8>)>> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        loop {
+            match read_frame(&mut self.stream) {
+                Ok(Some((KIND_PUB | KIND_PUB_RETAINED, topic, payload))) => {
+                    return Ok(Some((topic, payload)));
+                }
+                Ok(Some((KIND_PING, _, _))) => continue,
+                Ok(Some(_)) => continue,
+                Ok(None) => return Ok(None),
+                Err(e) => {
+                    if let Some(ioe) = e.downcast_ref::<std::io::Error>() {
+                        if matches!(
+                            ioe.kind(),
+                            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                        ) {
+                            return Ok(None);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let frame = encode_frame(KIND_PUB, "a/b", &[1, 2, 3]);
+        let mut cursor = std::io::Cursor::new(frame);
+        let (kind, topic, payload) = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(kind, KIND_PUB);
+        assert_eq!(topic, "a/b");
+        assert_eq!(payload, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn frame_eof_is_none() {
+        let mut cursor = std::io::Cursor::new(Vec::<u8>::new());
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_rejects_oversized() {
+        let mut bad = vec![KIND_PUB];
+        bad.extend_from_slice(&8000u16.to_le_bytes()); // oversized topic
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(bad);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn tcp_pub_to_local_subscriber() {
+        let broker = Broker::new();
+        let (rx, _) = broker.subscribe("remote/#", 16);
+        let bridge = TcpBridge::serve(broker, 0).unwrap();
+        let mut client = TcpClient::connect(bridge.addr).unwrap();
+        client.publish("remote/sensor", b"hello").unwrap();
+        let msg = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg.topic, "remote/sensor");
+        assert_eq!(msg.payload.as_slice(), b"hello");
+    }
+
+    #[test]
+    fn tcp_subscriber_receives_local_pub() {
+        let broker = Broker::new();
+        let bridge = TcpBridge::serve(broker.clone(), 0).unwrap();
+        let mut client = TcpClient::connect(bridge.addr).unwrap();
+        client.subscribe("verdict/+").unwrap();
+        // Give the SUB frame time to register before publishing.
+        std::thread::sleep(Duration::from_millis(100));
+        broker.publish(Message::new("verdict/edge1", vec![42]), QoS::AtMostOnce);
+        let got = client.recv(Duration::from_secs(2)).unwrap();
+        let (topic, payload) = got.expect("expected a PUB frame");
+        assert_eq!(topic, "verdict/edge1");
+        assert_eq!(payload, vec![42]);
+    }
+
+    #[test]
+    fn tcp_two_clients_exchange() {
+        let broker = Broker::new();
+        let bridge = TcpBridge::serve(broker, 0).unwrap();
+        let mut sub = TcpClient::connect(bridge.addr).unwrap();
+        sub.subscribe("chat").unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        let mut publ = TcpClient::connect(bridge.addr).unwrap();
+        publ.publish("chat", b"over tcp").unwrap();
+        let (topic, payload) = sub.recv(Duration::from_secs(2)).unwrap().expect("msg");
+        assert_eq!(topic, "chat");
+        assert_eq!(payload, b"over tcp");
+    }
+
+    #[test]
+    fn tcp_retained_flag_preserved() {
+        let broker = Broker::new();
+        let bridge = TcpBridge::serve(broker.clone(), 0).unwrap();
+        let mut client = TcpClient::connect(bridge.addr).unwrap();
+        client.publish_retained("cfg/alpha", &[8]).unwrap();
+        std::thread::sleep(Duration::from_millis(100));
+        // A late local subscriber still sees it (retained semantics).
+        let (rx, _) = broker.subscribe("cfg/alpha", 4);
+        let msg = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg.payload.as_slice(), &[8]);
+        assert!(msg.retained);
+    }
+}

@@ -1,0 +1,313 @@
+//! Camera profiling + K-Means clustering (paper §IV-A).
+//!
+//! Each camera's *proportion vector* (occurrence frequency of each object
+//! class in its leisure-time footage, Fig. 3) is its profile; K-Means over
+//! profiles groups analogous-scene cameras, and each cluster shares one
+//! context-specific training dataset.
+
+use crate::testkit::Rng;
+use crate::types::{CameraId, NUM_CLASSES};
+
+/// A camera profile: normalised class-occurrence frequencies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Profile {
+    pub camera: CameraId,
+    pub proportions: [f64; NUM_CLASSES],
+}
+
+impl Profile {
+    /// Build from raw class counts; uniform if the camera saw nothing.
+    pub fn from_counts(camera: CameraId, counts: &[usize; NUM_CLASSES]) -> Profile {
+        let total: usize = counts.iter().sum();
+        let mut proportions = [1.0 / NUM_CLASSES as f64; NUM_CLASSES];
+        if total > 0 {
+            for (p, &c) in proportions.iter_mut().zip(counts.iter()) {
+                *p = c as f64 / total as f64;
+            }
+        }
+        Profile { camera, proportions }
+    }
+}
+
+fn dist2(a: &[f64; NUM_CLASSES], b: &[f64; NUM_CLASSES]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// K-Means clustering result.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// `assignment[i]` = cluster index of `profiles[i]`.
+    pub assignment: Vec<usize>,
+    /// Cluster centres — themselves proportion vectors (the paper calls
+    /// the centre "the profile of this cluster").
+    pub centres: Vec<[f64; NUM_CLASSES]>,
+    /// Within-cluster sum of squared distances.
+    pub inertia: f64,
+}
+
+impl Clustering {
+    pub fn cluster_of(&self, idx: usize) -> usize {
+        self.assignment[idx]
+    }
+
+    /// Cameras in each cluster.
+    pub fn members(&self, k: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); k];
+        for (i, &c) in self.assignment.iter().enumerate() {
+            out[c].push(i);
+        }
+        out
+    }
+}
+
+/// Lloyd's K-Means with k-means++ seeding; deterministic for a given seed.
+pub fn kmeans(profiles: &[Profile], k: usize, seed: u64) -> Clustering {
+    assert!(k >= 1 && k <= profiles.len().max(1), "bad k={k} for n={}", profiles.len());
+    let n = profiles.len();
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding.
+    let mut centres: Vec<[f64; NUM_CLASSES]> = Vec::with_capacity(k);
+    centres.push(profiles[rng.range_usize(0, n)].proportions);
+    while centres.len() < k {
+        let weights: Vec<f64> = profiles
+            .iter()
+            .map(|p| {
+                centres
+                    .iter()
+                    .map(|c| dist2(&p.proportions, c))
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = weights.iter().sum();
+        if total <= 1e-18 {
+            // All points coincide with existing centres; duplicate one.
+            centres.push(profiles[rng.range_usize(0, n)].proportions);
+        } else {
+            centres.push(profiles[rng.weighted(&weights)].proportions);
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    for _iter in 0..100 {
+        // Assign.
+        let mut changed = false;
+        for (i, p) in profiles.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(&p.proportions, &centres[a])
+                        .partial_cmp(&dist2(&p.proportions, &centres[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![[0.0; NUM_CLASSES]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in profiles.iter().enumerate() {
+            let c = assignment[i];
+            counts[c] += 1;
+            for d in 0..NUM_CLASSES {
+                sums[c][d] += p.proportions[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..NUM_CLASSES {
+                    centres[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            } else {
+                // Empty cluster: reseed on the farthest point.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        dist2(&profiles[a].proportions, &centres[assignment[a]])
+                            .partial_cmp(&dist2(&profiles[b].proportions, &centres[assignment[b]]))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centres[c] = profiles[far].proportions;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    let inertia = profiles
+        .iter()
+        .enumerate()
+        .map(|(i, p)| dist2(&p.proportions, &centres[assignment[i]]))
+        .sum();
+    Clustering { assignment, centres, inertia }
+}
+
+/// Mean silhouette coefficient of a clustering (quality diagnostic used by
+/// `examples/offline_stage.rs` to justify the paper's k=2).
+pub fn silhouette(profiles: &[Profile], clustering: &Clustering) -> f64 {
+    let n = profiles.len();
+    let k = clustering.centres.len();
+    if n <= 1 || k <= 1 {
+        return 0.0;
+    }
+    let members = clustering.members(k);
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..n {
+        let own = clustering.assignment[i];
+        if members[own].len() <= 1 {
+            continue; // silhouette undefined for singleton clusters
+        }
+        let mean_dist = |set: &[usize]| -> f64 {
+            let s: f64 = set
+                .iter()
+                .filter(|&&j| j != i)
+                .map(|&j| dist2(&profiles[i].proportions, &profiles[j].proportions).sqrt())
+                .sum();
+            s / set.iter().filter(|&&j| j != i).count().max(1) as f64
+        };
+        let a = mean_dist(&members[own]);
+        let b = (0..k)
+            .filter(|&c| c != own && !members[c].is_empty())
+            .map(|c| mean_dist(&members[c]))
+            .fold(f64::INFINITY, f64::min);
+        if b.is_finite() {
+            total += (b - a) / a.max(b);
+            counted += 1;
+        }
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    fn road_profile(cam: u32, jitter: f64, rng: &mut Rng) -> Profile {
+        let mut counts = [0usize; NUM_CLASSES];
+        let mix = [34.0, 12.0, 14.0, 16.0, 10.0, 8.0, 2.0, 4.0];
+        for (c, m) in counts.iter_mut().zip(mix.iter()) {
+            *c = ((m + rng.range_f64(-jitter, jitter)).max(0.0) * 10.0) as usize;
+        }
+        Profile::from_counts(CameraId(cam), &counts)
+    }
+
+    fn square_profile(cam: u32, jitter: f64, rng: &mut Rng) -> Profile {
+        let mut counts = [0usize; NUM_CLASSES];
+        let mix = [5.0, 2.0, 2.0, 8.0, 16.0, 38.0, 17.0, 12.0];
+        for (c, m) in counts.iter_mut().zip(mix.iter()) {
+            *c = ((m + rng.range_f64(-jitter, jitter)).max(0.0) * 10.0) as usize;
+        }
+        Profile::from_counts(CameraId(cam), &counts)
+    }
+
+    #[test]
+    fn profile_normalised() {
+        let p = Profile::from_counts(CameraId(0), &[10, 0, 0, 0, 0, 0, 0, 30]);
+        assert!((p.proportions.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p.proportions[0] - 0.25).abs() < 1e-12);
+        assert!((p.proportions[7] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_empty_counts_uniform() {
+        let p = Profile::from_counts(CameraId(0), &[0; NUM_CLASSES]);
+        for v in p.proportions {
+            assert!((v - 0.125).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kmeans_separates_road_from_square() {
+        let mut rng = Rng::new(5);
+        let mut profiles = Vec::new();
+        for i in 0..7 {
+            profiles.push(road_profile(i, 2.0, &mut rng));
+        }
+        for i in 7..14 {
+            profiles.push(square_profile(i, 2.0, &mut rng));
+        }
+        let clus = kmeans(&profiles, 2, 42);
+        // All road cameras in one cluster, all square cameras in the other.
+        let road_cluster = clus.assignment[0];
+        assert!(clus.assignment[..7].iter().all(|&c| c == road_cluster));
+        assert!(clus.assignment[7..].iter().all(|&c| c != road_cluster));
+        assert!(silhouette(&profiles, &clus) > 0.5);
+    }
+
+    #[test]
+    fn kmeans_k1_groups_everything() {
+        let mut rng = Rng::new(6);
+        let profiles: Vec<Profile> = (0..5).map(|i| road_profile(i, 3.0, &mut rng)).collect();
+        let clus = kmeans(&profiles, 1, 1);
+        assert!(clus.assignment.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn kmeans_deterministic() {
+        let mut rng = Rng::new(7);
+        let profiles: Vec<Profile> = (0..10)
+            .map(|i| if i % 2 == 0 { road_profile(i, 2.0, &mut rng) } else { square_profile(i, 2.0, &mut rng) })
+            .collect();
+        let a = kmeans(&profiles, 2, 9);
+        let b = kmeans(&profiles, 2, 9);
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn prop_centres_are_proportion_vectors() {
+        // Paper: "the center of a cluster is also a proportion vector".
+        check("kmeans_centres_are_proportions", |rng, _| {
+            let n = rng.range_usize(3, 16);
+            let k = rng.range_usize(1, n.min(4) + 1);
+            let profiles: Vec<Profile> = (0..n)
+                .map(|i| {
+                    if rng.bool(0.5) {
+                        road_profile(i as u32, 5.0, rng)
+                    } else {
+                        square_profile(i as u32, 5.0, rng)
+                    }
+                })
+                .collect();
+            let clus = kmeans(&profiles, k, rng.next_u64());
+            for c in &clus.centres {
+                let s: f64 = c.iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "centre sums to {s}");
+                assert!(c.iter().all(|&v| v >= -1e-12));
+            }
+            // Every profile assigned to some cluster in range.
+            assert!(clus.assignment.iter().all(|&c| c < k));
+        });
+    }
+
+    #[test]
+    fn prop_inertia_nonincreasing_in_k() {
+        check("kmeans_inertia_monotone", |rng, _| {
+            let n = rng.range_usize(6, 14);
+            let profiles: Vec<Profile> = (0..n)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        road_profile(i as u32, 4.0, rng)
+                    } else {
+                        square_profile(i as u32, 4.0, rng)
+                    }
+                })
+                .collect();
+            let seed = rng.next_u64();
+            let i1 = kmeans(&profiles, 1, seed).inertia;
+            let i2 = kmeans(&profiles, 2, seed).inertia;
+            // k=2 is at least as good as k=1 up to k-means++ randomness;
+            // allow tiny slack for local optima.
+            assert!(i2 <= i1 * 1.05 + 1e-9, "inertia k1={i1} k2={i2}");
+        });
+    }
+}

@@ -1,0 +1,258 @@
+//! TOML-subset parser (see module docs in `config/mod.rs`).
+
+use std::collections::HashMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key) -> value`. Top-level keys use the
+/// empty section name.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: HashMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> crate::Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(
+                    !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)),
+                    "line {}: bad section name {name:?}",
+                    lineno + 1
+                );
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            anyhow::ensure!(
+                !key.is_empty() && key.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)),
+                "line {}: bad key {key:?}",
+                lineno + 1
+            );
+            let value = parse_value(value.trim())
+                .ok_or_else(|| anyhow::anyhow!("line {}: bad value {value:?}", lineno + 1))?;
+            doc.entries.insert((section.clone(), key.to_string()), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key).and_then(TomlValue::as_i64)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        self.get(section, key).and_then(|v| v.as_str().map(str::to_string))
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key).and_then(TomlValue::as_bool)
+    }
+
+    pub fn get_f64_array(&self, section: &str, key: &str) -> Option<Vec<f64>> {
+        match self.get(section, key)? {
+            TomlValue::Array(items) => items.iter().map(TomlValue::as_f64).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64_array(&self, section: &str, key: &str) -> Option<Vec<i64>> {
+        match self.get(section, key)? {
+            TomlValue::Array(items) => items.iter().map(TomlValue::as_i64).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Remove a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        if inner.contains('"') {
+            return None; // no escape support; keep the subset strict
+        }
+        return Some(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']')?.trim();
+        if inner.is_empty() {
+            return Some(TomlValue::Array(Vec::new()));
+        }
+        let items: Option<Vec<TomlValue>> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Some(TomlValue::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        if f.is_finite() {
+            return Some(TomlValue::Float(f));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        let doc = TomlDoc::parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "a"), Some(1));
+        assert_eq!(doc.get_f64("", "b"), Some(2.5));
+        assert_eq!(doc.get_str("", "c"), Some("hi".into()));
+        assert_eq!(doc.get_bool("", "d"), Some(true));
+        assert_eq!(doc.get_bool("", "e"), Some(false));
+    }
+
+    #[test]
+    fn int_readable_as_f64() {
+        let doc = TomlDoc::parse("x = 3\n").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn sections_and_subsections() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n[a.b]\nx = 2\n").unwrap();
+        assert_eq!(doc.get_i64("a", "x"), Some(1));
+        assert_eq!(doc.get_i64("a.b", "x"), Some(2));
+        assert_eq!(doc.get("b", "x"), None);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse("xs = [1.5, 2.0]\nis = [1, 2, 3]\nempty = []\n").unwrap();
+        assert_eq!(doc.get_f64_array("", "xs"), Some(vec![1.5, 2.0]));
+        assert_eq!(doc.get_i64_array("", "is"), Some(vec![1, 2, 3]));
+        assert_eq!(doc.get_f64_array("", "empty"), Some(vec![]));
+    }
+
+    #[test]
+    fn mixed_array_int_as_float_fails_cleanly() {
+        let doc = TomlDoc::parse("xs = [1, 2.5]\n").unwrap();
+        // i64 view fails (2.5 is not an int) ...
+        assert_eq!(doc.get_i64_array("", "xs"), None);
+        // ... f64 view accepts both.
+        assert_eq!(doc.get_f64_array("", "xs"), Some(vec![1.0, 2.5]));
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = TomlDoc::parse("# full line\nx = 1 # trailing\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc.get_i64("", "x"), Some(1));
+        assert_eq!(doc.get_str("", "s"), Some("a # not comment".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("x = 1\ny 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = TomlDoc::parse("[bad\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(TomlDoc::parse("x = nope\n").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = [1,\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = TomlDoc::parse("a = -4\nb = -0.5\nc = 1e-3\n").unwrap();
+        assert_eq!(doc.get_i64("", "a"), Some(-4));
+        assert_eq!(doc.get_f64("", "b"), Some(-0.5));
+        assert_eq!(doc.get_f64("", "c"), Some(1e-3));
+    }
+}

@@ -1,0 +1,250 @@
+//! Connected foreground regions from a binary mask.
+//!
+//! The paper retrieves object contours with the Suzuki–Abe border-following
+//! algorithm (its ref. [24], the one behind OpenCV `findContours`). For the
+//! pipeline we need each region's bounding box and mass, so we implement
+//! border following to trace each outer contour, then derive the bbox from
+//! the traced border. A flood-fill labelling pass guarantees each component
+//! is reported exactly once (border following alone can revisit components
+//! with complex topology).
+
+use super::Detection;
+use crate::types::BBox;
+
+/// Moore-neighbourhood offsets, clockwise starting east.
+const NBR8: [(i64, i64); 8] =
+    [(0, 1), (1, 1), (1, 0), (1, -1), (0, -1), (-1, -1), (-1, 0), (-1, 1)];
+
+/// Trace the outer border of the component containing `(sy, sx)` (which
+/// must be a foreground pixel whose west neighbour is background), marking
+/// border pixels in `visited`. Returns the border pixel list.
+pub fn trace_border(mask: &[u8], h: usize, w: usize, sy: usize, sx: usize) -> Vec<(usize, usize)> {
+    let at = |y: i64, x: i64| -> u8 {
+        if y < 0 || y >= h as i64 || x < 0 || x >= w as i64 {
+            0
+        } else {
+            mask[y as usize * w + x as usize]
+        }
+    };
+    let mut border = vec![(sy, sx)];
+    // Previous direction: we entered from the west.
+    let (mut cy, mut cx) = (sy as i64, sx as i64);
+    let mut prev_dir = 4usize; // pointing west (where we came from)
+    loop {
+        // Search clockwise from the pixel after the backtrack direction.
+        let mut found = None;
+        for k in 1..=8 {
+            let dir = (prev_dir + k) % 8;
+            let (dy, dx) = NBR8[dir];
+            if at(cy + dy, cx + dx) != 0 {
+                found = Some(dir);
+                break;
+            }
+        }
+        let Some(dir) = found else {
+            break; // isolated pixel
+        };
+        let (dy, dx) = NBR8[dir];
+        cy += dy;
+        cx += dx;
+        if (cy as usize, cx as usize) == (sy, sx) && border.len() > 1 {
+            break;
+        }
+        border.push((cy as usize, cx as usize));
+        // Backtrack direction = opposite of the move we just made.
+        prev_dir = (dir + 4) % 8;
+        if border.len() > 4 * h * w {
+            break; // safety bound; cannot trigger on valid input
+        }
+    }
+    border
+}
+
+/// All connected components (8-connectivity) of the mask as [`Detection`]s:
+/// bbox from the traced outer border, mass from the filled component.
+pub fn connected_regions(mask: &[u8], h: usize, w: usize) -> Vec<Detection> {
+    let mut labels = vec![0u32; h * w];
+    let mut next_label = 1u32;
+    let mut out = Vec::new();
+    let mut stack = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            let i = y * w + x;
+            if mask[i] == 0 || labels[i] != 0 {
+                continue;
+            }
+            // New component: flood-fill for mass + extent ...
+            let label = next_label;
+            next_label += 1;
+            labels[i] = label;
+            stack.push((y, x));
+            let (mut y0, mut x0, mut y1, mut x1) = (y, x, y, x);
+            let mut mass = 0usize;
+            while let Some((py, px)) = stack.pop() {
+                mass += 1;
+                y0 = y0.min(py);
+                x0 = x0.min(px);
+                y1 = y1.max(py);
+                x1 = x1.max(px);
+                for (dy, dx) in NBR8 {
+                    let ny = py as i64 + dy;
+                    let nx = px as i64 + dx;
+                    if ny < 0 || ny >= h as i64 || nx < 0 || nx >= w as i64 {
+                        continue;
+                    }
+                    let ni = ny as usize * w + nx as usize;
+                    if mask[ni] != 0 && labels[ni] == 0 {
+                        labels[ni] = label;
+                        stack.push((ny as usize, nx as usize));
+                    }
+                }
+            }
+            // ... and trace the outer border from the first (top-left)
+            // pixel, Suzuki-style. The border is a sanity witness: every
+            // traced pixel must lie inside the filled extent (a single
+            // clockwise pass can legally skip thin appendages, so the fill
+            // extent — not the trace extent — is the bbox of record).
+            let border = trace_border(mask, h, w, y, x);
+            debug_assert!(border
+                .iter()
+                .all(|&(py, px)| py >= y0 && py <= y1 && px >= x0 && px <= x1));
+            out.push(Detection {
+                bbox: BBox { y0, x0, y1: y1 + 1, x1: x1 + 1 },
+                mass,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    fn mask_with_rect(h: usize, w: usize, y0: usize, x0: usize, y1: usize, x1: usize) -> Vec<u8> {
+        let mut m = vec![0u8; h * w];
+        for y in y0..y1 {
+            for x in x0..x1 {
+                m[y * w + x] = 1;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn single_rect() {
+        let m = mask_with_rect(20, 20, 3, 4, 9, 12);
+        let regions = connected_regions(&m, 20, 20);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].bbox, BBox { y0: 3, x0: 4, y1: 9, x1: 12 });
+        assert_eq!(regions[0].mass, 6 * 8);
+    }
+
+    #[test]
+    fn two_separate_rects() {
+        let mut m = mask_with_rect(20, 30, 2, 2, 6, 6);
+        for y in 10..15 {
+            for x in 20..28 {
+                m[y * 30 + x] = 1;
+            }
+        }
+        let mut regions = connected_regions(&m, 20, 30);
+        regions.sort_by_key(|r| r.bbox.y0);
+        assert_eq!(regions.len(), 2);
+        assert_eq!(regions[0].bbox, BBox { y0: 2, x0: 2, y1: 6, x1: 6 });
+        assert_eq!(regions[1].bbox, BBox { y0: 10, x0: 20, y1: 15, x1: 28 });
+    }
+
+    #[test]
+    fn diagonal_pixels_are_one_component() {
+        // 8-connectivity: a diagonal line is a single region.
+        let mut m = vec![0u8; 10 * 10];
+        for i in 0..6 {
+            m[(2 + i) * 10 + (3 + i)] = 1;
+        }
+        let regions = connected_regions(&m, 10, 10);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].mass, 6);
+    }
+
+    #[test]
+    fn l_shape_bbox() {
+        let mut m = vec![0u8; 12 * 12];
+        for y in 2..10 {
+            m[y * 12 + 2] = 1;
+        }
+        for x in 2..9 {
+            m[9 * 12 + x] = 1;
+        }
+        let regions = connected_regions(&m, 12, 12);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].bbox, BBox { y0: 2, x0: 2, y1: 10, x1: 9 });
+    }
+
+    #[test]
+    fn region_with_hole_traced_once() {
+        // Hollow square: one component, mass = ring only.
+        let mut m = mask_with_rect(16, 16, 3, 3, 12, 12);
+        for y in 6..9 {
+            for x in 6..9 {
+                m[y * 16 + x] = 0;
+            }
+        }
+        let regions = connected_regions(&m, 16, 16);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].mass, 9 * 9 - 9);
+    }
+
+    #[test]
+    fn isolated_pixel() {
+        let mut m = vec![0u8; 8 * 8];
+        m[3 * 8 + 4] = 1;
+        let regions = connected_regions(&m, 8, 8);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].mass, 1);
+        assert_eq!(regions[0].bbox, BBox { y0: 3, x0: 4, y1: 4, x1: 5 });
+    }
+
+    #[test]
+    fn border_trace_touching_edges() {
+        // Component touching all four image borders must not panic.
+        let m = mask_with_rect(6, 6, 0, 0, 6, 6);
+        let regions = connected_regions(&m, 6, 6);
+        assert_eq!(regions.len(), 1);
+        assert_eq!(regions[0].bbox, BBox { y0: 0, x0: 0, y1: 6, x1: 6 });
+    }
+
+    #[test]
+    fn prop_masses_sum_to_foreground() {
+        check("component_masses_sum", |rng, _| {
+            let h = rng.range_usize(4, 32);
+            let w = rng.range_usize(4, 32);
+            let mut m = vec![0u8; h * w];
+            for v in m.iter_mut() {
+                *v = rng.bool(0.3) as u8;
+            }
+            let regions = connected_regions(&m, h, w);
+            let total: usize = regions.iter().map(|r| r.mass).sum();
+            let fg: usize = m.iter().map(|&v| v as usize).sum();
+            assert_eq!(total, fg);
+        });
+    }
+
+    #[test]
+    fn prop_bboxes_contain_their_mass() {
+        check("component_bbox_bounds", |rng, _| {
+            let h = rng.range_usize(4, 24);
+            let w = rng.range_usize(4, 24);
+            let mut m = vec![0u8; h * w];
+            for v in m.iter_mut() {
+                *v = rng.bool(0.25) as u8;
+            }
+            for r in connected_regions(&m, h, w) {
+                assert!(r.bbox.y1 <= h && r.bbox.x1 <= w);
+                assert!(r.mass <= r.bbox.area());
+                assert!(r.mass >= 1);
+            }
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Moving-object detection (paper §IV-C).
+//!
+//! The paper runs OpenCV frame differencing on the edge CPU. Here the dense
+//! stage (per-pixel diff → conjunction → grayscale → threshold → 3×3
+//! dilation → 3×3 erosion) has two interchangeable implementations:
+//!
+//! * [`framediff::framediff_native`] — Rust, no dependencies (default).
+//! * the `framediff` HLO artifact (Pallas kernel) executed via
+//!   [`crate::runtime`] — benched against the native one in
+//!   `bench_micro.rs` as a DESIGN.md §8 ablation.
+//!
+//! The irregular stage — contour extraction via Suzuki–Abe border following
+//! ([`contour`]) and the paper's size/aspect filters — is always native.
+
+pub mod contour;
+pub mod framediff;
+
+use crate::types::{BBox, Image};
+
+/// Detection configuration (paper §IV-C parameters).
+#[derive(Clone, Debug)]
+pub struct DetectConfig {
+    /// Fixed-level threshold on the grayscale conjunction (eq. 4), in
+    /// [0,1] intensity units (paper uses 8-bit levels).
+    pub threshold: f32,
+    /// Discard boxes smaller than this many pixels on either side
+    /// ("images with small sizes", §IV-C).
+    pub min_side: usize,
+    /// Discard boxes with max/min side ratio above this
+    /// ("imbalances between length and width", §IV-C).
+    pub max_aspect: f32,
+    /// Margin added around each contour bbox before cropping.
+    pub margin: usize,
+    /// Crops are resized to this square resolution for the CNNs.
+    pub crop_size: usize,
+}
+
+impl Default for DetectConfig {
+    fn default() -> DetectConfig {
+        DetectConfig { threshold: 0.1, min_side: 6, max_aspect: 3.0, margin: 2, crop_size: 32 }
+    }
+}
+
+/// A detected foreground region.
+#[derive(Clone, Debug)]
+pub struct Detection {
+    pub bbox: BBox,
+    /// Number of mask pixels inside the bbox (component size).
+    pub mass: usize,
+}
+
+/// Full detection pipeline over a frame triplet: dense stage → connected
+/// regions → paper's plausibility filters. Returns boxes in frame coords.
+pub fn detect(prev: &Image, cur: &Image, nxt: &Image, cfg: &DetectConfig) -> Vec<Detection> {
+    let mask = framediff::framediff_native(prev, cur, nxt, cfg.threshold);
+    detections_from_mask(&mask, cur.h, cur.w, cfg)
+}
+
+/// Shared tail of the pipeline (used by both the native and the HLO dense
+/// stage): extract contours from a binary mask and filter boxes.
+pub fn detections_from_mask(mask: &[u8], h: usize, w: usize, cfg: &DetectConfig) -> Vec<Detection> {
+    contour::connected_regions(mask, h, w)
+        .into_iter()
+        .filter(|d| {
+            d.bbox.height() >= cfg.min_side
+                && d.bbox.width() >= cfg.min_side
+                && d.bbox.aspect() <= cfg.max_aspect
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::Image;
+
+    fn moving_block_triplet(h: usize, w: usize) -> (Image, Image, Image) {
+        let mut prev = Image::filled(h, w, [0.5, 0.5, 0.5]);
+        let mut cur = prev.clone();
+        let mut nxt = prev.clone();
+        for y in 10..22 {
+            for x in 4..16 {
+                prev.set(y, x, [1.0, 1.0, 1.0]);
+            }
+            for x in 20..32 {
+                cur.set(y, x, [1.0, 1.0, 1.0]);
+            }
+            for x in 36..48 {
+                nxt.set(y, x, [1.0, 1.0, 1.0]);
+            }
+        }
+        (prev, cur, nxt)
+    }
+
+    #[test]
+    fn detects_moving_block() {
+        let (prev, cur, nxt) = moving_block_triplet(48, 64);
+        let dets = detect(&prev, &cur, &nxt, &DetectConfig::default());
+        assert_eq!(dets.len(), 1, "expected exactly one detection: {dets:?}");
+        let bb = dets[0].bbox;
+        // The detection must overlap the block's *current* position.
+        let want = BBox { y0: 10, x0: 20, y1: 22, x1: 32 };
+        assert!(bb.iou(&want) > 0.4, "bbox {bb:?} vs want {want:?}");
+    }
+
+    #[test]
+    fn static_scene_detects_nothing() {
+        let img = Image::filled(48, 64, [0.3, 0.7, 0.2]);
+        let dets = detect(&img, &img, &img, &DetectConfig::default());
+        assert!(dets.is_empty());
+    }
+
+    #[test]
+    fn small_detections_filtered() {
+        let mut prev = Image::filled(32, 32, [0.5, 0.5, 0.5]);
+        let mut cur = prev.clone();
+        let mut nxt = prev.clone();
+        // 2x2 flicker — below min_side after morphology.
+        prev.set(5, 5, [1.0, 1.0, 1.0]);
+        cur.set(5, 8, [1.0, 1.0, 1.0]);
+        nxt.set(5, 11, [1.0, 1.0, 1.0]);
+        let dets = detect(&prev, &cur, &nxt, &DetectConfig::default());
+        assert!(dets.is_empty(), "single-pixel flicker should be filtered: {dets:?}");
+    }
+
+    #[test]
+    fn aspect_filter_drops_slivers() {
+        let cfg = DetectConfig::default();
+        let mut mask = vec![0u8; 64 * 64];
+        // A 40x4 sliver: aspect 10 > 3.
+        for y in 10..50 {
+            for x in 8..12 {
+                mask[y * 64 + x] = 1;
+            }
+        }
+        let dets = detections_from_mask(&mask, 64, 64, &cfg);
+        assert!(dets.is_empty());
+    }
+}

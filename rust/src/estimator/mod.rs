@@ -1,0 +1,407 @@
+//! Inference-latency estimation (paper §IV-D-3).
+//!
+//! Two estimators, used together exactly as the paper prescribes:
+//!
+//! * [`AdaptiveMean`] — the fast path, eq. 17: a self-weighted mean of the
+//!   stored value and the newest feedback, which automatically discounts
+//!   outliers. Updated on every classification feedback.
+//! * [`Lognormal3`] — the slow path: maximum-likelihood fit of a
+//!   three-parameter (shifted) lognormal over a window of recent latencies
+//!   (eqs. 10–16), used for long-period prediction. The location parameter
+//!   γ models the physical minimum latency. Prediction blends E(X) with the
+//!   median (γ + e^μ) to damp outlier swings, as §IV-D-3 describes.
+
+use std::collections::VecDeque;
+
+/// Eq. 17: t ← (t_old² + t_new²)/(t_old + t_new)² · t_old
+///            + 2·t_old·t_new/(t_old + t_new)² · t_new.
+///
+/// Weights sum to 1; an extreme `t_new` (or a stale extreme `t_old`)
+/// receives a reduced weight, bounding swings.
+pub fn adaptive_mean_update(t_old: f64, t_new: f64) -> f64 {
+    let s = t_old + t_new;
+    if s <= 0.0 {
+        return t_new.max(0.0);
+    }
+    let s2 = s * s;
+    let w_old = (t_old * t_old + t_new * t_new) / s2;
+    let w_new = (2.0 * t_old * t_new) / s2;
+    w_old * t_old + w_new * t_new
+}
+
+/// Stateful eq.-17 estimator.
+#[derive(Clone, Debug)]
+pub struct AdaptiveMean {
+    value: f64,
+}
+
+impl AdaptiveMean {
+    /// Start from an empirical initial value (paper: "initialize the value
+    /// of latency with an empirical value").
+    pub fn new(initial: f64) -> AdaptiveMean {
+        AdaptiveMean { value: initial }
+    }
+
+    pub fn observe(&mut self, t_new: f64) {
+        self.value = adaptive_mean_update(self.value, t_new);
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+}
+
+/// Fitted three-parameter lognormal.
+#[derive(Clone, Copy, Debug)]
+pub struct Lognormal3Fit {
+    pub mu: f64,
+    pub sigma: f64,
+    pub gamma: f64,
+}
+
+impl Lognormal3Fit {
+    /// E(X) = γ + exp(μ + σ²/2).
+    pub fn mean(&self) -> f64 {
+        self.gamma + (self.mu + self.sigma * self.sigma / 2.0).exp()
+    }
+
+    /// Median(X) = γ + e^μ.
+    pub fn median(&self) -> f64 {
+        self.gamma + self.mu.exp()
+    }
+
+    /// The paper's long-period predictor: a weighted blend of mean and
+    /// median (outlier-damped). `w` is the weight on the mean.
+    pub fn predict(&self, w: f64) -> f64 {
+        let w = w.clamp(0.0, 1.0);
+        w * self.mean() + (1.0 - w) * self.median()
+    }
+
+    /// Density at `x` (diagnostic / tests).
+    pub fn pdf(&self, x: f64) -> f64 {
+        if x <= self.gamma {
+            return 0.0;
+        }
+        let z = ((x - self.gamma).ln() - self.mu) / self.sigma;
+        (-(z * z) / 2.0).exp()
+            / ((x - self.gamma) * self.sigma * (2.0 * std::f64::consts::PI).sqrt())
+    }
+}
+
+/// Given γ, the profile-likelihood estimates of μ and σ² (eqs. 14–15).
+fn mu_sigma_given_gamma(xs: &[f64], gamma: f64) -> (f64, f64) {
+    let n = xs.len() as f64;
+    let mu = xs.iter().map(|&x| (x - gamma).ln()).sum::<f64>() / n;
+    let s2 = xs.iter().map(|&x| ((x - gamma).ln() - mu).powi(2)).sum::<f64>() / n;
+    (mu, s2)
+}
+
+/// Eq. 16 residual: the γ score equation after substituting eqs. 14–15.
+/// The MLE γ̂ is a root of this function on (−∞, min(xs)).
+fn gamma_equation(xs: &[f64], gamma: f64) -> f64 {
+    let n = xs.len() as f64;
+    let inv: f64 = xs.iter().map(|&x| 1.0 / (x - gamma)).sum();
+    let lns: f64 = xs.iter().map(|&x| (x - gamma).ln()).sum();
+    let ln2s: f64 = xs.iter().map(|&x| (x - gamma).ln().powi(2)).sum();
+    let lnoverx: f64 = xs.iter().map(|&x| (x - gamma).ln() / (x - gamma)).sum();
+    inv * (lns - ln2s + lns * lns / n) - n * lnoverx
+}
+
+/// MLE fit of the three-parameter lognormal by solving eq. 16 for γ with
+/// bisection over (lo, min(xs)), then eqs. 14–15 for μ, σ.
+///
+/// Returns `None` when `xs` is too small or degenerate (constant sample).
+pub fn fit_lognormal3(xs: &[f64]) -> Option<Lognormal3Fit> {
+    if xs.len() < 8 {
+        return None;
+    }
+    let xmin = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let xmax = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !(xmin.is_finite() && xmax.is_finite()) || xmax - xmin < 1e-12 || xmin <= 0.0 {
+        return None;
+    }
+    // Bracket: γ ∈ [xmin - span*8, xmin - eps]. The score equation is
+    // continuous there; scan for a sign change, then bisect.
+    let span = (xmax - xmin).max(1e-9);
+    let eps = 1e-9 * span.max(xmin);
+    let hi = xmin - eps;
+    let lo = (xmin - 8.0 * span).min(hi - span);
+    // §Perf: 24 scan steps + 48 bisection iterations with the bracket-end
+    // value cached (the equation is O(n) per evaluation; the original
+    // 64-step scan + 80 double-eval bisections dominated the estimator's
+    // p99 — see EXPERIMENTS.md §Perf).
+    let steps = 24;
+    let mut prev_g = lo;
+    let mut prev_f = gamma_equation(xs, prev_g);
+    let mut bracket = None;
+    for i in 1..=steps {
+        let g = lo + (hi - lo) * i as f64 / steps as f64;
+        let f = gamma_equation(xs, g);
+        if f == 0.0 {
+            bracket = Some((g, g, f));
+            break;
+        }
+        if prev_f.is_finite() && f.is_finite() && prev_f * f < 0.0 {
+            bracket = Some((prev_g, g, prev_f));
+            break;
+        }
+        prev_g = g;
+        prev_f = f;
+    }
+    let (mut a, mut b, mut fa) = match bracket {
+        Some(ab) => ab,
+        // No root in range: fall back to γ slightly below the sample
+        // minimum (common when the true γ ≈ xmin, e.g. heavy left pile-up).
+        None => {
+            let gamma = xmin - 0.05 * span;
+            let (mu, s2) = mu_sigma_given_gamma(xs, gamma);
+            return Some(Lognormal3Fit { mu, sigma: s2.sqrt().max(1e-9), gamma });
+        }
+    };
+    for _ in 0..48 {
+        let mid = 0.5 * (a + b);
+        let fm = gamma_equation(xs, mid);
+        if fm == 0.0 || (b - a) < 1e-12 {
+            a = mid;
+            b = mid;
+            break;
+        }
+        if fa * fm < 0.0 {
+            b = mid;
+        } else {
+            a = mid;
+            fa = fm;
+        }
+    }
+    let gamma = 0.5 * (a + b);
+    let (mu, s2) = mu_sigma_given_gamma(xs, gamma);
+    Some(Lognormal3Fit { mu, sigma: s2.sqrt().max(1e-9), gamma })
+}
+
+/// Long-period latency estimator: keeps a sliding window of observations
+/// and refits the 3-parameter lognormal every `refit_every` samples.
+#[derive(Clone, Debug)]
+pub struct Lognormal3 {
+    window: VecDeque<f64>,
+    capacity: usize,
+    refit_every: usize,
+    since_fit: usize,
+    fit: Option<Lognormal3Fit>,
+    /// Blend weight on E(X) vs median in `predict` (paper: weighted
+    /// arithmetic mean of the two).
+    pub mean_weight: f64,
+}
+
+impl Lognormal3 {
+    pub fn new(capacity: usize, refit_every: usize) -> Lognormal3 {
+        Lognormal3 {
+            window: VecDeque::with_capacity(capacity),
+            capacity: capacity.max(8),
+            refit_every: refit_every.max(1),
+            since_fit: 0,
+            fit: None,
+            mean_weight: 0.5,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !(x.is_finite() && x > 0.0) {
+            return;
+        }
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(x);
+        self.since_fit += 1;
+        if self.since_fit >= self.refit_every && self.window.len() >= 8 {
+            let xs: Vec<f64> = self.window.iter().cloned().collect();
+            if let Some(f) = fit_lognormal3(&xs) {
+                self.fit = Some(f);
+            }
+            self.since_fit = 0;
+        }
+    }
+
+    pub fn fit(&self) -> Option<Lognormal3Fit> {
+        self.fit
+    }
+
+    /// Long-period prediction; `None` until enough data has arrived.
+    pub fn predict(&self) -> Option<f64> {
+        self.fit.map(|f| f.predict(self.mean_weight))
+    }
+}
+
+/// The combined estimator the nodes use: eq. 17 on every feedback (fast,
+/// frequent) plus the lognormal refit as the long-period corrector — the
+/// paper notes the lognormal "can compensate for the lower reliability of
+/// this simple method in longer periods".
+#[derive(Clone, Debug)]
+pub struct LatencyEstimator {
+    fast: AdaptiveMean,
+    slow: Lognormal3,
+    /// Weight on the slow (lognormal) prediction when available.
+    pub slow_weight: f64,
+}
+
+impl LatencyEstimator {
+    pub fn new(initial: f64) -> LatencyEstimator {
+        LatencyEstimator {
+            fast: AdaptiveMean::new(initial),
+            slow: Lognormal3::new(256, 32),
+            slow_weight: 0.3,
+        }
+    }
+
+    pub fn observe(&mut self, t: f64) {
+        self.fast.observe(t);
+        self.slow.observe(t);
+    }
+
+    /// Current best estimate of per-task inference latency.
+    pub fn estimate(&self) -> f64 {
+        match self.slow.predict() {
+            Some(lp) => (1.0 - self.slow_weight) * self.fast.value() + self.slow_weight * lp,
+            None => self.fast.value(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn eq17_fixed_point() {
+        // If feedback equals the stored value, nothing changes.
+        let t = adaptive_mean_update(0.8, 0.8);
+        assert!((t - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq17_weights_sum_to_one() {
+        check("eq17_weights", |rng, _| {
+            let a = rng.range_f64(1e-3, 10.0);
+            let b = rng.range_f64(1e-3, 10.0);
+            let s2 = (a + b) * (a + b);
+            let w_old = (a * a + b * b) / s2;
+            let w_new = 2.0 * a * b / s2;
+            assert!((w_old + w_new - 1.0).abs() < 1e-12);
+            // Result lies between the two inputs.
+            let t = adaptive_mean_update(a, b);
+            assert!(t >= a.min(b) - 1e-12 && t <= a.max(b) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn eq17_damps_outliers_vs_plain_mean() {
+        // A 100x outlier must move the estimate less than the plain
+        // arithmetic mean would.
+        let t_old = 0.1f64;
+        let spike = 10.0f64;
+        let updated = adaptive_mean_update(t_old, spike);
+        let plain = 0.5 * (t_old + spike);
+        assert!(updated < plain, "eq17 {updated} >= mean {plain}");
+        // The outlier's effective weight is 2ab/(a+b)^2 ≈ 0.0196.
+        assert!(updated < 0.5, "outlier influence too large: {updated}");
+    }
+
+    #[test]
+    fn eq17_converges_to_stable_feedback() {
+        let mut est = AdaptiveMean::new(5.0);
+        for _ in 0..200 {
+            est.observe(0.25);
+        }
+        assert!((est.value() - 0.25).abs() < 0.01, "value {}", est.value());
+    }
+
+    #[test]
+    fn lognormal_fit_recovers_parameters() {
+        let (mu, sigma, gamma) = (-1.2, 0.5, 0.3);
+        let mut rng = Rng::new(42);
+        let xs: Vec<f64> = (0..4000).map(|_| rng.lognormal3(mu, sigma, gamma)).collect();
+        let fit = fit_lognormal3(&xs).expect("fit");
+        assert!((fit.gamma - gamma).abs() < 0.1, "gamma {} vs {gamma}", fit.gamma);
+        assert!((fit.mu - mu).abs() < 0.25, "mu {} vs {mu}", fit.mu);
+        assert!((fit.sigma - sigma).abs() < 0.15, "sigma {} vs {sigma}", fit.sigma);
+        // E(X) close to the sample mean.
+        let sample_mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((fit.mean() - sample_mean).abs() / sample_mean < 0.05);
+    }
+
+    #[test]
+    fn lognormal_fit_rejects_degenerate() {
+        assert!(fit_lognormal3(&[1.0; 20]).is_none());
+        assert!(fit_lognormal3(&[1.0, 2.0, 3.0]).is_none()); // too few
+    }
+
+    #[test]
+    fn lognormal_gamma_below_min() {
+        check("gamma_below_min", |rng, _| {
+            let gamma = rng.range_f64(0.0, 1.0);
+            let mu = rng.range_f64(-2.0, 0.5);
+            let sigma = rng.range_f64(0.2, 1.0);
+            let xs: Vec<f64> = (0..200).map(|_| rng.lognormal3(mu, sigma, gamma)).collect();
+            if let Some(fit) = fit_lognormal3(&xs) {
+                let xmin = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+                assert!(fit.gamma < xmin, "gamma {} >= xmin {xmin}", fit.gamma);
+                assert!(fit.sigma > 0.0);
+                assert!(fit.mean() >= fit.median(), "lognormal mean < median");
+            }
+        });
+    }
+
+    #[test]
+    fn pdf_zero_below_gamma_positive_above() {
+        let fit = Lognormal3Fit { mu: 0.0, sigma: 1.0, gamma: 1.0 };
+        assert_eq!(fit.pdf(0.5), 0.0);
+        assert_eq!(fit.pdf(1.0), 0.0);
+        assert!(fit.pdf(2.0) > 0.0);
+    }
+
+    #[test]
+    fn sliding_estimator_tracks_distribution() {
+        let mut est = Lognormal3::new(256, 16);
+        let mut rng = Rng::new(3);
+        for _ in 0..512 {
+            est.observe(rng.lognormal3(-1.0, 0.4, 0.2));
+        }
+        let pred = est.predict().expect("prediction after 512 samples");
+        // True median = 0.2 + e^-1 ≈ 0.568, mean ≈ 0.2+e^{-1+0.08}≈0.599.
+        assert!((0.4..0.8).contains(&pred), "pred {pred}");
+    }
+
+    #[test]
+    fn combined_estimator_blends() {
+        let mut est = LatencyEstimator::new(1.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..600 {
+            est.observe(rng.lognormal3(-1.6, 0.3, 0.05));
+        }
+        let e = est.estimate();
+        // True mean ≈ 0.05 + e^{-1.6+0.045} ≈ 0.26.
+        assert!((0.1..0.5).contains(&e), "estimate {e}");
+    }
+
+    #[test]
+    fn combined_estimator_resists_single_spike() {
+        let mut est = LatencyEstimator::new(0.2);
+        for _ in 0..100 {
+            est.observe(0.2);
+        }
+        let before = est.estimate();
+        est.observe(50.0); // one pathological outlier
+        let after = est.estimate();
+        // A plain running mean over the window would jump by ~0.49; a plain
+        // 50/50 mean by ~24.9. Eq. 17 + the lognormal blend must damp the
+        // spike well below the naive two-point mean...
+        let naive_jump = 0.5 * (before + 50.0) - before;
+        assert!(after - before < 0.2 * naive_jump, "spike {before} -> {after}");
+        // ...and recover quickly.
+        for _ in 0..20 {
+            est.observe(0.2);
+        }
+        assert!((est.estimate() - before).abs() < 0.1, "no recovery: {}", est.estimate());
+    }
+}

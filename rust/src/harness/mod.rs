@@ -1,0 +1,817 @@
+//! Experiment harness: discrete-event reproduction of the paper's
+//! evaluation (Tables II–IV, Figs. 6–8).
+//!
+//! The harness replays a surveillance workload through the full pipeline
+//! under each of the four schemes. Logical (simulated) time carries the
+//! queueing dynamics — service times are calibrated to the paper's
+//! hardware (edge CPU MobileNet, cloud P4 ResNet-152, shared uplink) — so
+//! the experiments run the paper's multi-hour regime in seconds on this
+//! one-core host. Compute itself has two modes:
+//!
+//! * [`ComputeMode::Pjrt`] — every classification is a *real* PJRT call on
+//!   the AOT artifacts (real CNN confidences; logical service times).
+//! * [`ComputeMode::Synthetic`] — confidences drawn from a calibrated
+//!   distribution (for fast sweeps and benches without artifacts).
+//!
+//! Network model: each edge has a FIFO uplink of `uplink_mbps`; a crop's
+//! wire size models the *native-resolution* crop the paper ships (our
+//! 96×128 frames stand in for 1080p — an `HD_SCALE` area factor,
+//! DESIGN.md §3), which is what makes cloud-only bandwidth-bound, as in
+//! the paper.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::config::{Config, Scheme};
+use crate::detect::{detect, DetectConfig};
+use crate::estimator::LatencyEstimator;
+use crate::metrics::{Confusion, LatencyRecorder, SchemeRow};
+use crate::runtime::{Engine, ModelRunner, MomentumSgd};
+use crate::sched::{allocate, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
+use crate::testkit::Rng;
+use crate::trace::synth_confidence;
+use crate::types::{ClassId, Image, NodeId};
+use crate::video::standard_deployment;
+
+/// Area factor mapping our synthetic frame resolution to the 1080p the
+/// paper transmits (linear scale ~15x => area ~225x).
+pub const HD_SCALE: u64 = 225;
+
+/// Calibrated service-time constants (paper-era hardware, DESIGN.md §3).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceTimes {
+    /// Edge CQ-CNN per-crop inference at speed 1.0 (i7 CPU, MobileNet).
+    pub edge_infer: f64,
+    /// Cloud high-accuracy CNN per-crop inference (P4 GPU, ResNet-152).
+    pub cloud_infer: f64,
+}
+
+impl Default for ServiceTimes {
+    fn default() -> ServiceTimes {
+        ServiceTimes { edge_infer: 0.28, cloud_infer: 0.12 }
+    }
+}
+
+/// Compute source for classifications.
+pub enum ComputeMode {
+    /// Real PJRT inference through the AOT bundle.
+    Pjrt(Box<PjrtCtx>),
+    /// Calibrated synthetic confidences (no artifacts required).
+    Synthetic {
+        /// Edge CNN separability (higher = better CQ-CNN).
+        sharpness: f64,
+        /// Probability the edge CNN is *confidently wrong* (drawn as if
+        /// the object were the other class) — models the calibration gap
+        /// that gives the paper's edge-only its ~69% F2.
+        edge_flip: f64,
+        /// Probability the cloud oracle agrees with ground truth.
+        oracle_acc: f64,
+    },
+}
+
+/// PJRT context: engine + fine-tuned edge model + cloud model.
+pub struct PjrtCtx {
+    pub engine: Engine,
+    pub edge_model: ModelRunner,
+    pub cloud_model: ModelRunner,
+}
+
+impl PjrtCtx {
+    /// Build the context: load the bundle and run the online fine-tuning
+    /// stage (head-group momentum-SGD on a renderer-generated
+    /// context dataset) so the deployed edge model is the CQ-specific CNN.
+    pub fn prepare(cfg: &Config, finetune_steps: usize) -> crate::Result<PjrtCtx> {
+        let engine = Engine::new(std::path::Path::new(&cfg.artifacts))?;
+        let mut params = engine.edge_pretrained()?;
+        if finetune_steps > 0 {
+            let trainer = engine.trainer()?;
+            let n = params.len();
+            let mask = MomentumSgd::head_only_mask(n, engine.manifest.edge_head_group);
+            let mut opt = MomentumSgd::new(&engine.manifest.edge_params, 0.005, mask);
+            let (pixels, labels) = finetune_corpus(cfg.query, 256, cfg.seed ^ 0xF1);
+            let batch = trainer.batch;
+            let px = trainer.img * trainer.img * 3;
+            let mut rng = Rng::new(cfg.seed ^ 0x7A);
+            let mut bpix = vec![0.0f32; batch * px];
+            let mut blab = vec![0i32; batch];
+            for _ in 0..finetune_steps {
+                for j in 0..batch {
+                    let k = rng.range_usize(0, labels.len());
+                    bpix[j * px..(j + 1) * px].copy_from_slice(&pixels[k * px..(k + 1) * px]);
+                    blab[j] = labels[k];
+                }
+                let out = trainer.grad_step(&params, &bpix, &blab)?;
+                opt.step(&mut params, &out.grads);
+            }
+        }
+        let edge_model = engine.edge_model(1, &params)?;
+        let cloud_model = engine.cloud_model(1, &engine.cloud_trained()?)?;
+        Ok(PjrtCtx { engine, edge_model, cloud_model })
+    }
+}
+
+/// Renderer-generated binary fine-tune corpus (query vs rest), balanced.
+pub fn finetune_corpus(query: ClassId, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    use crate::video::sprite::{render_sprite, SpriteParams};
+    let mut rng = Rng::new(seed);
+    let mut pixels = Vec::with_capacity(n * 32 * 32 * 3);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let positive = i % 2 == 0;
+        let cls = if positive {
+            query
+        } else {
+            loop {
+                let c = ClassId::from_index(rng.range_usize(0, 8)).unwrap();
+                if c != query {
+                    break c;
+                }
+            }
+        };
+        let sprite = render_sprite(&SpriteParams {
+            cls,
+            size: rng.range_usize(14, 31),
+            base: [rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95)],
+            accent: [rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95)],
+            bg: [0.42 + rng.range_f32(-0.08, 0.08), 0.45 + rng.range_f32(-0.08, 0.08), 0.42 + rng.range_f32(-0.08, 0.08)],
+            rot: rng.range_f32(-0.35, 0.35),
+            jx: rng.range_f32(-0.12, 0.12),
+            jy: rng.range_f32(-0.12, 0.12),
+            noise: rng.range_f32(0.02, 0.14),
+            seed: rng.next_u32(),
+        });
+        pixels.extend_from_slice(&sprite.resize(32, 32).data);
+        labels.push(positive as i32);
+    }
+    (pixels, labels)
+}
+
+/// One task flowing through the DES.
+#[derive(Clone)]
+struct SimTask {
+    #[allow(dead_code)]
+    id: u64,
+    t_capture: f64,
+    home_edge: u32,
+    /// Crop pixels (PJRT mode) — empty in synthetic mode.
+    crop: Vec<f32>,
+    wire_bytes: u64,
+    truth_positive: Option<bool>,
+    /// Precomputed oracle answer (what the cloud CNN says).
+    oracle_positive: bool,
+    /// Precomputed edge confidence (synthetic mode) or None (PJRT).
+    synth_confidence: Option<f32>,
+}
+
+/// DES events.
+enum Event {
+    /// Sample all cameras of all edges at this tick.
+    Sample,
+    /// A node finished its current classification.
+    NodeFinish { node: u32 },
+    /// An uplink finished its current transfer.
+    UplinkFinish { edge: u32 },
+    /// A failed edge comes back and resumes its queue.
+    NodeResume { node: u32 },
+}
+
+struct HeapKey(f64, u64);
+
+impl PartialEq for HeapKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0 && self.1 == other.1
+    }
+}
+impl Eq for HeapKey {}
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+/// Per-node (edge or cloud) queue state.
+struct NodeSim {
+    queue: VecDeque<SimTask>,
+    busy: bool,
+    estimator: LatencyEstimator,
+    speed: f64,
+}
+
+/// Per-edge uplink state.
+struct Uplink {
+    queue: VecDeque<SimTask>,
+    busy: bool,
+    /// Bytes waiting (including the in-flight transfer) — feeds the
+    /// controller's congestion signal and the allocator's cloud penalty.
+    queued_bytes: u64,
+}
+
+/// Result of one scheme run.
+pub struct SchemeResult {
+    pub row: SchemeRow,
+    pub latency: LatencyRecorder,
+    /// (verdict time, latency, home edge) triples — Figs. 6–8 (b)-(d).
+    pub per_frame: Vec<(f64, f64, u32)>,
+    pub vs_oracle: Confusion,
+    pub vs_truth: Confusion,
+    pub uploads: u64,
+    pub tasks: u64,
+    /// Mean doubtful-band width over the run (ablation diagnostics).
+    pub mean_band_width: f64,
+}
+
+/// Fault injection: an edge node goes dark for a time window. Tasks that
+/// would run there must be re-routed (SurveilEdge) or stall until
+/// recovery (schemes without an allocator) — an extension experiment
+/// beyond the paper's evaluation (DESIGN.md §8).
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeOutage {
+    pub edge: u32,
+    pub from: f64,
+    pub until: f64,
+}
+
+impl EdgeOutage {
+    pub fn covers(&self, t: f64, edge: u32) -> bool {
+        edge == self.edge && t >= self.from && t < self.until
+    }
+}
+
+/// The scheme runner.
+pub struct Harness {
+    pub cfg: Config,
+    pub times: ServiceTimes,
+    pub mode: ComputeMode,
+    /// Optional fault injection.
+    pub outage: Option<EdgeOutage>,
+}
+
+impl Harness {
+    pub fn new(cfg: Config, mode: ComputeMode) -> Harness {
+        Harness { cfg, times: ServiceTimes::default(), mode, outage: None }
+    }
+
+    pub fn with_outage(mut self, outage: EdgeOutage) -> Harness {
+        self.outage = Some(outage);
+        self
+    }
+
+    /// Run one scheme over the configured scenario.
+    pub fn run(&mut self, scheme: Scheme) -> crate::Result<SchemeResult> {
+        let cfg = self.cfg.clone();
+        let n_edges = cfg.edges.len() as u32;
+        let (frame_h, frame_w) = match &self.mode {
+            ComputeMode::Pjrt(ctx) => (ctx.engine.manifest.frame_h, ctx.engine.manifest.frame_w),
+            ComputeMode::Synthetic { .. } => (cfg.frame_h, cfg.frame_w),
+        };
+
+        // Cameras, assigned to edges in blocks.
+        let mut cameras = standard_deployment(cfg.total_cameras() as usize, frame_h, frame_w, cfg.seed);
+        let mut cam_edge: Vec<u32> = Vec::new();
+        for (ei, e) in cfg.edges.iter().enumerate() {
+            for _ in 0..e.cameras {
+                cam_edge.push(ei as u32 + 1);
+            }
+        }
+
+        // Node 0 = cloud; 1..=n = edges.
+        let mut nodes: Vec<NodeSim> = Vec::new();
+        nodes.push(NodeSim {
+            queue: VecDeque::new(),
+            busy: false,
+            estimator: LatencyEstimator::new(self.times.cloud_infer),
+            speed: cfg.cloud_speed,
+        });
+        for e in &cfg.edges {
+            nodes.push(NodeSim {
+                queue: VecDeque::new(),
+                busy: false,
+                estimator: LatencyEstimator::new(self.times.edge_infer / e.speed),
+                speed: e.speed,
+            });
+        }
+        let mut uplinks: Vec<Uplink> = (0..n_edges)
+            .map(|_| Uplink { queue: VecDeque::new(), busy: false, queued_bytes: 0 })
+            .collect();
+        let mut controllers: Vec<ThresholdController> = (0..n_edges)
+            .map(|_| match scheme {
+                Scheme::SurveilEdgeFixed => ThresholdController::fixed(),
+                _ => ThresholdController::new(
+                    0.8,
+                    ThresholdConfig { gamma1: cfg.gamma1, gamma2: cfg.gamma2, interval: cfg.interval },
+                ),
+            })
+            .collect();
+
+        // Detection state per camera: previous two sampled frames.
+        let mut prev_frames: Vec<Option<(Image, Image)>> = vec![None; cameras.len()];
+        let detect_cfg = DetectConfig::default();
+        let uplink_bps = cfg.uplink_mbps * 1_000_000.0 / 8.0;
+
+        let mut heap: EventHeap = BinaryHeap::new();
+        let mut events: EventMap = std::collections::HashMap::new();
+        let mut seq = 0u64;
+        schedule_ev(&mut heap, &mut events, &mut seq, cfg.interval, Event::Sample);
+
+        let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+        let mut next_task_id = 0u64;
+        let mut result = SchemeResult {
+            row: SchemeRow {
+                scheme: scheme.name().to_string(),
+                accuracy: 0.0,
+                avg_latency: 0.0,
+                bandwidth_mb: 0.0,
+            },
+            latency: LatencyRecorder::new(),
+            per_frame: Vec::new(),
+            vs_oracle: Confusion::default(),
+            vs_truth: Confusion::default(),
+            uploads: 0,
+            tasks: 0,
+            mean_band_width: 0.0,
+        };
+        let mut cloud_bytes = 0u64;
+        let mut band_width_acc = 0.0f64;
+        let mut band_width_n = 0u64;
+        // Drain horizon: keep serving queued tasks after the last sample.
+        let drain_until = cfg.duration + 60.0;
+
+        while let Some(Reverse((HeapKey(t, id), _))) = heap.pop() {
+            if t > drain_until {
+                break;
+            }
+            let ev = events.remove(&id).expect("event slot");
+            match ev {
+                Event::Sample => {
+                    if t + cfg.interval <= cfg.duration {
+                        schedule_ev(&mut heap, &mut events, &mut seq, t + cfg.interval, Event::Sample);
+                    }
+                    // Detect on every camera at this tick.
+                    for ci in 0..cameras.len() {
+                        let frame = cameras[ci].frame_at(t);
+                        let truth = cameras[ci].truth_at(t);
+                        let Some((f_prev2, f_prev)) = prev_frames[ci].take() else {
+                            prev_frames[ci] = Some((frame.image.clone(), frame.image));
+                            continue;
+                        };
+                        let dets = detect(&f_prev2, &f_prev, &frame.image, &detect_cfg);
+                        for det in dets {
+                            let bb = det.bbox.expand(detect_cfg.margin, frame_h, frame_w);
+                            let crop = f_prev
+                                .crop(bb.y0, bb.x0, bb.y1, bb.x1)
+                                .resize(detect_cfg.crop_size, detect_cfg.crop_size);
+                            // Ground truth by best-IoU match.
+                            let truth_cls = truth
+                                .iter()
+                                .map(|(c, tb)| (*c, det.bbox.iou(tb)))
+                                .filter(|(_, iou)| *iou > 0.2)
+                                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                                .map(|(c, _)| c);
+                            let (oracle_positive, synth_confidence) =
+                                self.judge(&crop, truth_cls, &mut rng)?;
+                            let task = SimTask {
+                                id: next_task_id,
+                                t_capture: t - cfg.interval, // crop comes from the middle frame
+                                home_edge: cam_edge[ci],
+                                crop: match &self.mode {
+                                    ComputeMode::Pjrt(_) => crop.data,
+                                    ComputeMode::Synthetic { .. } => Vec::new(),
+                                },
+                                wire_bytes: (bb.area() as u64) * 3 * HD_SCALE,
+                                truth_positive: truth_cls.map(|c| c == cfg.query),
+                                oracle_positive,
+                                synth_confidence,
+                            };
+                            next_task_id += 1;
+                            result.tasks += 1;
+                            // Route (eq. 7 or the scheme's fixed policy).
+                            let dest = self.route(scheme, task.home_edge, &nodes, &uplinks, &cfg, t);
+                            if dest.is_cloud() {
+                                cloud_bytes += task.wire_bytes;
+                                let e = (task.home_edge - 1) as usize;
+                                uplinks[e].queued_bytes += task.wire_bytes;
+                                uplinks[e].queue.push_back(task);
+                                kick_uplink(&mut uplinks, e, t, uplink_bps, &mut heap, &mut events, &mut seq);
+                            } else {
+                                enqueue_node(
+                                    &mut nodes,
+                                    dest.0 as usize,
+                                    task,
+                                    t,
+                                    &self.times,
+                                    self.outage,
+                                    &mut heap,
+                                    &mut events,
+                                    &mut seq,
+                                );
+                            }
+                        }
+                        prev_frames[ci] = Some((f_prev, frame.image));
+                    }
+                }
+                Event::NodeFinish { node } => {
+                    let n = node as usize;
+                    let task = nodes[n].queue.pop_front().expect("finish without task");
+                    nodes[n].busy = false;
+                    let service = service_time(node, &nodes[n], &self.times);
+                    nodes[n].estimator.observe(service);
+                    if node == 0 {
+                        // Cloud verdict: the oracle's answer, by definition.
+                        let latency = (t - task.t_capture) + cfg.rtt / 2.0;
+                        self.finish(
+                            &mut result,
+                            task.oracle_positive,
+                            task.oracle_positive,
+                            task.truth_positive,
+                            latency,
+                            t,
+                            task.home_edge,
+                        );
+                    } else {
+                        // Edge classify -> band decision.
+                        let conf = self.edge_confidence(&task)?;
+                        let e = (node - 1) as usize;
+                        {
+                            // Controller signal (eq. 8's l_d·t_d): the
+                            // expected latency of the *re-classification
+                            // path* a doubtful image would take — uplink
+                            // backlog + cloud queue — plus the local edge
+                            // wait. When uploads congest the uplink, the
+                            // band narrows; with headroom it widens.
+                            // Band width only changes the *upload* volume,
+                            // so the eq. 8 signal tracks the doubtful path:
+                            // uplink backlog + cloud queue + rtt. (Edge
+                            // queueing is the allocator's job, eq. 7.)
+                            let signal = uplinks[e].queued_bytes as f64 / uplink_bps
+                                + (nodes[0].queue.len() + nodes[0].busy as usize) as f64
+                                    * nodes[0].estimator.estimate()
+                                + cfg.rtt;
+                            // update() multiplies queue*t; feed the signal
+                            // as (1, signal) to keep the eq. 8 form.
+                            controllers[e].update(1, signal);
+                            band_width_acc += controllers[e].band_width();
+                            band_width_n += 1;
+                        }
+                        let decision = match scheme {
+                            Scheme::EdgeOnly => {
+                                if conf >= 0.5 {
+                                    BandDecision::Positive
+                                } else {
+                                    BandDecision::Negative
+                                }
+                            }
+                            _ => controllers[e].decide(conf),
+                        };
+                        match decision {
+                            BandDecision::Positive | BandDecision::Negative => {
+                                self.finish(
+                                    &mut result,
+                                    decision == BandDecision::Positive,
+                                    task.oracle_positive,
+                                    task.truth_positive,
+                                    t - task.t_capture,
+                                    t,
+                                    task.home_edge,
+                                );
+                            }
+                            BandDecision::Doubtful => {
+                                result.uploads += 1;
+                                cloud_bytes += task.wire_bytes;
+                                let home = task.home_edge;
+                                uplinks[(home - 1) as usize].queued_bytes += task.wire_bytes;
+                                uplinks[(home - 1) as usize].queue.push_back(task);
+                                kick_uplink(
+                                    &mut uplinks,
+                                    (home - 1) as usize,
+                                    t,
+                                    uplink_bps,
+                                    &mut heap,
+                                    &mut events,
+                                    &mut seq,
+                                );
+                            }
+                        }
+                    }
+                    // Start the next queued task, if any.
+                    start_if_idle(&mut nodes, n, t, &self.times, self.outage, &mut heap, &mut events, &mut seq);
+                }
+                Event::NodeResume { node } => {
+                    let n = node as usize;
+                    nodes[n].busy = false;
+                    start_if_idle(&mut nodes, n, t, &self.times, self.outage, &mut heap, &mut events, &mut seq);
+                }
+                Event::UplinkFinish { edge } => {
+                    let e = edge as usize;
+                    let task = uplinks[e].queue.pop_front().expect("uplink finish without task");
+                    uplinks[e].queued_bytes = uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
+                    uplinks[e].busy = false;
+                    // Deliver to the cloud queue after half an RTT.
+                    enqueue_node(&mut nodes, 0, task, t + cfg.rtt / 2.0, &self.times, self.outage, &mut heap, &mut events, &mut seq);
+                    kick_uplink(&mut uplinks, e, t, uplink_bps, &mut heap, &mut events, &mut seq);
+                }
+            }
+        }
+
+        let f2 = result.vs_oracle.f2();
+        result.row.accuracy = f2;
+        result.row.avg_latency = result.latency.mean();
+        result.row.bandwidth_mb = cloud_bytes as f64 / (1024.0 * 1024.0);
+        result.mean_band_width = if band_width_n > 0 {
+            band_width_acc / band_width_n as f64
+        } else {
+            0.0
+        };
+        Ok(result)
+    }
+
+    /// Routing policy per scheme.
+    fn route(
+        &self,
+        scheme: Scheme,
+        home: u32,
+        nodes: &[NodeSim],
+        uplinks: &[Uplink],
+        cfg: &Config,
+        t: f64,
+    ) -> NodeId {
+        match scheme {
+            Scheme::CloudOnly => NodeId::CLOUD,
+            Scheme::EdgeOnly | Scheme::SurveilEdgeFixed => NodeId(home),
+            Scheme::SurveilEdge => {
+                // eq. 7 over {home edge first, other edges, cloud}; edges
+                // under an injected outage are not candidates.
+                let dead = |e: u32| self.outage.map_or(false, |o| o.covers(t, e));
+                let mut cands: Vec<NodeLoad> = Vec::with_capacity(nodes.len());
+                if !dead(home) {
+                    cands.push(node_load(home, &nodes[home as usize], 0.0));
+                }
+                for i in 1..nodes.len() as u32 {
+                    if i != home && !dead(i) {
+                        cands.push(node_load(i, &nodes[i as usize], 0.0));
+                    }
+                }
+                // Cloud penalty: rtt + typical crop transfer + current
+                // uplink backlog on this edge's link.
+                let backlog = uplinks[(home - 1) as usize].queued_bytes as f64;
+                let upload = cfg.rtt
+                    + (backlog + 24.0 * 24.0 * 3.0 * HD_SCALE as f64)
+                        / (cfg.uplink_mbps * 125_000.0);
+                cands.push(node_load(0, &nodes[0], upload));
+                allocate(&cands).unwrap_or(NodeId(home))
+            }
+        }
+    }
+
+    /// Oracle answer + synthetic confidence for a new task.
+    fn judge(
+        &mut self,
+        crop: &Image,
+        truth: Option<ClassId>,
+        rng: &mut Rng,
+    ) -> crate::Result<(bool, Option<f32>)> {
+        let query = self.cfg.query;
+        match &mut self.mode {
+            ComputeMode::Pjrt(ctx) => {
+                let probs = ctx.cloud_model.infer(&crop.data)?;
+                let best = probs[0]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(usize::MAX);
+                Ok((best == query.index(), None))
+            }
+            ComputeMode::Synthetic { sharpness, edge_flip, oracle_acc } => {
+                let truth_pos = truth.map(|c| c == query).unwrap_or(false);
+                let oracle = if rng.bool(*oracle_acc) { truth_pos } else { !truth_pos };
+                // Hard examples ("flips") are seen as the wrong class but
+                // with diluted confidence — most land in the doubtful band
+                // (where the cloud can rescue them), some are confidently
+                // wrong (the edge-only accuracy ceiling), matching the
+                // calibration profile of the paper's CQ-CNN.
+                let (seen_as, sharp) = if rng.bool(*edge_flip) {
+                    (!truth_pos, (*sharpness / 3.0).max(1.0))
+                } else {
+                    (truth_pos, *sharpness)
+                };
+                let conf = synth_confidence(rng, seen_as, sharp);
+                Ok((oracle, Some(conf)))
+            }
+        }
+    }
+
+    /// Edge CNN confidence for a task at classify time.
+    fn edge_confidence(&mut self, task: &SimTask) -> crate::Result<f32> {
+        match &mut self.mode {
+            ComputeMode::Pjrt(ctx) => {
+                let probs = ctx.edge_model.infer(&task.crop)?;
+                Ok(probs[0].get(1).copied().unwrap_or(0.0))
+            }
+            ComputeMode::Synthetic { .. } => Ok(task.synth_confidence.unwrap_or(0.0)),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn finish(
+        &mut self,
+        result: &mut SchemeResult,
+        positive: bool,
+        oracle: bool,
+        truth: Option<bool>,
+        latency: f64,
+        t: f64,
+        home_edge: u32,
+    ) {
+        result.vs_oracle.record(positive, oracle);
+        if let Some(tr) = truth {
+            result.vs_truth.record(positive, tr);
+        }
+        result.latency.record(latency);
+        result.per_frame.push((t, latency, home_edge));
+    }
+}
+
+fn node_load(id: u32, sim: &NodeSim, penalty: f64) -> NodeLoad {
+    NodeLoad {
+        node: NodeId(id),
+        queue: sim.queue.len() + sim.busy as usize,
+        t_infer: sim.estimator.estimate(),
+        penalty,
+    }
+}
+
+fn service_time(node: u32, sim: &NodeSim, times: &ServiceTimes) -> f64 {
+    if node == 0 {
+        times.cloud_infer / sim.speed
+    } else {
+        times.edge_infer / sim.speed
+    }
+}
+
+type EventHeap = BinaryHeap<Reverse<(HeapKey, u8)>>;
+type EventMap = std::collections::HashMap<u64, Event>;
+
+fn schedule_ev(heap: &mut EventHeap, events: &mut EventMap, seq: &mut u64, t: f64, ev: Event) {
+    events.insert(*seq, ev);
+    heap.push(Reverse((HeapKey(t, *seq), 0)));
+    *seq += 1;
+}
+
+#[allow(clippy::too_many_arguments)]
+fn enqueue_node(
+    nodes: &mut [NodeSim],
+    n: usize,
+    task: SimTask,
+    t: f64,
+    times: &ServiceTimes,
+    outage: Option<EdgeOutage>,
+    heap: &mut EventHeap,
+    events: &mut EventMap,
+    seq: &mut u64,
+) {
+    nodes[n].queue.push_back(task);
+    start_if_idle(nodes, n, t, times, outage, heap, events, seq);
+}
+
+fn start_if_idle(
+    nodes: &mut [NodeSim],
+    n: usize,
+    t: f64,
+    times: &ServiceTimes,
+    outage: Option<EdgeOutage>,
+    heap: &mut EventHeap,
+    events: &mut EventMap,
+    seq: &mut u64,
+) {
+    if nodes[n].busy || nodes[n].queue.is_empty() {
+        return;
+    }
+    // A dead edge holds its queue until recovery (cloud never fails here).
+    if let Some(o) = outage {
+        if n > 0 && o.covers(t, n as u32) {
+            nodes[n].busy = true; // freeze; resume event at recovery
+            schedule_ev(heap, events, seq, o.until, Event::NodeResume { node: n as u32 });
+            return;
+        }
+    }
+    nodes[n].busy = true;
+    let service = service_time(n as u32, &nodes[n], times);
+    schedule_ev(heap, events, seq, t + service, Event::NodeFinish { node: n as u32 });
+}
+
+fn kick_uplink(
+    uplinks: &mut [Uplink],
+    e: usize,
+    t: f64,
+    uplink_bps: f64,
+    heap: &mut EventHeap,
+    events: &mut EventMap,
+    seq: &mut u64,
+) {
+    if !uplinks[e].busy {
+        if let Some(front) = uplinks[e].queue.front() {
+            uplinks[e].busy = true;
+            let transfer = front.wire_bytes as f64 / uplink_bps.max(1.0);
+            schedule_ev(heap, events, seq, t + transfer, Event::UplinkFinish { edge: e as u32 });
+        }
+    }
+}
+
+/// Run all four schemes on one scenario (the paper's table layout).
+pub fn run_all_schemes(
+    cfg: &Config,
+    mode_factory: &mut dyn FnMut() -> crate::Result<ComputeMode>,
+) -> crate::Result<Vec<SchemeResult>> {
+    Scheme::all()
+        .into_iter()
+        .map(|scheme| {
+            let mode = mode_factory()?;
+            let mut h = Harness::new(cfg.clone(), mode);
+            h.run(scheme)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_mode() -> ComputeMode {
+        ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+    }
+
+    fn small_cfg() -> Config {
+        Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() }
+    }
+
+    #[test]
+    fn single_edge_schemes_have_expected_shape() {
+        let cfg = small_cfg();
+        let run = |scheme| {
+            let mut h = Harness::new(cfg.clone(), synth_mode());
+            h.run(scheme).unwrap()
+        };
+        let se = run(Scheme::SurveilEdge);
+        let eo = run(Scheme::EdgeOnly);
+        let co = run(Scheme::CloudOnly);
+        assert!(se.tasks > 10, "too few tasks: {}", se.tasks);
+        // Cloud-only: accuracy 1.0 (oracle == verdict), max bandwidth.
+        assert!((co.row.accuracy - 1.0).abs() < 1e-9, "cloud-only F2 {}", co.row.accuracy);
+        assert!(co.row.bandwidth_mb > se.row.bandwidth_mb, "cloud-only must use most bandwidth");
+        // Edge-only: zero bandwidth, lowest accuracy.
+        assert_eq!(eo.row.bandwidth_mb, 0.0);
+        assert!(eo.row.accuracy <= se.row.accuracy + 0.05, "edge-only {} vs SE {}", eo.row.accuracy, se.row.accuracy);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg();
+        let mut h1 = Harness::new(cfg.clone(), synth_mode());
+        let mut h2 = Harness::new(cfg, synth_mode());
+        let a = h1.run(Scheme::SurveilEdge).unwrap();
+        let b = h2.run(Scheme::SurveilEdge).unwrap();
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.latency.len(), b.latency.len());
+        assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_tasks_get_verdicts() {
+        let cfg = small_cfg();
+        let mut h = Harness::new(cfg, synth_mode());
+        let r = h.run(Scheme::SurveilEdge).unwrap();
+        // Every emitted task is eventually answered (drain horizon).
+        assert_eq!(r.latency.len() as u64, r.tasks);
+    }
+
+    #[test]
+    fn heterogeneous_edge_only_slower_than_surveiledge() {
+        let cfg = Config { duration: 120.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
+        let mut h1 = Harness::new(cfg.clone(), synth_mode());
+        let eo = h1.run(Scheme::EdgeOnly).unwrap();
+        let mut h2 = Harness::new(cfg, synth_mode());
+        let se = h2.run(Scheme::SurveilEdge).unwrap();
+        assert!(
+            se.row.avg_latency < eo.row.avg_latency,
+            "SurveilEdge {} should beat edge-only {}",
+            se.row.avg_latency,
+            eo.row.avg_latency
+        );
+    }
+
+    #[test]
+    fn finetune_corpus_shapes() {
+        let (px, lb) = finetune_corpus(ClassId::Moped, 64, 3);
+        assert_eq!(px.len(), 64 * 32 * 32 * 3);
+        assert_eq!(lb.len(), 64);
+        assert_eq!(lb.iter().filter(|&&l| l == 1).count(), 32);
+    }
+}

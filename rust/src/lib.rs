@@ -1,0 +1,41 @@
+//! SurveilEdge: real-time cloud–edge surveillance video query.
+//!
+//! Reproduction of *SurveilEdge: Real-time Video Query based on Collaborative
+//! Cloud-Edge Deep Learning* (Wang, Yang, Zhao — INFOCOM 2020) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: frame-difference
+//!   detection, the task allocator (`argmin Qᵢ·tᵢ`), α/β threshold
+//!   adaptation, latency estimation (eq. 17 + 3-parameter lognormal MLE),
+//!   camera clustering, the MQTT-like bus, the parameter DB, edge/cloud node
+//!   event loops, and the query coordinator.
+//! * **L2/L1 (build-time Python)** — EdgeCNN / CloudCNN / train-step /
+//!   frame-difference graphs, lowered once to HLO text (`artifacts/`).
+//! * **Runtime bridge** — [`runtime`] loads the HLO artifacts via the PJRT
+//!   CPU client (`xla` crate) and executes them from the request path.
+//!   Python is never on the request path.
+//!
+//! See `DESIGN.md` for the module inventory and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod benchkit;
+pub mod bus;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod detect;
+pub mod estimator;
+pub mod harness;
+pub mod metrics;
+pub mod nodes;
+pub mod paramdb;
+pub mod runtime;
+pub mod sched;
+pub mod simclock;
+pub mod testkit;
+pub mod trace;
+pub mod types;
+pub mod video;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

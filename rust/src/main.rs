@@ -1,0 +1,165 @@
+//! `surveiledge` CLI launcher.
+//!
+//! Subcommands:
+//!   run      — run one scheme on a scenario config, print the table row
+//!   tables   — reproduce the paper's Tables II/III/IV (all 4 schemes)
+//!   offline  — run the offline stage (profiles, clusters, datasets)
+//!   inspect  — print the artifact manifest summary
+//!   help     — usage
+//!
+//! (clap is not in the offline vendor set; flags are parsed by hand.)
+
+use std::path::Path;
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::coordinator::{offline_stage, OfflineConfig};
+use surveiledge::harness::{run_all_schemes, ComputeMode, Harness, PjrtCtx};
+use surveiledge::metrics::render_table;
+use surveiledge::runtime::service::InferenceService;
+use surveiledge::runtime::Manifest;
+use surveiledge::video::standard_deployment;
+
+const USAGE: &str = "\
+surveiledge — real-time cloud-edge video query (SurveilEdge reproduction)
+
+USAGE:
+  surveiledge run     [--config FILE] [--scheme NAME] [--pjrt] [--duration SECS]
+  surveiledge tables  [--setting single|homogeneous|heterogeneous] [--pjrt] [--duration SECS]
+  surveiledge offline [--cameras N] [--duration SECS] [--artifacts DIR]
+  surveiledge inspect [--artifacts DIR]
+  surveiledge help
+
+Schemes: SurveilEdge | fixed | edge-only | cloud-only
+--pjrt runs every classification through the PJRT artifacts (needs `make artifacts`);
+without it, calibrated synthetic confidences are used.";
+
+fn arg_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn load_config(args: &[String]) -> anyhow::Result<Config> {
+    let mut cfg = match arg_value(args, "--config") {
+        Some(path) => Config::from_file(Path::new(&path))?,
+        None => match arg_value(args, "--setting").as_deref() {
+            Some("homogeneous") => Config::homogeneous(),
+            Some("heterogeneous") => Config::heterogeneous(),
+            _ => Config::single_edge(),
+        },
+    };
+    if let Some(d) = arg_value(args, "--duration") {
+        cfg.duration = d.parse()?;
+    }
+    if let Some(dir) = arg_value(args, "--artifacts") {
+        cfg.artifacts = dir;
+    }
+    Ok(cfg)
+}
+
+fn mode_for(cfg: &Config, pjrt: bool) -> anyhow::Result<ComputeMode> {
+    if pjrt {
+        Ok(ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(cfg, 30)?)))
+    } else {
+        Ok(ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 })
+    }
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let scheme = arg_value(args, "--scheme")
+        .and_then(|s| Scheme::from_name(&s))
+        .unwrap_or(Scheme::SurveilEdge);
+    let mode = mode_for(&cfg, has_flag(args, "--pjrt"))?;
+    let mut h = Harness::new(cfg, mode);
+    let r = h.run(scheme)?;
+    println!("{}", render_table("result", std::slice::from_ref(&r.row)));
+    println!(
+        "tasks={} uploads={} p50={:.3}s p99={:.3}s std={:.3}s",
+        r.tasks,
+        r.uploads,
+        r.latency.percentile(0.5),
+        r.latency.percentile(0.99),
+        r.latency.std()
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let pjrt = has_flag(args, "--pjrt");
+    let title = match cfg.edges.len() {
+        1 => "Table II — single edge and cloud",
+        _ if cfg.edges.iter().all(|e| (e.speed - cfg.edges[0].speed).abs() < 1e-9) => {
+            "Table III — homogeneous edges and cloud"
+        }
+        _ => "Table IV — heterogeneous edges and cloud",
+    };
+    let results = run_all_schemes(&cfg, &mut || mode_for(&cfg, pjrt))?;
+    let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
+    println!("{}", render_table(title, &rows));
+    Ok(())
+}
+
+fn cmd_offline(args: &[String]) -> anyhow::Result<()> {
+    let n: usize = arg_value(args, "--cameras").and_then(|v| v.parse().ok()).unwrap_or(6);
+    let duration: f64 = arg_value(args, "--duration").and_then(|v| v.parse().ok()).unwrap_or(60.0);
+    let artifacts = arg_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let svc = InferenceService::spawn(artifacts.into(), vec![1])?;
+    let mut cams = standard_deployment(n, 96, 128, 33);
+    let stage = offline_stage(
+        &mut cams,
+        &svc.handle,
+        &OfflineConfig { duration, ..OfflineConfig::default() },
+    )?;
+    println!("camera profiles (proportion vectors):");
+    for p in &stage.profiles {
+        let v: Vec<String> = p.proportions.iter().map(|x| format!("{x:.2}")).collect();
+        println!(
+            "  cam{:<2} cluster {} [{}]",
+            p.camera.0,
+            stage.clustering.assignment[p.camera.0 as usize],
+            v.join(" ")
+        );
+    }
+    for (i, ds) in stage.datasets.iter().enumerate() {
+        println!("cluster {i}: {} labeled crops", ds.crops.len());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {
+    let dir = arg_value(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let m = Manifest::load(Path::new(&dir))?;
+    println!("artifact bundle at {dir}:");
+    println!("  img={}x{}x3  frame={}x{}", m.img, m.img, m.frame_h, m.frame_w);
+    println!("  classes: {}", m.classes.join(", "));
+    println!("  edge params: {} tensors", m.edge_params.len());
+    println!("  cloud params: {} tensors", m.cloud_params.len());
+    let mut names: Vec<_> = m.artifacts.keys().collect();
+    names.sort();
+    for name in names {
+        println!("  artifact {name} -> {}", m.artifacts[name]);
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("tables") => cmd_tables(&args[1..]),
+        Some("offline") => cmd_offline(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,371 @@
+//! Query-quality and performance metrics (paper §V-A).
+//!
+//! * [`Confusion`] — precision, recall, and the paper's F_λ score (they
+//!   report F₂, weighting recall over precision).
+//! * [`LatencyRecorder`] — per-frame query latencies: mean/percentiles,
+//!   PDF histograms (Figs. 6–8 (a)), and the raw per-frame series
+//!   (Figs. 6–8 (b)–(d)).
+//! * [`BandwidthMeter`] — bytes uploaded to the Cloud per scheme.
+//! * table renderers used by the bench harness to print paper-style rows.
+
+use std::collections::HashMap;
+
+/// Binary confusion counts for query answers.
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn record(&mut self, predicted: bool, actual: bool) {
+        match (predicted, actual) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            // No positive predictions: undefined; report 1 so F-score is
+            // driven by recall (conventional for sparse queries).
+            return 1.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 1.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    /// F_λ = (1+λ²)·p·r / (λ²·p + r) — the paper's accuracy metric with
+    /// λ=2 (recall-weighted).
+    pub fn f_score(&self, lambda: f64) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        let l2 = lambda * lambda;
+        if p <= 0.0 && r <= 0.0 {
+            return 0.0;
+        }
+        (1.0 + l2) * p * r / (l2 * p + r)
+    }
+
+    pub fn f2(&self) -> f64 {
+        self.f_score(2.0)
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 1.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+}
+
+/// Latency series + summary statistics.
+#[derive(Clone, Default, Debug)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> LatencyRecorder {
+        LatencyRecorder { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, latency: f64) {
+        if latency.is_finite() && latency >= 0.0 {
+            self.samples.push(latency);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Raw per-frame series in arrival order (Figs. 6–8 line plots).
+    pub fn series(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q.clamp(0.0, 1.0)) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx]
+    }
+
+    /// Empirical PDF over `bins` equal-width bins on [0, max] — the data
+    /// behind Figs. 6–8 (a). Returns (bin_centres, densities).
+    pub fn pdf(&self, bins: usize) -> (Vec<f64>, Vec<f64>) {
+        let bins = bins.max(1);
+        if self.samples.is_empty() {
+            return (vec![0.0; bins], vec![0.0; bins]);
+        }
+        let hi = self.max().max(1e-9);
+        let width = hi / bins as f64;
+        let mut counts = vec![0usize; bins];
+        for &s in &self.samples {
+            let b = ((s / width) as usize).min(bins - 1);
+            counts[b] += 1;
+        }
+        let n = self.samples.len() as f64;
+        let centres = (0..bins).map(|i| (i as f64 + 0.5) * width).collect();
+        let dens = counts.iter().map(|&c| c as f64 / (n * width)).collect();
+        (centres, dens)
+    }
+}
+
+/// Upload-bandwidth accounting, per destination.
+#[derive(Clone, Default, Debug)]
+pub struct BandwidthMeter {
+    by_link: HashMap<String, u64>,
+}
+
+impl BandwidthMeter {
+    pub fn new() -> BandwidthMeter {
+        BandwidthMeter::default()
+    }
+
+    pub fn add(&mut self, link: &str, bytes: u64) {
+        *self.by_link.entry(link.to_string()).or_insert(0) += bytes;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.by_link.values().sum()
+    }
+
+    /// Bytes on links whose name contains "cloud" — the paper's
+    /// "bandwidth cost" is edge→cloud upload volume.
+    pub fn cloud_bytes(&self) -> u64 {
+        self.by_link
+            .iter()
+            .filter(|(k, _)| k.contains("cloud"))
+            .map(|(_, v)| *v)
+            .sum()
+    }
+
+    pub fn mb(bytes: u64) -> f64 {
+        bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// One row of a paper-style results table (Tables II–IV).
+#[derive(Clone, Debug)]
+pub struct SchemeRow {
+    pub scheme: String,
+    /// F2 accuracy vs the ground-truth CNN, in [0,1].
+    pub accuracy: f64,
+    pub avg_latency: f64,
+    pub bandwidth_mb: f64,
+}
+
+/// Render rows as the paper's table layout (markdown).
+pub fn render_table(title: &str, rows: &[SchemeRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("### {title}\n\n"));
+    out.push_str("| scheme | accuracy | average latency | bandwidth cost |\n");
+    out.push_str("|--------|----------|-----------------|----------------|\n");
+    for r in rows {
+        out.push_str(&format!(
+            "| {} | {:.2}% | {:.3}s | {:.1} MB |\n",
+            r.scheme,
+            r.accuracy * 100.0,
+            r.avg_latency,
+            r.bandwidth_mb
+        ));
+    }
+    out
+}
+
+/// Render a PDF or series as CSV (figure data dumps).
+pub fn render_csv(headers: &[&str], columns: &[&[f64]]) -> String {
+    assert!(!columns.is_empty());
+    let rows = columns.iter().map(|c| c.len()).max().unwrap_or(0);
+    let mut out = headers.join(",");
+    out.push('\n');
+    for i in 0..rows {
+        let line: Vec<String> = columns
+            .iter()
+            .map(|c| c.get(i).map_or(String::new(), |v| format!("{v:.6}")))
+            .collect();
+        out.push_str(&line.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    #[test]
+    fn confusion_counts() {
+        let mut c = Confusion::default();
+        c.record(true, true);
+        c.record(true, false);
+        c.record(false, true);
+        c.record(false, false);
+        assert_eq!((c.tp, c.fp, c.fn_, c.tn), (1, 1, 1, 1));
+        assert_eq!(c.total(), 4);
+        assert!((c.precision() - 0.5).abs() < 1e-12);
+        assert!((c.recall() - 0.5).abs() < 1e-12);
+        assert!((c.accuracy() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_equals_harmonic_mean() {
+        let c = Confusion { tp: 8, fp: 2, tn: 5, fn_: 4 };
+        let p = c.precision();
+        let r = c.recall();
+        let f1 = c.f_score(1.0);
+        assert!((f1 - 2.0 * p * r / (p + r)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f2_weights_recall() {
+        // High precision / low recall should score worse under F2 than the
+        // mirrored case.
+        let high_p = Confusion { tp: 5, fp: 0, tn: 10, fn_: 5 }; // p=1, r=0.5
+        let high_r = Confusion { tp: 10, fp: 10, tn: 0, fn_: 0 }; // p=0.5, r=1
+        assert!(high_r.f2() > high_p.f2());
+    }
+
+    #[test]
+    fn perfect_scores() {
+        let c = Confusion { tp: 10, fp: 0, tn: 10, fn_: 0 };
+        assert_eq!(c.f2(), 1.0);
+        assert_eq!(c.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn prop_fscore_bounded() {
+        check("fscore_bounded", |rng, _| {
+            let c = Confusion {
+                tp: rng.range_usize(0, 100) as u64,
+                fp: rng.range_usize(0, 100) as u64,
+                tn: rng.range_usize(0, 100) as u64,
+                fn_: rng.range_usize(0, 100) as u64,
+            };
+            for lambda in [0.5, 1.0, 2.0] {
+                let f = c.f_score(lambda);
+                assert!((0.0..=1.0).contains(&f), "F_{lambda} = {f} for {c:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn latency_stats() {
+        let mut r = LatencyRecorder::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            r.record(v);
+        }
+        assert_eq!(r.len(), 4);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert!((r.variance() - 1.25).abs() < 1e-12);
+        assert_eq!(r.max(), 4.0);
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 4.0);
+    }
+
+    #[test]
+    fn latency_rejects_garbage() {
+        let mut r = LatencyRecorder::new();
+        r.record(f64::NAN);
+        r.record(-1.0);
+        r.record(f64::INFINITY);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let mut r = LatencyRecorder::new();
+        let mut rng = crate::testkit::Rng::new(1);
+        for _ in 0..500 {
+            r.record(rng.lognormal3(-0.5, 0.5, 0.1));
+        }
+        let (centres, dens) = r.pdf(20);
+        assert_eq!(centres.len(), 20);
+        let width = centres[1] - centres[0];
+        let integral: f64 = dens.iter().map(|d| d * width).sum();
+        assert!((integral - 1.0).abs() < 1e-6, "integral {integral}");
+    }
+
+    #[test]
+    fn bandwidth_cloud_accounting() {
+        let mut bw = BandwidthMeter::new();
+        bw.add("edge1->cloud", 1024);
+        bw.add("edge2->cloud", 2048);
+        bw.add("edge1->edge2", 4096);
+        assert_eq!(bw.cloud_bytes(), 3072);
+        assert_eq!(bw.total(), 7168);
+        assert!((BandwidthMeter::mb(1024 * 1024) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let rows = vec![
+            SchemeRow { scheme: "SurveilEdge".into(), accuracy: 0.884, avg_latency: 1.018, bandwidth_mb: 1129.5 },
+            SchemeRow { scheme: "cloud-only".into(), accuracy: 1.0, avg_latency: 14.823, bandwidth_mb: 3400.3 },
+        ];
+        let t = render_table("Table II", &rows);
+        assert!(t.contains("SurveilEdge"));
+        assert!(t.contains("88.40%"));
+        assert!(t.contains("14.823s"));
+    }
+
+    #[test]
+    fn csv_ragged_columns() {
+        let a = [1.0, 2.0];
+        let b = [3.0];
+        let csv = render_csv(&["x", "y"], &[&a, &b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "x,y");
+        assert!(lines[2].starts_with("2.0"));
+        assert!(lines[2].ends_with(','));
+    }
+}

@@ -1,0 +1,498 @@
+//! Edge and cloud node event loops (live threaded serving).
+//!
+//! An [`EdgeWorker`] owns the classification side of one edge device: it
+//! classifies detected objects with the deployed CQ-specific CNN, applies
+//! the [β, α] band, and uploads doubtful crops to the cloud over the bus.
+//! The [`CloudWorker`] serves re-classification requests with the
+//! high-accuracy CNN. Both publish verdicts on `verdict/#` and replicate
+//! scheduler state (α, β, tᵢ, Qᵢ) through the [`crate::paramdb`].
+//!
+//! The experiment harness (`crate::harness`) drives the same decision code
+//! in discrete-event time for the paper's tables; these workers are what
+//! `examples/e2e_query.rs` runs live with real threads.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::bus::{Broker, Message, QoS};
+use crate::config::Scheme;
+use crate::estimator::LatencyEstimator;
+use crate::metrics::{BandwidthMeter, Confusion, LatencyRecorder};
+use crate::paramdb::{ParamDb, Value};
+use crate::runtime::service::ServiceHandle;
+use crate::sched::{BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
+use crate::types::{ClassId, NodeId, Task, Verdict, Where};
+
+/// Shared, thread-safe view of one node's scheduler state.
+pub struct NodeState {
+    pub id: NodeId,
+    /// Queue length Qᵢ (tasks admitted, not yet answered).
+    pub queue: AtomicU64,
+    /// Latency estimator for tᵢ.
+    pub estimator: Mutex<LatencyEstimator>,
+}
+
+impl NodeState {
+    pub fn new(id: NodeId, initial_latency: f64) -> Arc<NodeState> {
+        Arc::new(NodeState {
+            id,
+            queue: AtomicU64::new(0),
+            estimator: Mutex::new(LatencyEstimator::new(initial_latency)),
+        })
+    }
+
+    pub fn load(&self) -> NodeLoad {
+        NodeLoad {
+            node: self.id,
+            queue: self.queue.load(Ordering::Relaxed) as usize,
+            t_infer: self.estimator.lock().unwrap().estimate(),
+            penalty: 0.0,
+        }
+    }
+
+    /// Publish Qᵢ and tᵢ into the parameter DB (paper §IV-D-1: every
+    /// update triggers replication).
+    pub fn publish(&self, db: &ParamDb) {
+        db.put(&ParamDb::key_q(self.id.0), Value::U64(self.queue.load(Ordering::Relaxed)));
+        db.put(
+            &ParamDb::key_t(self.id.0),
+            Value::F64(self.estimator.lock().unwrap().estimate()),
+        );
+    }
+}
+
+/// Build a final verdict for a task.
+pub fn verdict_from(
+    task: &Task,
+    confidence: f32,
+    positive: bool,
+    decided_at: Where,
+    now: f64,
+    query: ClassId,
+    oracle_positive: Option<bool>,
+) -> Verdict {
+    Verdict {
+        task_id: task.id,
+        camera: task.camera,
+        frame_seq: task.frame_seq,
+        positive,
+        confidence,
+        decided_at,
+        latency: now - task.t_capture,
+        truth_positive: task.truth.map(|t| t == query),
+        oracle_positive,
+    }
+}
+
+/// Aggregated per-run counters shared by the nodes.
+#[derive(Default)]
+pub struct RunMetrics {
+    /// Accuracy vs the ground-truth (cloud) CNN — the paper's metric.
+    pub vs_oracle: Mutex<Confusion>,
+    /// Accuracy vs the synthetic ground truth (extra diagnostic).
+    pub vs_truth: Mutex<Confusion>,
+    pub latency: Mutex<LatencyRecorder>,
+    pub bandwidth: Mutex<BandwidthMeter>,
+    pub uploads: AtomicU64,
+    pub answered_at_edge: AtomicU64,
+    /// Tasks uploaded but not yet answered by the cloud — the l_d (d =
+    /// cloud) term of the eq. 8 controller signal in live mode.
+    pub cloud_backlog: AtomicU64,
+}
+
+impl RunMetrics {
+    pub fn record_verdict(&self, v: &Verdict) {
+        if let Some(oracle) = v.oracle_positive {
+            self.vs_oracle.lock().unwrap().record(v.positive, oracle);
+        }
+        if let Some(truth) = v.truth_positive {
+            self.vs_truth.lock().unwrap().record(v.positive, truth);
+        }
+        self.latency.lock().unwrap().record(v.latency);
+        match v.decided_at {
+            Where::Edge(_) => {
+                self.answered_at_edge.fetch_add(1, Ordering::Relaxed);
+            }
+            Where::Cloud => {
+                self.uploads.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The per-edge classification worker (live mode).
+pub struct EdgeWorker {
+    pub state: Arc<NodeState>,
+    pub scheme: Scheme,
+    pub controller: Mutex<ThresholdController>,
+    pub service: ServiceHandle,
+    pub broker: Broker,
+    pub db: ParamDb,
+    pub metrics: Arc<RunMetrics>,
+    pub query: ClassId,
+    /// Slowdown multiplier (1.0 = host speed; the paper's Docker core
+    /// limits become service-time multipliers here).
+    pub slowdown: f64,
+}
+
+impl EdgeWorker {
+    /// Process one task fully. Returns the verdict if answered at the
+    /// edge, `None` if the crop was uploaded for cloud re-classification.
+    pub fn classify(&self, task: Task, now_fn: &dyn Fn() -> f64) -> crate::Result<Option<Verdict>> {
+        let t0 = now_fn();
+        let probs = self.service.edge_infer(self.state.id.0, task.crop.data.clone())?;
+        let confidence = probs.get(1).copied().unwrap_or(0.0);
+        // Heterogeneity: pad the measured service time by the slowdown.
+        let measured = now_fn() - t0;
+        if self.slowdown > 1.0 {
+            let pad = measured * (self.slowdown - 1.0);
+            if pad > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(pad.min(0.5)));
+            }
+        }
+        // Controller update (eqs. 8–9). The band only modulates *upload*
+        // volume, so l_d·t_d is evaluated for d = cloud: outstanding
+        // uploads x the cloud's advertised per-task latency (replicated
+        // via the parameter DB), plus the local wait.
+        {
+            let mut ctl = self.controller.lock().unwrap();
+            let backlog = self.metrics.cloud_backlog.load(Ordering::Relaxed) as usize;
+            let t_cloud = self.db.get_f64(&ParamDb::key_t(0)).unwrap_or(0.001);
+            let q_local = self.state.queue.load(Ordering::Relaxed) as usize;
+            let t_local = self.state.estimator.lock().unwrap().estimate();
+            ctl.update(1, backlog as f64 * t_cloud + q_local as f64 * t_local);
+            self.db.put(ParamDb::key_alpha(), Value::F64(ctl.alpha));
+            self.db.put(ParamDb::key_beta(), Value::F64(ctl.beta));
+        }
+        // Feedback for tᵢ (eq. 17 fast path + lognormal window).
+        self.state
+            .estimator
+            .lock()
+            .unwrap()
+            .observe((now_fn() - t0).max(1e-6));
+        self.state.publish(&self.db);
+
+        let decision = match self.scheme {
+            // No cloud available: hard 0.5 decision at the edge.
+            Scheme::EdgeOnly => {
+                if confidence >= 0.5 {
+                    BandDecision::Positive
+                } else {
+                    BandDecision::Negative
+                }
+            }
+            _ => self.controller.lock().unwrap().decide(confidence),
+        };
+        match decision {
+            BandDecision::Positive | BandDecision::Negative => {
+                let v = verdict_from(
+                    &task,
+                    confidence,
+                    decision == BandDecision::Positive,
+                    Where::Edge(self.state.id),
+                    now_fn(),
+                    self.query,
+                    None,
+                );
+                self.metrics.record_verdict(&v);
+                self.broker.publish(
+                    Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
+                    QoS::AtMostOnce,
+                );
+                Ok(Some(v))
+            }
+            BandDecision::Doubtful => {
+                self.metrics
+                    .bandwidth
+                    .lock()
+                    .unwrap()
+                    .add(&format!("{}->cloud", self.state.id), task.crop.wire_bytes());
+                self.metrics.cloud_backlog.fetch_add(1, Ordering::Relaxed);
+                let payload = encode_task(&task, confidence);
+                self.broker
+                    .publish(Message::new("task/cloud", payload), QoS::AtLeastOnce);
+                Ok(None)
+            }
+        }
+    }
+}
+
+/// Compact wire encodings for bus traffic. Fixed little-endian layout
+/// (no serde in the vendor set); covered by round-trip tests.
+pub fn encode_task(task: &Task, confidence: f32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(44 + task.crop.data.len() * 4);
+    out.extend_from_slice(&task.id.to_le_bytes());
+    out.extend_from_slice(&task.camera.0.to_le_bytes());
+    out.extend_from_slice(&task.frame_seq.to_le_bytes());
+    out.extend_from_slice(&task.t_capture.to_le_bytes());
+    out.extend_from_slice(&confidence.to_le_bytes());
+    out.extend_from_slice(&(task.truth.map_or(u32::MAX, |c| c.index() as u32)).to_le_bytes());
+    out.extend_from_slice(&(task.crop.h as u32).to_le_bytes());
+    out.extend_from_slice(&(task.crop.w as u32).to_le_bytes());
+    for v in &task.crop.data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decoded upload: task + the edge's confidence.
+pub struct UploadedTask {
+    pub task: Task,
+    pub edge_confidence: f32,
+}
+
+pub fn decode_task(bytes: &[u8]) -> crate::Result<UploadedTask> {
+    anyhow::ensure!(bytes.len() >= 44, "short task payload");
+    let mut off = 0usize;
+    let mut take = |n: usize| {
+        let s = &bytes[off..off + n];
+        off += n;
+        s
+    };
+    let id = u64::from_le_bytes(take(8).try_into()?);
+    let camera = u32::from_le_bytes(take(4).try_into()?);
+    let frame_seq = u64::from_le_bytes(take(8).try_into()?);
+    let t_capture = f64::from_le_bytes(take(8).try_into()?);
+    let confidence = f32::from_le_bytes(take(4).try_into()?);
+    let truth_raw = u32::from_le_bytes(take(4).try_into()?);
+    let h = u32::from_le_bytes(take(4).try_into()?) as usize;
+    let w = u32::from_le_bytes(take(4).try_into()?) as usize;
+    anyhow::ensure!(bytes.len() == 44 + h * w * 3 * 4, "task payload size mismatch");
+    let mut data = Vec::with_capacity(h * w * 3);
+    for chunk in bytes[44..].chunks_exact(4) {
+        data.push(f32::from_le_bytes(chunk.try_into()?));
+    }
+    Ok(UploadedTask {
+        task: Task {
+            id,
+            camera: crate::types::CameraId(camera),
+            frame_seq,
+            t_capture,
+            t_detected: t_capture,
+            bbox: crate::types::BBox { y0: 0, x0: 0, y1: h, x1: w },
+            crop: crate::types::Image { h, w, data },
+            truth: if truth_raw == u32::MAX {
+                None
+            } else {
+                ClassId::from_index(truth_raw as usize)
+            },
+        },
+        edge_confidence: confidence,
+    })
+}
+
+pub fn encode_verdict(v: &Verdict) -> Vec<u8> {
+    let mut out = Vec::with_capacity(33);
+    out.extend_from_slice(&v.task_id.to_le_bytes());
+    out.extend_from_slice(&v.camera.0.to_le_bytes());
+    out.extend_from_slice(&v.frame_seq.to_le_bytes());
+    out.push(v.positive as u8);
+    out.extend_from_slice(&v.confidence.to_le_bytes());
+    out.extend_from_slice(&v.latency.to_le_bytes());
+    out
+}
+
+/// The cloud-side worker: consumes `task/cloud`, classifies with the
+/// high-accuracy CNN, publishes verdicts.
+pub struct CloudWorker {
+    pub state: Arc<NodeState>,
+    pub service: ServiceHandle,
+    pub broker: Broker,
+    pub db: ParamDb,
+    pub metrics: Arc<RunMetrics>,
+    pub query: ClassId,
+}
+
+impl CloudWorker {
+    pub fn classify(&self, up: UploadedTask, now_fn: &dyn Fn() -> f64) -> crate::Result<Verdict> {
+        let t0 = now_fn();
+        let probs = self.service.cloud_infer(up.task.crop.data.clone())?;
+        let qidx = self.query.index();
+        let positive = probs
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i == qidx)
+            .unwrap_or(false);
+        self.state
+            .estimator
+            .lock()
+            .unwrap()
+            .observe((now_fn() - t0).max(1e-6));
+        self.state.publish(&self.db);
+        // The cloud CNN *is* the paper's ground truth: oracle == its answer.
+        let v = verdict_from(
+            &up.task,
+            up.edge_confidence,
+            positive,
+            Where::Cloud,
+            now_fn(),
+            self.query,
+            Some(positive),
+        );
+        self.metrics.record_verdict(&v);
+        let backlog = &self.metrics.cloud_backlog;
+        let _ = backlog.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1));
+        self.broker
+            .publish(Message::new("verdict/cloud", encode_verdict(&v)), QoS::AtMostOnce);
+        Ok(v)
+    }
+}
+
+/// Build the allocator candidate list from the replicated parameter DB
+/// (paper eq. 7 over α/β/tᵢ/Qᵢ state). Local node first (tie-break).
+pub fn candidates_from_db(
+    db: &ParamDb,
+    local: NodeId,
+    n_edges: u32,
+    upload_penalty: f64,
+) -> Vec<NodeLoad> {
+    let mut ids: Vec<u32> = vec![local.0];
+    for e in 1..=n_edges {
+        if e != local.0 {
+            ids.push(e);
+        }
+    }
+    ids.push(0); // cloud last
+    ids.into_iter()
+        .map(|id| NodeLoad {
+            node: NodeId(id),
+            queue: db.get_u64(&ParamDb::key_q(id)).unwrap_or(0) as usize,
+            t_infer: db.get_f64(&ParamDb::key_t(id)).unwrap_or(0.5),
+            penalty: if id == 0 { upload_penalty } else { 0.0 },
+        })
+        .collect()
+}
+
+/// Controller factory per scheme.
+pub fn controller_for(scheme: Scheme, gamma1: f64, gamma2: f64, interval: f64) -> ThresholdController {
+    match scheme {
+        Scheme::SurveilEdgeFixed => ThresholdController::fixed(),
+        _ => ThresholdController::new(0.8, ThresholdConfig { gamma1, gamma2, interval }),
+    }
+}
+
+/// Stop flag shared across node threads.
+pub type StopFlag = Arc<AtomicBool>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::allocate;
+    use crate::types::{BBox, CameraId, Image};
+
+    fn demo_task(id: u64) -> Task {
+        let mut crop = Image::new(4, 5);
+        for (i, v) in crop.data.iter_mut().enumerate() {
+            *v = (i % 7) as f32 / 7.0;
+        }
+        Task {
+            id,
+            camera: CameraId(3),
+            frame_seq: 42,
+            t_capture: 1.5,
+            t_detected: 1.6,
+            bbox: BBox { y0: 0, x0: 0, y1: 4, x1: 5 },
+            crop,
+            truth: Some(ClassId::Moped),
+        }
+    }
+
+    #[test]
+    fn task_wire_roundtrip() {
+        let task = demo_task(9);
+        let bytes = encode_task(&task, 0.625);
+        let up = decode_task(&bytes).unwrap();
+        assert_eq!(up.task.id, 9);
+        assert_eq!(up.task.camera, CameraId(3));
+        assert_eq!(up.task.frame_seq, 42);
+        assert_eq!(up.task.t_capture, 1.5);
+        assert_eq!(up.edge_confidence, 0.625);
+        assert_eq!(up.task.truth, Some(ClassId::Moped));
+        assert_eq!(up.task.crop.data, task.crop.data);
+    }
+
+    #[test]
+    fn task_wire_roundtrip_no_truth() {
+        let mut task = demo_task(1);
+        task.truth = None;
+        let up = decode_task(&encode_task(&task, 0.5)).unwrap();
+        assert_eq!(up.task.truth, None);
+    }
+
+    #[test]
+    fn decode_rejects_short_or_mismatched() {
+        assert!(decode_task(&[0u8; 10]).is_err());
+        let task = demo_task(2);
+        let mut bytes = encode_task(&task, 0.5);
+        bytes.truncate(bytes.len() - 4);
+        assert!(decode_task(&bytes).is_err());
+    }
+
+    #[test]
+    fn verdict_latency_measured_from_capture() {
+        let task = demo_task(5);
+        let v = verdict_from(&task, 0.9, true, Where::Cloud, 4.0, ClassId::Moped, Some(true));
+        assert!((v.latency - 2.5).abs() < 1e-12);
+        assert_eq!(v.truth_positive, Some(true));
+    }
+
+    #[test]
+    fn run_metrics_aggregates() {
+        let m = RunMetrics::default();
+        let task = demo_task(6);
+        let pos = verdict_from(&task, 0.9, true, Where::Edge(NodeId(1)), 2.0, ClassId::Moped, Some(true));
+        let neg = verdict_from(&task, 0.2, false, Where::Cloud, 3.0, ClassId::Moped, Some(false));
+        m.record_verdict(&pos);
+        m.record_verdict(&neg);
+        assert_eq!(m.vs_oracle.lock().unwrap().total(), 2);
+        assert_eq!(m.latency.lock().unwrap().len(), 2);
+        assert_eq!(m.answered_at_edge.load(Ordering::Relaxed), 1);
+        assert_eq!(m.uploads.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn candidates_order_and_penalty() {
+        let db = ParamDb::new();
+        db.put(&ParamDb::key_q(1), Value::U64(5));
+        db.put(&ParamDb::key_t(1), Value::F64(0.3));
+        db.put(&ParamDb::key_q(2), Value::U64(1));
+        db.put(&ParamDb::key_t(2), Value::F64(0.4));
+        db.put(&ParamDb::key_q(0), Value::U64(0));
+        db.put(&ParamDb::key_t(0), Value::F64(0.05));
+        let c = candidates_from_db(&db, NodeId(2), 2, 0.7);
+        assert_eq!(c[0].node, NodeId(2), "local node must come first");
+        assert_eq!(c.last().unwrap().node, NodeId::CLOUD);
+        assert_eq!(c.last().unwrap().penalty, 0.7);
+        // Costs: edge2 = 0.4, edge1 = 1.5, cloud = 0.7 -> edge2 wins.
+        assert_eq!(allocate(&c), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn candidates_default_when_db_empty() {
+        let db = ParamDb::new();
+        let c = candidates_from_db(&db, NodeId(1), 3, 0.2);
+        assert_eq!(c.len(), 4);
+        assert!(c.iter().all(|l| l.queue == 0));
+    }
+
+    #[test]
+    fn controller_for_schemes() {
+        let fixed = controller_for(Scheme::SurveilEdgeFixed, 0.1, 0.25, 1.0);
+        assert_eq!(fixed.alpha, 0.8);
+        assert_eq!(fixed.beta, 0.1);
+        let adaptive = controller_for(Scheme::SurveilEdge, 0.1, 0.25, 1.0);
+        assert!(adaptive.alpha >= 0.5);
+        assert!(adaptive.beta < adaptive.alpha);
+    }
+
+    #[test]
+    fn node_state_publishes_to_db() {
+        let db = ParamDb::new();
+        let st = NodeState::new(NodeId(2), 0.4);
+        st.queue.store(7, Ordering::Relaxed);
+        st.publish(&db);
+        assert_eq!(db.get_u64("q/2"), Some(7));
+        assert!(db.get_f64("t/2").unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! Distributed parameter database (paper §IV-D-1).
+//!
+//! The paper keeps α, β, tᵢ and Qᵢ in a SQLite database on every edge,
+//! where "the update of any of these parameters will trigger the immediate
+//! update" everywhere. This module is that store: a versioned, watchable
+//! key-value table with snapshot persistence and an update log, replicated
+//! between nodes over the bus ([`crate::bus`]) by the node runtimes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Values the scheduler state needs (kept closed so replication and
+/// persistence stay total).
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum Value {
+    F64(f64),
+    U64(u64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::U64(v) => Some(*v as f64),
+            Value::Bool(_) => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::U64(v) => Some(*v),
+            _ => None,
+        }
+    }
+}
+
+/// One versioned entry.
+#[derive(Clone, Debug)]
+struct Entry {
+    value: Value,
+    version: u64,
+}
+
+/// A single observed update (key, value, version).
+#[derive(Clone, Debug)]
+pub struct Update {
+    pub key: String,
+    pub value: Value,
+    pub version: u64,
+}
+
+type Watcher = Box<dyn Fn(&Update) + Send + 'static>;
+
+/// Versioned, watchable KV store. Clones share state (Arc inside), so a
+/// node can hand the same DB to its detector, classifier and scheduler
+/// threads — mirroring the paper's per-edge shared SQLite file.
+#[derive(Clone)]
+pub struct ParamDb {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    map: Mutex<HashMap<String, Entry>>,
+    watchers: Mutex<Vec<Watcher>>,
+    clock: AtomicU64,
+}
+
+impl Default for ParamDb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ParamDb {
+    pub fn new() -> ParamDb {
+        ParamDb {
+            inner: Arc::new(Inner {
+                map: Mutex::new(HashMap::new()),
+                watchers: Mutex::new(Vec::new()),
+                clock: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    /// Write `key`; returns the assigned version. Watchers fire inline
+    /// (the paper's "immediate update" trigger semantics).
+    pub fn put(&self, key: &str, value: Value) -> u64 {
+        let version = self.inner.clock.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut map = self.inner.map.lock().unwrap();
+            map.insert(key.to_string(), Entry { value, version });
+        }
+        let update = Update { key: key.to_string(), value, version };
+        for w in self.inner.watchers.lock().unwrap().iter() {
+            w(&update);
+        }
+        version
+    }
+
+    /// Replication entry point: apply a remote update only if it is newer
+    /// than what we hold (last-writer-wins by version).
+    pub fn merge(&self, update: &Update) -> bool {
+        let mut map = self.inner.map.lock().unwrap();
+        let apply = map.get(&update.key).map_or(true, |e| update.version > e.version);
+        if apply {
+            map.insert(update.key.clone(), Entry { value: update.value, version: update.version });
+            // Bump the local clock past the remote version so later local
+            // writes strictly supersede it.
+            let _ = self
+                .inner
+                .clock
+                .fetch_max(update.version + 1, Ordering::Relaxed);
+        }
+        apply
+    }
+
+    pub fn get(&self, key: &str) -> Option<Value> {
+        self.inner.map.lock().unwrap().get(key).map(|e| e.value)
+    }
+
+    pub fn get_versioned(&self, key: &str) -> Option<(Value, u64)> {
+        self.inner.map.lock().unwrap().get(key).map(|e| (e.value, e.version))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_u64(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.as_u64())
+    }
+
+    /// Register a watcher called on every local put (and merged update via
+    /// [`ParamDb::merge_notify`]).
+    pub fn watch<F: Fn(&Update) + Send + 'static>(&self, f: F) {
+        self.inner.watchers.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Merge + fire watchers (used by the replication listener).
+    pub fn merge_notify(&self, update: &Update) -> bool {
+        let applied = self.merge(update);
+        if applied {
+            for w in self.inner.watchers.lock().unwrap().iter() {
+                w(update);
+            }
+        }
+        applied
+    }
+
+    /// Point-in-time snapshot of all entries (persistence / debugging).
+    pub fn snapshot(&self) -> Vec<Update> {
+        let map = self.inner.map.lock().unwrap();
+        let mut out: Vec<Update> = map
+            .iter()
+            .map(|(k, e)| Update { key: k.clone(), value: e.value, version: e.version })
+            .collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// Restore from a snapshot (merge semantics, so newer local state wins).
+    pub fn restore(&self, snapshot: &[Update]) {
+        for u in snapshot {
+            self.merge(u);
+        }
+    }
+
+    /// Conventional keys used by the scheduler state (paper: α, β, tᵢ, Qᵢ).
+    pub fn key_alpha() -> &'static str {
+        "alpha"
+    }
+    pub fn key_beta() -> &'static str {
+        "beta"
+    }
+    pub fn key_t(node: u32) -> String {
+        format!("t/{node}")
+    }
+    pub fn key_q(node: u32) -> String {
+        format!("q/{node}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let db = ParamDb::new();
+        db.put("alpha", Value::F64(0.8));
+        db.put("q/1", Value::U64(5));
+        assert_eq!(db.get_f64("alpha"), Some(0.8));
+        assert_eq!(db.get_u64("q/1"), Some(5));
+        assert_eq!(db.get("missing"), None);
+    }
+
+    #[test]
+    fn versions_increase() {
+        let db = ParamDb::new();
+        let v1 = db.put("k", Value::U64(1));
+        let v2 = db.put("k", Value::U64(2));
+        assert!(v2 > v1);
+        assert_eq!(db.get_versioned("k").unwrap().1, v2);
+    }
+
+    #[test]
+    fn watchers_fire_on_put() {
+        let db = ParamDb::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        db.watch(move |u| {
+            assert_eq!(u.key, "alpha");
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        db.put("alpha", Value::F64(0.7));
+        db.put("alpha", Value::F64(0.6));
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn merge_respects_versions() {
+        let db = ParamDb::new();
+        let v = db.put("t/1", Value::F64(0.3));
+        // Older remote update is ignored.
+        assert!(!db.merge(&Update { key: "t/1".into(), value: Value::F64(9.0), version: v - 1 }));
+        assert_eq!(db.get_f64("t/1"), Some(0.3));
+        // Newer remote update applies.
+        assert!(db.merge(&Update { key: "t/1".into(), value: Value::F64(0.5), version: v + 10 }));
+        assert_eq!(db.get_f64("t/1"), Some(0.5));
+        // And local writes after a merge supersede it.
+        db.put("t/1", Value::F64(0.7));
+        assert_eq!(db.get_f64("t/1"), Some(0.7));
+    }
+
+    #[test]
+    fn replication_converges_two_nodes() {
+        // Two DBs exchanging their update streams converge.
+        let a = ParamDb::new();
+        let b = ParamDb::new();
+        a.put("alpha", Value::F64(0.9));
+        b.put("beta", Value::F64(0.1));
+        b.put("alpha", Value::F64(0.8)); // concurrent write, higher version
+        for u in a.snapshot() {
+            b.merge(&u);
+        }
+        for u in b.snapshot() {
+            a.merge(&u);
+        }
+        // Deterministic convergence: same (value, version) on both sides.
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        assert_eq!(sa.len(), sb.len());
+        for (x, y) in sa.iter().zip(sb.iter()) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.version, y.version);
+            assert_eq!(x.value, y.value);
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let db = ParamDb::new();
+        db.put("alpha", Value::F64(0.75));
+        db.put("q/2", Value::U64(7));
+        db.put("flag", Value::Bool(true));
+        let snap = db.snapshot();
+        let fresh = ParamDb::new();
+        fresh.restore(&snap);
+        assert_eq!(fresh.get_f64("alpha"), Some(0.75));
+        assert_eq!(fresh.get_u64("q/2"), Some(7));
+        assert_eq!(fresh.get("flag"), Some(Value::Bool(true)));
+    }
+
+    #[test]
+    fn clone_shares_state() {
+        let db = ParamDb::new();
+        let db2 = db.clone();
+        db.put("x", Value::U64(1));
+        assert_eq!(db2.get_u64("x"), Some(1));
+    }
+
+    #[test]
+    fn key_helpers() {
+        assert_eq!(ParamDb::key_t(3), "t/3");
+        assert_eq!(ParamDb::key_q(0), "q/0");
+    }
+
+    #[test]
+    fn concurrent_puts_all_land() {
+        let db = ParamDb::new();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let db = db.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    db.put(&format!("k{t}/{i}"), Value::U64(i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(db.snapshot().len(), 400);
+    }
+}

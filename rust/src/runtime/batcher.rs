@@ -1,0 +1,167 @@
+//! Micro-batching executor: aggregates single-crop classify requests into
+//! batched PJRT calls (the b8 artifacts), vLLM-router-style.
+//!
+//! Policy: collect up to `max_batch` requests, or whatever has arrived
+//! when `max_wait` expires after the first request of a window; pad the
+//! final partial batch with zeros and discard padded outputs. The paper's
+//! cloud node serves many edges concurrently, which is exactly the arrival
+//! pattern batching exploits; `bench_micro` quantifies when it pays off on
+//! this host (small CNNs on CPU can prefer b1 — a recorded §Perf finding).
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use super::ModelRunner;
+
+/// One queued classification request.
+pub struct BatchRequest {
+    pub pixels: Vec<f32>,
+    pub reply: SyncSender<crate::Result<Vec<f32>>>,
+}
+
+/// Queue statistics for observability.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub full_batches: u64,
+}
+
+impl BatcherStats {
+    pub fn mean_batch_fill(&self, max_batch: usize) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / (self.batches as f64 * max_batch as f64)
+    }
+}
+
+/// The batching loop. Owns a batched [`ModelRunner`] (thread-bound, so
+/// this runs inside the inference-service thread or any single thread)
+/// and a request receiver. Call [`MicroBatcher::pump`] to process one
+/// batch window; loop it for a dedicated executor.
+pub struct MicroBatcher {
+    model: ModelRunner,
+    rx: Receiver<BatchRequest>,
+    pub max_wait: Duration,
+    stats: BatcherStats,
+    px_per_item: usize,
+}
+
+/// Sending side handle.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<BatchRequest>,
+}
+
+impl BatcherHandle {
+    /// Enqueue a crop and wait for its probability row.
+    pub fn infer(&self, pixels: Vec<f32>) -> crate::Result<Vec<f32>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(BatchRequest { pixels, reply })
+            .map_err(|_| anyhow::anyhow!("batcher is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("batcher dropped reply"))?
+    }
+}
+
+impl MicroBatcher {
+    /// Build around a model compiled at batch size `model.batch`.
+    pub fn new(model: ModelRunner, queue_cap: usize, max_wait: Duration) -> (MicroBatcher, BatcherHandle) {
+        let (tx, rx) = sync_channel(queue_cap.max(1));
+        let px_per_item = model.img * model.img * 3;
+        (
+            MicroBatcher { model, rx, max_wait, stats: BatcherStats::default(), px_per_item },
+            BatcherHandle { tx },
+        )
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats
+    }
+
+    /// Process one batch window. Blocks up to `idle_wait` for the first
+    /// request; returns false if the channel closed (time to stop) and
+    /// true otherwise (a batch may or may not have been executed).
+    pub fn pump(&mut self, idle_wait: Duration) -> bool {
+        let first = match self.rx.recv_timeout(idle_wait) {
+            Ok(r) => r,
+            Err(RecvTimeoutError::Timeout) => return true,
+            Err(RecvTimeoutError::Disconnected) => return false,
+        };
+        let max_batch = self.model.batch;
+        let mut window = vec![first];
+        let deadline = Instant::now() + self.max_wait;
+        while window.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => window.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        self.execute(window);
+        true
+    }
+
+    fn execute(&mut self, window: Vec<BatchRequest>) {
+        let max_batch = self.model.batch;
+        let n = window.len();
+        self.stats.requests += n as u64;
+        self.stats.batches += 1;
+        if n == max_batch {
+            self.stats.full_batches += 1;
+        }
+        // Validate sizes first so one bad request fails alone, not the batch.
+        let mut good: Vec<(usize, &BatchRequest)> = Vec::with_capacity(n);
+        for (i, r) in window.iter().enumerate() {
+            if r.pixels.len() == self.px_per_item {
+                good.push((i, r));
+            } else {
+                let _ = r.reply.send(Err(anyhow::anyhow!(
+                    "bad crop size {} (want {})",
+                    r.pixels.len(),
+                    self.px_per_item
+                )));
+            }
+        }
+        if good.is_empty() {
+            return;
+        }
+        let mut pixels = vec![0.0f32; max_batch * self.px_per_item];
+        for (slot, (_, r)) in good.iter().enumerate() {
+            pixels[slot * self.px_per_item..(slot + 1) * self.px_per_item]
+                .copy_from_slice(&r.pixels);
+        }
+        match self.model.infer(&pixels) {
+            Ok(rows) => {
+                for (slot, (_, r)) in good.iter().enumerate() {
+                    let _ = r.reply.send(Ok(rows[slot].clone()));
+                }
+            }
+            Err(e) => {
+                for (_, r) in &good {
+                    let _ = r.reply.send(Err(anyhow::anyhow!("batched infer failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_fill_ratio() {
+        let s = BatcherStats { requests: 12, batches: 3, full_batches: 1 };
+        assert!((s.mean_batch_fill(8) - 0.5).abs() < 1e-12);
+        assert_eq!(BatcherStats::default().mean_batch_fill(8), 0.0);
+    }
+
+    // Behavioural tests (padding, partial windows, error isolation) need a
+    // compiled model; they live in rust/tests/runtime_integration.rs.
+}

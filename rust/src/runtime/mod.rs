@@ -1,0 +1,556 @@
+//! PJRT runtime: loads the AOT HLO artifacts and runs them on the request
+//! path (the only place compute happens at serving time — Python is
+//! build-time only).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per model
+//! variant; CNN weights are **runtime arguments**, uploaded once as device
+//! buffers and reused across calls (`execute_b`), so deploying fine-tuned
+//! weights is a buffer swap, not a recompile.
+
+pub mod json;
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use json::Json;
+
+/// Shape + name of one model parameter.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub img: usize,
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub classes: Vec<String>,
+    pub query_cls: usize,
+    pub edge_train_batch: usize,
+    pub edge_params: Vec<ParamSpec>,
+    pub cloud_params: Vec<ParamSpec>,
+    /// Number of trailing edge params in the fine-tune head group.
+    pub edge_head_group: usize,
+    /// artifact name -> file name
+    pub artifacts: HashMap<String, String>,
+    pub weights: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("manifest.json missing in {dir:?} (run `make artifacts`): {e}"))?;
+        let j = Json::parse(&text)?;
+        let params = |key: &str| -> crate::Result<Vec<ParamSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("manifest: missing {key}"))?
+                .iter()
+                .map(|e| {
+                    let name = e.get("name").and_then(Json::as_str).unwrap_or("").to_string();
+                    let shape: Vec<usize> = e
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    anyhow::ensure!(!name.is_empty() && !shape.is_empty(), "bad param entry");
+                    Ok(ParamSpec { name, shape })
+                })
+                .collect()
+        };
+        let frame = j.get("frame").and_then(Json::as_arr).ok_or_else(|| anyhow::anyhow!("frame"))?;
+        let mut artifacts = HashMap::new();
+        for (k, v) in j.get("artifacts").and_then(Json::as_obj).into_iter().flatten() {
+            if let Some(f) = v.get("file").and_then(Json::as_str) {
+                artifacts.insert(k.clone(), f.to_string());
+            }
+        }
+        let mut weights = HashMap::new();
+        for (k, v) in j.get("weights").and_then(Json::as_obj).into_iter().flatten() {
+            if let Some(f) = v.as_str() {
+                weights.insert(k.clone(), f.to_string());
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            img: j.get("img").and_then(Json::as_usize).unwrap_or(32),
+            frame_h: frame[0].as_usize().unwrap_or(96),
+            frame_w: frame[1].as_usize().unwrap_or(128),
+            classes: j
+                .get("classes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(str::to_string)).collect())
+                .unwrap_or_default(),
+            query_cls: j.get("query_cls").and_then(Json::as_usize).unwrap_or(3),
+            edge_train_batch: j.get("edge_train_batch").and_then(Json::as_usize).unwrap_or(32),
+            edge_params: params("edge_params")?,
+            cloud_params: params("cloud_params")?,
+            edge_head_group: j.get("edge_head_group").and_then(Json::as_usize).unwrap_or(6),
+            artifacts,
+            weights,
+        })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> crate::Result<PathBuf> {
+        self.artifacts
+            .get(name)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn weight_path(&self, name: &str) -> crate::Result<PathBuf> {
+        self.weights
+            .get(name)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("weights {name:?} not in manifest"))
+    }
+}
+
+/// Load a raw f32 blob (8-byte little-endian length header + payload),
+/// the format `aot.py::write_blob` emits.
+pub fn read_blob(path: &Path) -> crate::Result<Vec<f32>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut header = [0u8; 8];
+    f.read_exact(&mut header)?;
+    let n = u64::from_le_bytes(header) as usize;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() == n * 4, "{path:?}: header {} vs payload {}", n * 4, bytes.len());
+    let mut out = Vec::with_capacity(n);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(out)
+}
+
+/// Write a blob in the same format (used to persist fine-tuned weights).
+pub fn write_blob(path: &Path, data: &[f32]) -> crate::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&(data.len() as u64).to_le_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Slice a flat weight blob into per-parameter vectors per the manifest.
+pub fn split_params(flat: &[f32], specs: &[ParamSpec]) -> crate::Result<Vec<Vec<f32>>> {
+    let total: usize = specs.iter().map(ParamSpec::numel).sum();
+    anyhow::ensure!(flat.len() == total, "weight blob {} != manifest {}", flat.len(), total);
+    let mut out = Vec::with_capacity(specs.len());
+    let mut off = 0;
+    for s in specs {
+        out.push(flat[off..off + s.numel()].to_vec());
+        off += s.numel();
+    }
+    Ok(out)
+}
+
+/// Concatenate per-parameter vectors back into a flat blob.
+pub fn join_params(params: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(params.iter().map(Vec::len).sum());
+    for p in params {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Per-call service measurement (drives calibration + §Perf).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub max_secs: f64,
+}
+
+impl ServiceStats {
+    fn record(&mut self, secs: f64) {
+        self.calls += 1;
+        self.total_secs += secs;
+        self.max_secs = self.max_secs.max(secs);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.total_secs / self.calls as f64
+        }
+    }
+}
+
+/// A compiled model with its weights resident on device.
+pub struct ModelRunner {
+    exe: xla::PjRtLoadedExecutable,
+    param_buffers: Vec<xla::PjRtBuffer>,
+    specs: Vec<ParamSpec>,
+    pub batch: usize,
+    pub img: usize,
+    pub out_classes: usize,
+    stats: Mutex<ServiceStats>,
+    client: xla::PjRtClient,
+}
+
+impl ModelRunner {
+    /// Probability output for a batch of crops. `pixels` is HWC f32 of
+    /// exactly `batch * img * img * 3` elements. Returns `batch` rows of
+    /// `out_classes` probabilities.
+    pub fn infer(&self, pixels: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        let want = self.batch * self.img * self.img * 3;
+        anyhow::ensure!(pixels.len() == want, "infer: got {} px, want {want}", pixels.len());
+        let t0 = Instant::now();
+        let x = self
+            .client
+            .buffer_from_host_buffer(pixels, &[self.batch, self.img, self.img, 3], None)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.param_buffers.iter().collect();
+        args.push(&x);
+        let result = self.exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let probs = lit.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(probs.len() == self.batch * self.out_classes, "bad output size");
+        self.stats.lock().unwrap().record(t0.elapsed().as_secs_f64());
+        Ok(probs.chunks(self.out_classes).map(|c| c.to_vec()).collect())
+    }
+
+    /// Swap in new weights (fine-tune deployment): re-uploads buffers.
+    pub fn set_params(&mut self, params: &[Vec<f32>]) -> crate::Result<()> {
+        self.param_buffers = upload_params(&self.client, &self.specs, params)?;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+fn upload_params(
+    client: &xla::PjRtClient,
+    specs: &[ParamSpec],
+    params: &[Vec<f32>],
+) -> crate::Result<Vec<xla::PjRtBuffer>> {
+    anyhow::ensure!(specs.len() == params.len(), "param count mismatch");
+    specs
+        .iter()
+        .zip(params.iter())
+        .map(|(s, p)| {
+            anyhow::ensure!(p.len() == s.numel(), "{}: {} vs {:?}", s.name, p.len(), s.shape);
+            Ok(client.buffer_from_host_buffer(p, &s.shape, None)?)
+        })
+        .collect()
+}
+
+/// One gradient step's outputs.
+#[derive(Clone, Debug)]
+pub struct GradOutput {
+    pub grads: Vec<Vec<f32>>,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// The edge_train executable: (params.., x, y) -> (grads.., loss, acc).
+pub struct TrainRunner {
+    exe: xla::PjRtLoadedExecutable,
+    specs: Vec<ParamSpec>,
+    pub batch: usize,
+    pub img: usize,
+    stats: Mutex<ServiceStats>,
+    client: xla::PjRtClient,
+}
+
+impl TrainRunner {
+    pub fn grad_step(
+        &self,
+        params: &[Vec<f32>],
+        pixels: &[f32],
+        labels: &[i32],
+    ) -> crate::Result<GradOutput> {
+        anyhow::ensure!(labels.len() == self.batch, "labels {} != batch {}", labels.len(), self.batch);
+        anyhow::ensure!(pixels.len() == self.batch * self.img * self.img * 3, "bad pixel count");
+        let t0 = Instant::now();
+        let mut args = upload_params(&self.client, &self.specs, params)?;
+        args.push(self.client.buffer_from_host_buffer(
+            pixels,
+            &[self.batch, self.img, self.img, 3],
+            None,
+        )?);
+        args.push(self.client.buffer_from_host_buffer(labels, &[self.batch], None)?);
+        let result = self.exe.execute_b(&args)?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(outs.len() == self.specs.len() + 2, "train outputs {}", outs.len());
+        let mut grads = Vec::with_capacity(self.specs.len());
+        for (lit, spec) in outs.iter().zip(self.specs.iter()) {
+            let g = lit.to_vec::<f32>()?;
+            anyhow::ensure!(g.len() == spec.numel(), "grad size {}", spec.name);
+            grads.push(g);
+        }
+        let loss = outs[self.specs.len()].to_vec::<f32>()?[0];
+        let acc = outs[self.specs.len() + 1].to_vec::<f32>()?[0];
+        self.stats.lock().unwrap().record(t0.elapsed().as_secs_f64());
+        Ok(GradOutput { grads, loss, acc })
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The framediff executable: 3 frames -> binary mask.
+pub struct FrameDiffRunner {
+    exe: xla::PjRtLoadedExecutable,
+    pub h: usize,
+    pub w: usize,
+    stats: Mutex<ServiceStats>,
+    client: xla::PjRtClient,
+}
+
+impl FrameDiffRunner {
+    pub fn mask(&self, prev: &[f32], cur: &[f32], nxt: &[f32]) -> crate::Result<Vec<u8>> {
+        let want = self.h * self.w * 3;
+        anyhow::ensure!(prev.len() == want && cur.len() == want && nxt.len() == want, "bad frame");
+        let t0 = Instant::now();
+        let dims = [1usize, self.h, self.w, 3];
+        let args = [
+            self.client.buffer_from_host_buffer(prev, &dims, None)?,
+            self.client.buffer_from_host_buffer(cur, &dims, None)?,
+            self.client.buffer_from_host_buffer(nxt, &dims, None)?,
+        ];
+        let result = self.exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let mask_f = lit.to_vec::<f32>()?;
+        self.stats.lock().unwrap().record(t0.elapsed().as_secs_f64());
+        Ok(mask_f.iter().map(|&v| (v > 0.5) as u8).collect())
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The engine: one PJRT CPU client + every compiled executable the
+/// deployment needs.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> crate::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, client })
+    }
+
+    fn compile(&self, artifact: &str) -> crate::Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.artifact_path(artifact)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Compile an edge/cloud inference model and upload its weights.
+    pub fn model(
+        &self,
+        artifact: &str,
+        specs: &[ParamSpec],
+        params: &[Vec<f32>],
+        batch: usize,
+        out_classes: usize,
+    ) -> crate::Result<ModelRunner> {
+        let exe = self.compile(artifact)?;
+        Ok(ModelRunner {
+            exe,
+            param_buffers: upload_params(&self.client, specs, params)?,
+            specs: specs.to_vec(),
+            batch,
+            img: self.manifest.img,
+            out_classes,
+            stats: Mutex::new(ServiceStats::default()),
+            client: self.client.clone(),
+        })
+    }
+
+    /// Edge inference model at a given batch size with the given weights.
+    pub fn edge_model(&self, batch: usize, params: &[Vec<f32>]) -> crate::Result<ModelRunner> {
+        let specs = self.manifest.edge_params.clone();
+        self.model(&format!("edge_infer_b{batch}"), &specs, params, batch, 2)
+    }
+
+    /// Cloud inference model (8-class) with the given weights.
+    pub fn cloud_model(&self, batch: usize, params: &[Vec<f32>]) -> crate::Result<ModelRunner> {
+        let specs = self.manifest.cloud_params.clone();
+        let classes = self.manifest.classes.len().max(8);
+        self.model(&format!("cloud_infer_b{batch}"), &specs, params, batch, classes)
+    }
+
+    pub fn trainer(&self) -> crate::Result<TrainRunner> {
+        let exe = self.compile("edge_train")?;
+        Ok(TrainRunner {
+            exe,
+            specs: self.manifest.edge_params.clone(),
+            batch: self.manifest.edge_train_batch,
+            img: self.manifest.img,
+            stats: Mutex::new(ServiceStats::default()),
+            client: self.client.clone(),
+        })
+    }
+
+    pub fn framediff(&self) -> crate::Result<FrameDiffRunner> {
+        let exe = self.compile("framediff")?;
+        Ok(FrameDiffRunner {
+            exe,
+            h: self.manifest.frame_h,
+            w: self.manifest.frame_w,
+            stats: Mutex::new(ServiceStats::default()),
+            client: self.client.clone(),
+        })
+    }
+
+    /// Load the pretrained edge weights from the bundle.
+    pub fn edge_pretrained(&self) -> crate::Result<Vec<Vec<f32>>> {
+        let flat = read_blob(&self.manifest.weight_path("edge_pretrained")?)?;
+        split_params(&flat, &self.manifest.edge_params)
+    }
+
+    /// Load the trained cloud weights from the bundle.
+    pub fn cloud_trained(&self) -> crate::Result<Vec<Vec<f32>>> {
+        let flat = read_blob(&self.manifest.weight_path("cloud_trained")?)?;
+        split_params(&flat, &self.manifest.cloud_params)
+    }
+}
+
+/// Momentum-SGD with a per-parameter update mask — the optimizer lives in
+/// Rust (the train HLO returns raw grads) so the three Fig. 5 training
+/// schemes share one artifact: "fine-tune" masks updates to the head
+/// group, "all fine-tune" updates everything.
+pub struct MomentumSgd {
+    pub lr: f32,
+    pub mu: f32,
+    vel: Vec<Vec<f32>>,
+    /// `mask[i]` = whether param i is updated.
+    pub mask: Vec<bool>,
+}
+
+impl MomentumSgd {
+    pub fn new(specs: &[ParamSpec], lr: f32, mask: Vec<bool>) -> MomentumSgd {
+        assert_eq!(specs.len(), mask.len());
+        MomentumSgd {
+            lr,
+            mu: 0.9,
+            vel: specs.iter().map(|s| vec![0.0; s.numel()]).collect(),
+            mask,
+        }
+    }
+
+    /// Mask helper: update only the trailing `head_group` params.
+    pub fn head_only_mask(n_params: usize, head_group: usize) -> Vec<bool> {
+        (0..n_params).map(|i| i >= n_params.saturating_sub(head_group)).collect()
+    }
+
+    pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
+        for i in 0..params.len() {
+            if !self.mask[i] {
+                continue;
+            }
+            let vel = &mut self.vel[i];
+            let (p, g) = (&mut params[i], &grads[i]);
+            for j in 0..p.len() {
+                vel[j] = self.mu * vel[j] - self.lr * g[j];
+                p[j] += vel[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_params_layout() {
+        let specs = vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b".into(), shape: vec![4] },
+        ];
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let parts = split_params(&flat, &specs).unwrap();
+        assert_eq!(parts[0], (0..6).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(parts[1], (6..10).map(|i| i as f32).collect::<Vec<_>>());
+        assert!(split_params(&flat[..9], &specs).is_err());
+        assert_eq!(join_params(&parts), flat);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("surveiledge_test_blob");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.bin");
+        let data: Vec<f32> = vec![1.5, -2.25, 0.0, 3.75];
+        write_blob(&path, &data).unwrap();
+        assert_eq!(read_blob(&path).unwrap(), data);
+    }
+
+    #[test]
+    fn momentum_masks_params() {
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![2] },
+            ParamSpec { name: "h".into(), shape: vec![2] },
+        ];
+        let mask = MomentumSgd::head_only_mask(2, 1);
+        assert_eq!(mask, vec![false, true]);
+        let mut opt = MomentumSgd::new(&specs, 0.1, mask);
+        let mut params = vec![vec![1.0f32, 1.0], vec![1.0f32, 1.0]];
+        let grads = vec![vec![1.0f32, 1.0], vec![1.0f32, 1.0]];
+        opt.step(&mut params, &grads);
+        assert_eq!(params[0], vec![1.0, 1.0], "masked param moved");
+        assert!(params[1][0] < 1.0, "unmasked param did not move");
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let specs = vec![ParamSpec { name: "w".into(), shape: vec![1] }];
+        let mut opt = MomentumSgd::new(&specs, 0.1, vec![true]);
+        let mut params = vec![vec![0.0f32]];
+        let grads = vec![vec![1.0f32]];
+        opt.step(&mut params, &grads);
+        let d1 = -params[0][0];
+        opt.step(&mut params, &grads);
+        let d2 = -params[0][0] - d1;
+        assert!(d2 > d1, "momentum should accelerate: {d1} vs {d2}");
+    }
+
+    #[test]
+    fn head_only_mask_oversized_group() {
+        // A head group larger than the param list must not underflow.
+        assert_eq!(MomentumSgd::head_only_mask(2, 5), vec![true, true]);
+    }
+
+    #[test]
+    fn service_stats_mean() {
+        let mut s = ServiceStats::default();
+        s.record(1.0);
+        s.record(3.0);
+        assert_eq!(s.calls, 2);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_secs, 3.0);
+    }
+}
+pub mod service;
+pub mod batcher;

@@ -1,0 +1,305 @@
+//! Inference service: a dedicated thread that owns the PJRT engine.
+//!
+//! `xla::PjRtClient` is `Rc`-based and thread-bound, but the serving system
+//! is multi-threaded (edge/cloud node event loops). The service thread owns
+//! the engine and every compiled model; node threads talk to it through a
+//! cloneable [`ServiceHandle`] (bounded channel + reply channels) — the
+//! same shape a production system has around a single accelerator worker.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use super::{Engine, ModelRunner, MomentumSgd, ServiceStats};
+
+/// Requests the service understands.
+enum Request {
+    /// Classify one crop with edge `edge_id`'s deployed CQ-CNN.
+    EdgeInfer { edge_id: u32, pixels: Vec<f32>, reply: SyncSender<crate::Result<Vec<f32>>> },
+    /// Classify one crop with the cloud CNN (8-class probs).
+    CloudInfer { pixels: Vec<f32>, reply: SyncSender<crate::Result<Vec<f32>>> },
+    /// Deploy (fine-tuned) edge weights for `edge_id`.
+    DeployEdge { edge_id: u32, params: Vec<Vec<f32>>, reply: SyncSender<crate::Result<()>> },
+    /// Run `steps` of head-group fine-tuning on the given dataset and
+    /// deploy nothing (caller decides); returns final params + loss curve.
+    FineTune {
+        pixels: Vec<f32>,
+        labels: Vec<i32>,
+        steps: usize,
+        lr: f32,
+        full: bool,
+        reply: SyncSender<crate::Result<FineTuneResult>>,
+    },
+    /// Frame-difference dense stage via the HLO artifact.
+    FrameDiff {
+        prev: Vec<f32>,
+        cur: Vec<f32>,
+        nxt: Vec<f32>,
+        reply: SyncSender<crate::Result<Vec<u8>>>,
+    },
+    Stats { reply: SyncSender<ServiceSnapshot> },
+    Shutdown,
+}
+
+/// Fine-tuning output.
+#[derive(Clone, Debug)]
+pub struct FineTuneResult {
+    pub params: Vec<Vec<f32>>,
+    pub losses: Vec<f32>,
+    pub accs: Vec<f32>,
+    pub train_secs: f64,
+}
+
+/// Aggregate service-side measurements.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceSnapshot {
+    pub edge_infer: ServiceStats,
+    pub cloud_infer: ServiceStats,
+    pub train: ServiceStats,
+    pub framediff: ServiceStats,
+}
+
+/// Cloneable, Send handle to the service thread.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Request>,
+}
+
+impl ServiceHandle {
+    fn call<T>(&self, build: impl FnOnce(SyncSender<crate::Result<T>>) -> Request) -> crate::Result<T>
+    where
+        T: Send + 'static,
+    {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(build(reply))
+            .map_err(|_| anyhow::anyhow!("inference service is down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("inference service dropped reply"))?
+    }
+
+    /// Edge classify: returns `[p_not_query, p_query]`.
+    pub fn edge_infer(&self, edge_id: u32, pixels: Vec<f32>) -> crate::Result<Vec<f32>> {
+        self.call(|reply| Request::EdgeInfer { edge_id, pixels, reply })
+    }
+
+    /// Cloud classify: returns 8-class probabilities.
+    pub fn cloud_infer(&self, pixels: Vec<f32>) -> crate::Result<Vec<f32>> {
+        self.call(|reply| Request::CloudInfer { pixels, reply })
+    }
+
+    pub fn deploy_edge(&self, edge_id: u32, params: Vec<Vec<f32>>) -> crate::Result<()> {
+        self.call(|reply| Request::DeployEdge { edge_id, params, reply })
+    }
+
+    pub fn fine_tune(
+        &self,
+        pixels: Vec<f32>,
+        labels: Vec<i32>,
+        steps: usize,
+        lr: f32,
+        full: bool,
+    ) -> crate::Result<FineTuneResult> {
+        self.call(|reply| Request::FineTune { pixels, labels, steps, lr, full, reply })
+    }
+
+    pub fn framediff(&self, prev: Vec<f32>, cur: Vec<f32>, nxt: Vec<f32>) -> crate::Result<Vec<u8>> {
+        self.call(|reply| Request::FrameDiff { prev, cur, nxt, reply })
+    }
+
+    pub fn stats(&self) -> crate::Result<ServiceSnapshot> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| anyhow::anyhow!("inference service is down"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+/// The running service (join on drop).
+pub struct InferenceService {
+    pub handle: ServiceHandle,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl InferenceService {
+    /// Spawn the service: loads the engine, compiles edge models for
+    /// `edge_ids` (all starting from the pretrained weights), the cloud
+    /// model, the trainer, and the framediff kernel.
+    pub fn spawn(artifact_dir: PathBuf, edge_ids: Vec<u32>) -> crate::Result<InferenceService> {
+        let (tx, rx) = sync_channel::<Request>(256);
+        let (ready_tx, ready_rx) = sync_channel::<crate::Result<()>>(1);
+        let worker = std::thread::Builder::new()
+            .name("inference-service".into())
+            .spawn(move || worker_main(artifact_dir, edge_ids, rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service thread died during init"))??;
+        Ok(InferenceService { handle: ServiceHandle { tx }, worker: Some(worker) })
+    }
+}
+
+impl Drop for InferenceService {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(
+    artifact_dir: PathBuf,
+    edge_ids: Vec<u32>,
+    rx: Receiver<Request>,
+    ready: SyncSender<crate::Result<()>>,
+) {
+    let setup = (|| -> crate::Result<_> {
+        let engine = Engine::new(&artifact_dir)?;
+        let pretrained = engine.edge_pretrained()?;
+        let mut edge_models: HashMap<u32, ModelRunner> = HashMap::new();
+        for id in &edge_ids {
+            edge_models.insert(*id, engine.edge_model(1, &pretrained)?);
+        }
+        let cloud = engine.cloud_model(1, &engine.cloud_trained()?)?;
+        let trainer = engine.trainer()?;
+        let framediff = engine.framediff()?;
+        Ok((engine, pretrained, edge_models, cloud, trainer, framediff))
+    })();
+
+    let (engine, pretrained, mut edge_models, cloud, trainer, framediff) = match setup {
+        Ok(parts) => {
+            let _ = ready.send(Ok(()));
+            parts
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::EdgeInfer { edge_id, pixels, reply } => {
+                let r = edge_models
+                    .get(&edge_id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown edge {edge_id}"))
+                    .and_then(|m| m.infer(&pixels))
+                    .map(|rows| rows.into_iter().next().unwrap_or_default());
+                let _ = reply.send(r);
+            }
+            Request::CloudInfer { pixels, reply } => {
+                let r = cloud.infer(&pixels).map(|rows| rows.into_iter().next().unwrap_or_default());
+                let _ = reply.send(r);
+            }
+            Request::DeployEdge { edge_id, params, reply } => {
+                let r = match edge_models.get_mut(&edge_id) {
+                    Some(m) => m.set_params(&params),
+                    None => engine.edge_model(1, &params).map(|m| {
+                        edge_models.insert(edge_id, m);
+                    }),
+                };
+                let _ = reply.send(r);
+            }
+            Request::FineTune { pixels, labels, steps, lr, full, reply } => {
+                let r = run_fine_tune(&engine, &trainer, &pretrained, &pixels, &labels, steps, lr, full);
+                let _ = reply.send(r);
+            }
+            Request::FrameDiff { prev, cur, nxt, reply } => {
+                let _ = reply.send(framediff.mask(&prev, &cur, &nxt));
+            }
+            Request::Stats { reply } => {
+                let agg_edge = edge_models.values().fold(ServiceStats::default(), |mut acc, m| {
+                    let s = m.stats();
+                    acc.calls += s.calls;
+                    acc.total_secs += s.total_secs;
+                    acc.max_secs = acc.max_secs.max(s.max_secs);
+                    acc
+                });
+                let _ = reply.send(ServiceSnapshot {
+                    edge_infer: agg_edge,
+                    cloud_infer: cloud.stats(),
+                    train: trainer.stats(),
+                    framediff: framediff.stats(),
+                });
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+/// The online fine-tuning loop (paper §IV-B): start from pretrained
+/// weights, run momentum-SGD on the context-specific dataset. `full=false`
+/// updates only the head group ("SurveilEdge" scheme); `full=true` trains
+/// everything from scratch ("All Fine-tune" baseline).
+#[allow(clippy::too_many_arguments)]
+fn run_fine_tune(
+    engine: &Engine,
+    trainer: &super::TrainRunner,
+    pretrained: &[Vec<f32>],
+    pixels: &[f32],
+    labels: &[i32],
+    steps: usize,
+    lr: f32,
+    full: bool,
+) -> crate::Result<FineTuneResult> {
+    let t0 = std::time::Instant::now();
+    let n = engine.manifest.edge_params.len();
+    let (mut params, mask) = if full {
+        // From-scratch: deterministic pseudo-random re-init of all params.
+        let mut rng = crate::testkit::Rng::new(0xF17E_7A11);
+        let params: Vec<Vec<f32>> = engine
+            .manifest
+            .edge_params
+            .iter()
+            .map(|s| {
+                let fan_in: usize = s.shape[..s.shape.len().saturating_sub(1)]
+                    .iter()
+                    .product::<usize>()
+                    .max(1);
+                let std = (2.0 / fan_in as f64).sqrt() as f32;
+                (0..s.numel())
+                    .map(|_| if s.name.ends_with("_b") { 0.0 } else { rng.normal() as f32 * std })
+                    .collect()
+            })
+            .collect();
+        (params, vec![true; n])
+    } else {
+        (pretrained.to_vec(), MomentumSgd::head_only_mask(n, engine.manifest.edge_head_group))
+    };
+
+    let mut opt = MomentumSgd::new(&engine.manifest.edge_params, lr, mask);
+    let batch = trainer.batch;
+    let px_per = trainer.img * trainer.img * 3;
+    let total = labels.len();
+    anyhow::ensure!(total >= batch, "fine-tune dataset smaller than batch ({total} < {batch})");
+    anyhow::ensure!(pixels.len() == total * px_per, "pixels/labels mismatch");
+
+    let mut losses = Vec::with_capacity(steps);
+    let mut accs = Vec::with_capacity(steps);
+    let mut rng = crate::testkit::Rng::new(0x7EA1_5EED);
+    let mut bpix = vec![0.0f32; batch * px_per];
+    let mut blab = vec![0i32; batch];
+    for _ in 0..steps {
+        for j in 0..batch {
+            let k = rng.range_usize(0, total);
+            bpix[j * px_per..(j + 1) * px_per].copy_from_slice(&pixels[k * px_per..(k + 1) * px_per]);
+            blab[j] = labels[k];
+        }
+        let out = trainer.grad_step(&params, &bpix, &blab)?;
+        losses.push(out.loss);
+        accs.push(out.acc);
+        opt.step(&mut params, &out.grads);
+    }
+    Ok(FineTuneResult { params, losses, accs, train_secs: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    // Service tests require artifacts; they live in
+    // rust/tests/pipeline_integration.rs so `cargo test --lib` stays fast.
+}

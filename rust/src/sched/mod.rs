@@ -1,0 +1,274 @@
+//! Task scheduling + parameter adjustment (paper §IV-D).
+//!
+//! * [`allocate`] — eq. 7: route each detected object to the node with the
+//!   least expected wait, `d = argmin_i Q_i·t_i` over edges and the Cloud.
+//! * [`ThresholdController`] — eqs. 8–9: adapt the confidence band [β, α]
+//!   from the observed classification latency vs the query interval `s`.
+//!   When the system falls behind, the band narrows (fewer uploads); when
+//!   it has headroom, the band widens (more cloud re-checks ⇒ accuracy).
+
+use crate::types::NodeId;
+
+/// A routing-table snapshot for one candidate node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeLoad {
+    pub node: NodeId,
+    /// Queue length Q_i (tasks waiting, including in service).
+    pub queue: usize,
+    /// Estimated per-task inference latency t_i (seconds).
+    pub t_infer: f64,
+    /// Extra fixed cost of choosing this node (e.g. crop upload time to
+    /// the Cloud). The paper ignores edge↔edge transmission but notes it
+    /// is straightforward to model; we expose it and default it to 0.
+    pub penalty: f64,
+}
+
+impl NodeLoad {
+    /// Expected wait if the task is appended to this node's queue.
+    pub fn cost(&self) -> f64 {
+        self.queue as f64 * self.t_infer + self.penalty
+    }
+}
+
+/// Eq. 7: pick the node with minimal `Q_i·t_i` (+penalty). Ties break
+/// toward the *local* node (first entry) to avoid pointless transfers,
+/// then toward lower node id for determinism.
+pub fn allocate(candidates: &[NodeLoad]) -> Option<NodeId> {
+    let mut best: Option<&NodeLoad> = None;
+    for c in candidates {
+        let better = match best {
+            None => true,
+            Some(b) => {
+                let (cb, cc) = (b.cost(), c.cost());
+                cc < cb - 1e-12
+            }
+        };
+        if better {
+            best = Some(c);
+        }
+    }
+    best.map(|b| b.node)
+}
+
+/// Configuration for the eq. 8–9 controller.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdConfig {
+    /// γ₁ — step weight on the latency surplus (paper: γ₁ ∈ (0,1)).
+    pub gamma1: f64,
+    /// γ₂ — β as a fraction of (1-α) (paper: γ₂ ∈ (0,1), keeps the
+    /// band average below 0.5, biasing toward recall).
+    pub gamma2: f64,
+    /// Query sampling interval `s` (seconds).
+    pub interval: f64,
+}
+
+impl Default for ThresholdConfig {
+    fn default() -> ThresholdConfig {
+        ThresholdConfig { gamma1: 0.1, gamma2: 0.25, interval: 1.0 }
+    }
+}
+
+/// The adaptive [β, α] confidence band.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdController {
+    pub alpha: f64,
+    pub beta: f64,
+    cfg: ThresholdConfig,
+}
+
+impl ThresholdController {
+    pub fn new(alpha0: f64, cfg: ThresholdConfig) -> ThresholdController {
+        let alpha = alpha0.clamp(0.5, 1.0);
+        ThresholdController { alpha, beta: cfg.gamma2 * (1.0 - alpha), cfg }
+    }
+
+    /// Paper's fixed-threshold baseline (SurveilEdge(fixed)): α=0.8, β=0.1.
+    pub fn fixed() -> ThresholdController {
+        ThresholdController {
+            alpha: 0.8,
+            beta: 0.1,
+            cfg: ThresholdConfig { gamma1: 0.0, gamma2: 0.0, interval: 1.0 },
+        }
+    }
+
+    /// Eq. 8–9 update from the current load signal:
+    /// * `queue` — outstanding tasks on the deciding node (l_d),
+    /// * `t_infer` — its per-task latency estimate (t_d).
+    ///
+    /// `α_new = max(min(α_old − γ₁(l_d·t_d − s), 1), 0.5)`;
+    /// `β_new = γ₂(1 − α_new)`.
+    ///
+    /// When `l_d·t_d > s` (overloaded) α *drops* toward 0.5 and β drops
+    /// with it, narrowing the upload band; with headroom α rises toward 1
+    /// and the band widens.
+    pub fn update(&mut self, queue: usize, t_infer: f64) {
+        if self.cfg.gamma1 == 0.0 {
+            return; // fixed mode
+        }
+        let surplus = queue as f64 * t_infer - self.cfg.interval;
+        self.alpha = (self.alpha - self.cfg.gamma1 * surplus).min(1.0).max(0.5);
+        self.beta = self.cfg.gamma2 * (1.0 - self.alpha);
+    }
+
+    /// Classify a confidence value against the band. Comparison carries an
+    /// f32-level epsilon so confidences that *are* the threshold value
+    /// (e.g. 0.1f32 vs β=0.1) land on the confident side.
+    pub fn decide(&self, confidence: f32) -> BandDecision {
+        const EPS: f64 = 1e-6;
+        let f = confidence as f64;
+        if f >= self.alpha - EPS {
+            BandDecision::Positive
+        } else if f <= self.beta + EPS {
+            BandDecision::Negative
+        } else {
+            BandDecision::Doubtful
+        }
+    }
+
+    /// Width of the doubtful band (upload fraction driver).
+    pub fn band_width(&self) -> f64 {
+        (self.alpha - self.beta).max(0.0)
+    }
+}
+
+/// Outcome of edge classification against the [β, α] band.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BandDecision {
+    /// f ≥ α: confidently a query object.
+    Positive,
+    /// f ≤ β: confidently not a query object.
+    Negative,
+    /// β < f < α: upload to the Cloud for re-classification.
+    Doubtful,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    fn load(id: u32, queue: usize, t: f64) -> NodeLoad {
+        NodeLoad { node: NodeId(id), queue, t_infer: t, penalty: 0.0 }
+    }
+
+    #[test]
+    fn allocate_picks_min_cost() {
+        let c = vec![load(1, 10, 0.3), load(2, 2, 0.3), load(0, 4, 0.05)];
+        // costs: 3.0, 0.6, 0.2 -> cloud (id 0)
+        assert_eq!(allocate(&c), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn allocate_tie_prefers_first() {
+        let c = vec![load(3, 2, 0.5), load(1, 2, 0.5)];
+        assert_eq!(allocate(&c), Some(NodeId(3)));
+    }
+
+    #[test]
+    fn allocate_empty_is_none() {
+        assert_eq!(allocate(&[]), None);
+    }
+
+    #[test]
+    fn allocate_penalty_shifts_choice() {
+        // Cloud is idle but upload penalty makes the local edge win.
+        let c = vec![
+            NodeLoad { node: NodeId(1), queue: 1, t_infer: 0.3, penalty: 0.0 },
+            NodeLoad { node: NodeId(0), queue: 0, t_infer: 0.05, penalty: 0.5 },
+        ];
+        assert_eq!(allocate(&c), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn prop_allocate_is_argmin() {
+        check("allocate_argmin", |rng, _| {
+            let n = rng.range_usize(1, 8);
+            let c: Vec<NodeLoad> = (0..n)
+                .map(|i| NodeLoad {
+                    node: NodeId(i as u32),
+                    queue: rng.range_usize(0, 50),
+                    t_infer: rng.range_f64(0.01, 2.0),
+                    penalty: rng.range_f64(0.0, 1.0),
+                })
+                .collect();
+            let chosen = allocate(&c).unwrap();
+            let chosen_cost = c.iter().find(|l| l.node == chosen).unwrap().cost();
+            for l in &c {
+                assert!(chosen_cost <= l.cost() + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn controller_overload_narrows_band() {
+        let mut tc = ThresholdController::new(0.9, ThresholdConfig::default());
+        let before = tc.band_width();
+        tc.update(30, 0.5); // l_d*t_d = 15 >> s=1
+        assert!(tc.alpha < 0.9, "alpha should drop under load");
+        assert!(tc.band_width() < before, "band should narrow under load");
+    }
+
+    #[test]
+    fn controller_headroom_widens_band() {
+        let mut tc = ThresholdController::new(0.6, ThresholdConfig::default());
+        let before = tc.band_width();
+        tc.update(0, 0.1); // idle: surplus = -1
+        assert!(tc.alpha > 0.6);
+        assert!(tc.band_width() > before);
+    }
+
+    #[test]
+    fn controller_alpha_clamped() {
+        let mut tc = ThresholdController::new(0.99, ThresholdConfig::default());
+        for _ in 0..100 {
+            tc.update(0, 0.0); // always widening
+        }
+        assert!(tc.alpha <= 1.0);
+        for _ in 0..100 {
+            tc.update(1000, 10.0); // always narrowing
+        }
+        assert!((tc.alpha - 0.5).abs() < 1e-9, "alpha floor is 0.5, got {}", tc.alpha);
+    }
+
+    #[test]
+    fn prop_invariants_hold_under_any_updates() {
+        check("threshold_invariants", |rng, _| {
+            let cfg = ThresholdConfig {
+                gamma1: rng.range_f64(0.01, 0.99),
+                gamma2: rng.range_f64(0.01, 0.99),
+                interval: rng.range_f64(0.1, 3.0),
+            };
+            let mut tc = ThresholdController::new(rng.range_f64(0.0, 1.5), cfg);
+            for _ in 0..64 {
+                tc.update(rng.range_usize(0, 200), rng.range_f64(0.0, 3.0));
+                // Paper's invariants: α ∈ [0.5, 1]; β = γ₂(1-α) < 0.5 ≤ α;
+                // band average below 0.5... (α+β)/2 ≤ (1+γ₂·0.5)/2 < 1.
+                assert!((0.5..=1.0).contains(&tc.alpha));
+                assert!(tc.beta >= 0.0 && tc.beta < 0.5);
+                assert!(tc.beta < tc.alpha);
+                // mean of α and β stays under (α + γ₂(1-α))/2 which for
+                // γ₂<1 is < α ≤ 1; the recall-bias property β < 1-α ⋅ γ₂⁻¹
+                // reduces to β = γ₂(1-α):
+                assert!((tc.beta - cfg.gamma2 * (1.0 - tc.alpha)).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn decide_band_edges() {
+        let tc = ThresholdController::fixed(); // α=0.8, β=0.1
+        assert_eq!(tc.decide(0.85), BandDecision::Positive);
+        assert_eq!(tc.decide(0.8), BandDecision::Positive);
+        assert_eq!(tc.decide(0.5), BandDecision::Doubtful);
+        assert_eq!(tc.decide(0.1), BandDecision::Negative);
+        assert_eq!(tc.decide(0.05), BandDecision::Negative);
+    }
+
+    #[test]
+    fn fixed_controller_never_moves() {
+        let mut tc = ThresholdController::fixed();
+        tc.update(1000, 100.0);
+        assert_eq!(tc.alpha, 0.8);
+        assert_eq!(tc.beta, 0.1);
+    }
+}

@@ -1,0 +1,266 @@
+//! Time abstraction: real wall-clock vs discrete-event simulated time.
+//!
+//! The experiment harness runs the full pipeline in two modes (DESIGN.md
+//! §7): **live** (real PJRT inference, real sleeping) and **sim**
+//! (discrete-event executor with calibrated service times — tractable
+//! parameter sweeps on a 1-core host). Both modes drive the *same*
+//! scheduler/controller/metric code; only the clock and the classify call
+//! differ.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Abstract clock.
+pub trait Clock: Send + Sync {
+    /// Seconds since scenario start.
+    fn now(&self) -> f64;
+}
+
+/// Wall-clock implementation (live mode).
+pub struct RealClock {
+    start: Instant,
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RealClock {
+    pub fn new() -> RealClock {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Keyed event for the DES heap. Ordering: earliest time first, FIFO
+/// sequence number as tie-break (deterministic).
+struct SimEvent {
+    time: f64,
+    action: Box<dyn FnOnce(&mut Sim) + Send>,
+}
+
+/// Discrete-event simulator: a time-ordered action heap plus the shared
+/// simulated "now". Actions schedule further actions.
+pub struct Sim {
+    now: f64,
+    seq: u64,
+    heap: BinaryHeap<Reverse<HeapKey>>,
+    events: Vec<Option<SimEvent>>,
+}
+
+#[derive(PartialEq)]
+struct HeapKey {
+    time: f64,
+    seq: u64,
+    slot: usize,
+}
+
+impl Eq for HeapKey {}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Sim {
+        Sim { now: 0.0, seq: 0, heap: BinaryHeap::new(), events: Vec::new() }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `action` at absolute simulated time `at` (clamped to now).
+    pub fn schedule_at<F: FnOnce(&mut Sim) + Send + 'static>(&mut self, at: f64, action: F) {
+        let time = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        let slot = self.events.len();
+        self.events.push(Some(SimEvent { time, action: Box::new(action) }));
+        self.heap.push(Reverse(HeapKey { time, seq, slot }));
+    }
+
+    /// Schedule after a delay.
+    pub fn schedule_in<F: FnOnce(&mut Sim) + Send + 'static>(&mut self, delay: f64, action: F) {
+        self.schedule_at(self.now + delay.max(0.0), action);
+    }
+
+    /// Run until the heap empties or simulated time exceeds `until`.
+    /// Returns the number of events executed.
+    pub fn run_until(&mut self, until: f64) -> usize {
+        let mut executed = 0usize;
+        while let Some(Reverse(key)) = self.heap.pop() {
+            if key.time > until {
+                // Put it back for a later run_until call.
+                self.heap.push(Reverse(key));
+                break;
+            }
+            if let Some(ev) = self.events[key.slot].take() {
+                self.now = ev.time;
+                (ev.action)(self);
+                executed += 1;
+            }
+        }
+        // Compact storage when fully drained to bound memory across runs.
+        if self.heap.is_empty() {
+            self.events.clear();
+        }
+        executed
+    }
+}
+
+/// A shareable simulated clock view (for code written against [`Clock`]).
+#[derive(Clone)]
+pub struct SimClockHandle {
+    now: Arc<Mutex<f64>>,
+}
+
+impl Default for SimClockHandle {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimClockHandle {
+    pub fn new() -> SimClockHandle {
+        SimClockHandle { now: Arc::new(Mutex::new(0.0)) }
+    }
+
+    pub fn set(&self, t: f64) {
+        *self.now.lock().unwrap() = t;
+    }
+}
+
+impl Clock for SimClockHandle {
+    fn now(&self) -> f64 {
+        *self.now.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn real_clock_advances() {
+        let c = RealClock::new();
+        let a = c.now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(c.now() > a);
+    }
+
+    #[test]
+    fn events_run_in_time_order() {
+        let mut sim = Sim::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for (t, tag) in [(3.0, 'c'), (1.0, 'a'), (2.0, 'b')] {
+            let log = log.clone();
+            sim.schedule_at(t, move |_| log.lock().unwrap().push(tag));
+        }
+        sim.run_until(10.0);
+        assert_eq!(*log.lock().unwrap(), vec!['a', 'b', 'c']);
+    }
+
+    #[test]
+    fn fifo_tiebreak_at_same_time() {
+        let mut sim = Sim::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        for tag in 0..5 {
+            let log = log.clone();
+            sim.schedule_at(1.0, move |_| log.lock().unwrap().push(tag));
+        }
+        sim.run_until(2.0);
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn actions_can_schedule_actions() {
+        let mut sim = Sim::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        fn tick(sim: &mut Sim, count: Arc<AtomicUsize>, remaining: usize) {
+            if remaining == 0 {
+                return;
+            }
+            count.fetch_add(1, Ordering::SeqCst);
+            sim.schedule_in(1.0, move |s| tick(s, count, remaining - 1));
+        }
+        let c = count.clone();
+        sim.schedule_at(0.0, move |s| tick(s, c, 5));
+        sim.run_until(100.0);
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        // Ticks run at t=0..4; the terminating no-op lands at t=5.
+        assert!((sim.now() - 5.0).abs() < 1e-9, "now {}", sim.now());
+    }
+
+    #[test]
+    fn run_until_stops_at_horizon() {
+        let mut sim = Sim::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        for t in 0..10 {
+            let c = count.clone();
+            sim.schedule_at(t as f64, move |_| {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let ran = sim.run_until(4.5);
+        assert_eq!(ran, 5); // t = 0..4
+        assert_eq!(count.load(Ordering::SeqCst), 5);
+        let ran2 = sim.run_until(100.0);
+        assert_eq!(ran2, 5);
+    }
+
+    #[test]
+    fn past_times_clamped_to_now() {
+        let mut sim = Sim::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        {
+            let log = log.clone();
+            sim.schedule_at(5.0, move |s| {
+                let log2 = log.clone();
+                // scheduling "in the past" runs at current time, not before
+                s.schedule_at(1.0, move |s2| {
+                    log2.lock().unwrap().push(s2.now());
+                });
+            });
+        }
+        sim.run_until(10.0);
+        assert_eq!(*log.lock().unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn sim_clock_handle_reflects_set() {
+        let h = SimClockHandle::new();
+        assert_eq!(h.now(), 0.0);
+        h.set(42.5);
+        assert_eq!(h.now(), 42.5);
+        let h2 = h.clone();
+        assert_eq!(h2.now(), 42.5);
+    }
+}

@@ -1,0 +1,252 @@
+//! Minimal deterministic RNG + property-testing harness.
+//!
+//! The offline vendor set has no `rand` or `proptest`, so this module
+//! provides what the rest of the crate needs: a SplitMix64/xoshiro-style
+//! PRNG ([`Rng`]) and a tiny property-test runner ([`check`]) with seed
+//! reporting on failure (re-run a failure by pinning `SURVEILEDGE_PROP_SEED`).
+
+use std::env;
+
+/// SplitMix64-seeded xorshift* PRNG — fast, deterministic, good enough for
+/// workload generation and property tests (not cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        // SplitMix64 scramble so small seeds don't correlate streams.
+        let mut z = seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        Rng { state: (z ^ (z >> 31)) | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with rate `lambda`.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -self.f64().max(1e-12).ln() / lambda
+    }
+
+    /// Lognormal with log-mean `mu`, log-std `sigma`, shift `gamma`.
+    pub fn lognormal3(&mut self, mu: f64, sigma: f64, gamma: f64) -> f64 {
+        gamma + (mu + sigma * self.normal()).exp()
+    }
+
+    /// Sample an index from unnormalised weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "all-zero weights");
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range_usize(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fork an independent stream (for per-camera / per-node RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+}
+
+/// Number of cases per property (override with `SURVEILEDGE_PROP_CASES`).
+pub fn prop_cases() -> usize {
+    env::var("SURVEILEDGE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+/// Property-test runner: calls `prop(rng, case_index)`; on panic, reports
+/// the failing master seed so the case can be replayed with
+/// `SURVEILEDGE_PROP_SEED=<seed>`.
+pub fn check<F: FnMut(&mut Rng, usize)>(name: &str, mut prop: F) {
+    let master: u64 = env::var("SURVEILEDGE_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CAFE_F00D_0001);
+    let cases = prop_cases();
+    for case in 0..cases {
+        let seed = master.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay with SURVEILEDGE_PROP_SEED={master}): {e:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exp_mean() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let mean = (0..n).map(|_| r.exp(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn weighted_respects_zero_weights() {
+        let mut r = Rng::new(6);
+        for _ in 0..1000 {
+            let i = r.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn weighted_distribution() {
+        let mut r = Rng::new(7);
+        let w = [1.0, 3.0];
+        let n = 20_000;
+        let ones = (0..n).filter(|_| r.weighted(&w) == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn range_usize_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.range_usize(3, 7);
+            assert!((3..7).contains(&x));
+        }
+    }
+
+    #[test]
+    fn lognormal3_above_shift() {
+        let mut r = Rng::new(10);
+        for _ in 0..1000 {
+            assert!(r.lognormal3(0.0, 1.0, 2.5) > 2.5);
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counting", |_, _| {
+            count += 1;
+        });
+        assert_eq!(count, prop_cases());
+    }
+}

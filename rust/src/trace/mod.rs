@@ -1,0 +1,300 @@
+//! Workload traces: arrival processes + record/replay.
+//!
+//! Benches need repeatable workloads. A [`TraceRecord`] is the sequence of
+//! classification tasks a scenario produced (camera, time, true class,
+//! edge-CNN confidence, crop bytes); benches replay it through scheduler
+//! variants so every scheme sees the *identical* workload — the same trick
+//! the paper uses by replaying recorded video through each system variant.
+
+use crate::testkit::Rng;
+use crate::types::{CameraId, ClassId};
+
+/// One recorded classification task.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceTask {
+    /// Arrival time of the task at its home edge (seconds).
+    pub t_arrival: f64,
+    pub camera: CameraId,
+    /// Home edge index (1-based; 0 is the cloud).
+    pub home_edge: u32,
+    pub truth: ClassId,
+    /// Edge-CNN confidence that this is the query object.
+    pub confidence: f32,
+    /// What the ground-truth (cloud) CNN answers.
+    pub oracle_positive: bool,
+    /// Upload size if sent to the cloud.
+    pub crop_bytes: u64,
+}
+
+/// A full workload trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceRecord {
+    pub tasks: Vec<TraceTask>,
+}
+
+impl TraceRecord {
+    pub fn push(&mut self, t: TraceTask) {
+        self.tasks.push(t);
+    }
+
+    /// Tasks sorted by arrival time (stable).
+    pub fn sorted(mut self) -> TraceRecord {
+        self.tasks
+            .sort_by(|a, b| a.t_arrival.partial_cmp(&b.t_arrival).unwrap());
+        self
+    }
+
+    pub fn duration(&self) -> f64 {
+        self.tasks.iter().map(|t| t.t_arrival).fold(0.0, f64::max)
+    }
+
+    /// Serialize to a simple line format (CSV) for EXPERIMENTS.md dumps.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_arrival,camera,home_edge,truth,confidence,oracle,bytes\n");
+        for t in &self.tasks {
+            out.push_str(&format!(
+                "{:.4},{},{},{},{:.4},{},{}\n",
+                t.t_arrival,
+                t.camera.0,
+                t.home_edge,
+                t.truth.index(),
+                t.confidence,
+                t.oracle_positive as u8,
+                t.crop_bytes
+            ));
+        }
+        out
+    }
+
+    /// Parse the CSV format back (replay from disk).
+    pub fn from_csv(s: &str) -> Option<TraceRecord> {
+        let mut tasks = Vec::new();
+        for line in s.lines().skip(1) {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 7 {
+                return None;
+            }
+            tasks.push(TraceTask {
+                t_arrival: f[0].parse().ok()?,
+                camera: CameraId(f[1].parse().ok()?),
+                home_edge: f[2].parse().ok()?,
+                truth: ClassId::from_index(f[3].parse().ok()?)?,
+                confidence: f[4].parse().ok()?,
+                oracle_positive: f[5] == "1",
+                crop_bytes: f[6].parse().ok()?,
+            });
+        }
+        Some(TraceRecord { tasks })
+    }
+}
+
+/// Parameters of a synthetic trace (used by benches that don't need pixel
+/// frames: the confidence distribution stands in for the edge CNN).
+#[derive(Clone, Debug)]
+pub struct SyntheticTraceSpec {
+    pub n_edges: u32,
+    pub cams_per_edge: u32,
+    pub duration: f64,
+    /// Busy-period schedule per edge: staggered as in the video substrate.
+    pub period: f64,
+    pub base_rate: f64,
+    pub busy_rate: f64,
+    pub query: ClassId,
+    /// Probability the query object appears among arrivals.
+    pub positive_frac: f64,
+    /// Edge-CNN quality: confidence ~ Beta-like around the truth.
+    pub edge_sharpness: f64,
+    pub crop_bytes: u64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticTraceSpec {
+    fn default() -> SyntheticTraceSpec {
+        SyntheticTraceSpec {
+            n_edges: 1,
+            cams_per_edge: 4,
+            duration: 300.0,
+            period: 120.0,
+            base_rate: 0.1,
+            busy_rate: 0.6,
+            query: ClassId::Moped,
+            positive_frac: 0.18,
+            edge_sharpness: 4.0,
+            crop_bytes: 24 * 24 * 3,
+            seed: 7,
+        }
+    }
+}
+
+/// Draw an edge-CNN-like confidence: positives cluster near 1, negatives
+/// near 0, with overlap controlled by `sharpness` (higher = better CNN).
+pub fn synth_confidence(rng: &mut Rng, positive: bool, sharpness: f64) -> f32 {
+    // Sample from a Kumaraswamy(a,b)-style curve: cheap, bounded, skewed.
+    let u = rng.f64().max(1e-9);
+    let x = u.powf(1.0 / sharpness);
+    let f = if positive { x } else { 1.0 - x };
+    f as f32
+}
+
+/// Generate a synthetic trace with staggered busy windows per edge.
+pub fn generate(spec: &SyntheticTraceSpec) -> TraceRecord {
+    let mut rng = Rng::new(spec.seed);
+    let mut rec = TraceRecord::default();
+    for e in 0..spec.n_edges {
+        let busy_start = spec.period * (e as f64 / spec.n_edges.max(1) as f64);
+        let busy_len = spec.period / 3.0;
+        for c in 0..spec.cams_per_edge {
+            let cam = CameraId(e * spec.cams_per_edge + c);
+            let mut stream = rng.fork((e as u64) << 32 | c as u64);
+            let mut t = 0.0;
+            while t < spec.duration {
+                let phase = t.rem_euclid(spec.period);
+                let rate = if phase >= busy_start && phase < busy_start + busy_len {
+                    spec.busy_rate
+                } else {
+                    spec.base_rate
+                };
+                t += stream.exp(rate.max(1e-9));
+                if t >= spec.duration {
+                    break;
+                }
+                let positive = stream.bool(spec.positive_frac);
+                let truth = if positive {
+                    spec.query
+                } else {
+                    // any non-query class
+                    loop {
+                        let c = ClassId::from_index(stream.range_usize(0, 8)).unwrap();
+                        if c != spec.query {
+                            break c;
+                        }
+                    }
+                };
+                let confidence = synth_confidence(&mut stream, positive, spec.edge_sharpness);
+                // The oracle (cloud CNN) is right ~99% of the time.
+                let oracle_positive = if stream.bool(0.99) { positive } else { !positive };
+                rec.push(TraceTask {
+                    t_arrival: t,
+                    camera: cam,
+                    home_edge: e + 1,
+                    truth,
+                    confidence,
+                    oracle_positive,
+                    crop_bytes: spec.crop_bytes,
+                });
+            }
+        }
+    }
+    rec.sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    #[test]
+    fn generate_sorted_and_bounded() {
+        let spec = SyntheticTraceSpec { duration: 100.0, ..Default::default() };
+        let rec = generate(&spec);
+        assert!(!rec.tasks.is_empty());
+        for w in rec.tasks.windows(2) {
+            assert!(w[0].t_arrival <= w[1].t_arrival);
+        }
+        assert!(rec.duration() < 100.0);
+    }
+
+    #[test]
+    fn generate_deterministic() {
+        let spec = SyntheticTraceSpec::default();
+        assert_eq!(generate(&spec).tasks, generate(&spec).tasks);
+    }
+
+    #[test]
+    fn positives_roughly_match_fraction() {
+        let spec = SyntheticTraceSpec { duration: 2000.0, ..Default::default() };
+        let rec = generate(&spec);
+        let pos = rec.tasks.iter().filter(|t| t.truth == spec.query).count();
+        let frac = pos as f64 / rec.tasks.len() as f64;
+        assert!((frac - spec.positive_frac).abs() < 0.05, "frac {frac}");
+    }
+
+    #[test]
+    fn confidences_separate_classes() {
+        let mut rng = Rng::new(3);
+        let pos_mean: f64 = (0..2000)
+            .map(|_| synth_confidence(&mut rng, true, 4.0) as f64)
+            .sum::<f64>()
+            / 2000.0;
+        let neg_mean: f64 = (0..2000)
+            .map(|_| synth_confidence(&mut rng, false, 4.0) as f64)
+            .sum::<f64>()
+            / 2000.0;
+        assert!(pos_mean > 0.7, "pos {pos_mean}");
+        assert!(neg_mean < 0.3, "neg {neg_mean}");
+    }
+
+    #[test]
+    fn sharpness_controls_overlap() {
+        let mut rng = Rng::new(4);
+        let err = |sharp: f64, rng: &mut Rng| -> f64 {
+            let n = 2000;
+            let wrong = (0..n)
+                .filter(|i| {
+                    let positive = i % 2 == 0;
+                    let f = synth_confidence(rng, positive, sharp);
+                    (f >= 0.5) != positive
+                })
+                .count();
+            wrong as f64 / n as f64
+        };
+        let sloppy = err(1.5, &mut rng);
+        let sharp = err(8.0, &mut rng);
+        assert!(sharp < sloppy, "sharp {sharp} vs sloppy {sloppy}");
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let spec = SyntheticTraceSpec { duration: 50.0, ..Default::default() };
+        let rec = generate(&spec);
+        let csv = rec.to_csv();
+        let back = TraceRecord::from_csv(&csv).expect("parse");
+        assert_eq!(rec.tasks.len(), back.tasks.len());
+        for (a, b) in rec.tasks.iter().zip(back.tasks.iter()) {
+            assert_eq!(a.camera, b.camera);
+            assert_eq!(a.truth, b.truth);
+            assert_eq!(a.oracle_positive, b.oracle_positive);
+            assert!((a.t_arrival - b.t_arrival).abs() < 1e-3);
+            assert!((a.confidence - b.confidence).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn from_csv_rejects_malformed() {
+        assert!(TraceRecord::from_csv("header\n1,2,3\n").is_none());
+        let empty = TraceRecord::from_csv("header only\n").unwrap();
+        assert!(empty.tasks.is_empty());
+    }
+
+    #[test]
+    fn prop_busy_windows_stagger_load() {
+        check("trace_busy_stagger", |rng, _| {
+            let spec = SyntheticTraceSpec {
+                n_edges: 3,
+                duration: 360.0,
+                seed: rng.next_u64(),
+                ..Default::default()
+            };
+            let rec = generate(&spec);
+            // Each edge must have tasks, and arrival counts must differ
+            // across phases for at least one edge (busy periods exist).
+            for e in 1..=3u32 {
+                let n = rec.tasks.iter().filter(|t| t.home_edge == e).count();
+                assert!(n > 0, "edge {e} got no tasks");
+            }
+        });
+    }
+}

@@ -1,0 +1,387 @@
+//! Core domain types shared by every subsystem.
+
+use std::fmt;
+
+/// Object classes — must stay in sync with `python/compile/data.py::CLASSES`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ClassId {
+    Car = 0,
+    Bus = 1,
+    Truck = 2,
+    Moped = 3,
+    Bicycle = 4,
+    Person = 5,
+    Dog = 6,
+    Cart = 7,
+}
+
+pub const NUM_CLASSES: usize = 8;
+pub const CLASS_NAMES: [&str; NUM_CLASSES] =
+    ["car", "bus", "truck", "moped", "bicycle", "person", "dog", "cart"];
+
+impl ClassId {
+    pub fn from_index(i: usize) -> Option<ClassId> {
+        use ClassId::*;
+        [Car, Bus, Truck, Moped, Bicycle, Person, Dog, Cart].get(i).copied()
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        CLASS_NAMES[self.index()]
+    }
+
+    pub fn from_name(name: &str) -> Option<ClassId> {
+        CLASS_NAMES.iter().position(|n| *n == name).and_then(ClassId::from_index)
+    }
+}
+
+impl fmt::Display for ClassId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Identifies a camera in the deployment.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct CameraId(pub u32);
+
+/// Identifies a compute node. Per the paper, node `0` is the Cloud and
+/// `1..=N` are edge devices.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Debug)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub const CLOUD: NodeId = NodeId(0);
+
+    pub fn is_cloud(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_cloud() {
+            write!(f, "cloud")
+        } else {
+            write!(f, "edge{}", self.0)
+        }
+    }
+}
+
+/// An RGB f32 image in row-major HWC layout, values in `[0, 1]`.
+#[derive(Clone, PartialEq, Debug)]
+pub struct Image {
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>, // h * w * 3
+}
+
+impl Image {
+    pub fn new(h: usize, w: usize) -> Image {
+        Image { h, w, data: vec![0.0; h * w * 3] }
+    }
+
+    pub fn filled(h: usize, w: usize, rgb: [f32; 3]) -> Image {
+        let mut img = Image::new(h, w);
+        for px in img.data.chunks_exact_mut(3) {
+            px.copy_from_slice(&rgb);
+        }
+        img
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize) -> [f32; 3] {
+        let i = (y * self.w + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, rgb: [f32; 3]) {
+        let i = (y * self.w + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    /// Extract the sub-image `[y0, y1) x [x0, x1)` (clamped to bounds).
+    pub fn crop(&self, y0: usize, x0: usize, y1: usize, x1: usize) -> Image {
+        let y1 = y1.min(self.h);
+        let x1 = x1.min(self.w);
+        let (y0, x0) = (y0.min(y1), x0.min(x1));
+        let mut out = Image::new(y1 - y0, x1 - x0);
+        for y in y0..y1 {
+            let src = (y * self.w + x0) * 3;
+            let dst = ((y - y0) * out.w) * 3;
+            out.data[dst..dst + out.w * 3].copy_from_slice(&self.data[src..src + out.w * 3]);
+        }
+        out
+    }
+
+    /// Bilinear resize (half-pixel-centre convention, edge clamp) — the
+    /// exact algorithm of `python/compile/data.py::bilinear_resize`, so the
+    /// serving crop distribution matches the training distribution.
+    pub fn resize(&self, oh: usize, ow: usize) -> Image {
+        let mut out = Image::new(oh, ow);
+        let ry = self.h as f32 / oh as f32;
+        let rx = self.w as f32 / ow as f32;
+        for oy in 0..oh {
+            let sy = (oy as f32 + 0.5) * ry - 0.5;
+            let y0 = sy.floor().clamp(0.0, (self.h - 1) as f32) as usize;
+            let y1 = (y0 + 1).min(self.h - 1);
+            let fy = (sy - y0 as f32).clamp(0.0, 1.0);
+            for ox in 0..ow {
+                let sx = (ox as f32 + 0.5) * rx - 0.5;
+                let x0 = sx.floor().clamp(0.0, (self.w - 1) as f32) as usize;
+                let x1 = (x0 + 1).min(self.w - 1);
+                let fx = (sx - x0 as f32).clamp(0.0, 1.0);
+                let a = self.at(y0, x0);
+                let b = self.at(y0, x1);
+                let c = self.at(y1, x0);
+                let d = self.at(y1, x1);
+                let mut px = [0.0f32; 3];
+                for ch in 0..3 {
+                    let top = a[ch] * (1.0 - fx) + b[ch] * fx;
+                    let bot = c[ch] * (1.0 - fx) + d[ch] * fx;
+                    px[ch] = top * (1.0 - fy) + bot * fy;
+                }
+                out.set(oy, ox, px);
+            }
+        }
+        out
+    }
+
+    /// Mean absolute per-pixel difference against another image.
+    pub fn mad(&self, other: &Image) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        let sum: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        sum / self.data.len() as f32
+    }
+
+    /// Size in bytes when transmitted (used by the bandwidth meter);
+    /// models an 8-bit-per-channel encoding like the paper's JPEG crops.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.h * self.w * 3) as u64
+    }
+}
+
+/// A video frame from one camera.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub camera: CameraId,
+    /// Sequence number within the stream.
+    pub seq: u64,
+    /// Capture timestamp (seconds since scenario start).
+    pub t_capture: f64,
+    pub image: Image,
+}
+
+/// Axis-aligned bounding box in pixel coordinates, `[y0, y1) x [x0, x1)`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct BBox {
+    pub y0: usize,
+    pub x0: usize,
+    pub y1: usize,
+    pub x1: usize,
+}
+
+impl BBox {
+    pub fn height(&self) -> usize {
+        self.y1.saturating_sub(self.y0)
+    }
+
+    pub fn width(&self) -> usize {
+        self.x1.saturating_sub(self.x0)
+    }
+
+    pub fn area(&self) -> usize {
+        self.height() * self.width()
+    }
+
+    pub fn aspect(&self) -> f32 {
+        let h = self.height().max(1) as f32;
+        let w = self.width().max(1) as f32;
+        h.max(w) / h.min(w)
+    }
+
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &BBox) -> f32 {
+        let iy0 = self.y0.max(other.y0);
+        let ix0 = self.x0.max(other.x0);
+        let iy1 = self.y1.min(other.y1);
+        let ix1 = self.x1.min(other.x1);
+        if iy1 <= iy0 || ix1 <= ix0 {
+            return 0.0;
+        }
+        let inter = ((iy1 - iy0) * (ix1 - ix0)) as f32;
+        let union = (self.area() + other.area()) as f32 - inter;
+        inter / union
+    }
+
+    /// Grow by `m` pixels on every side, clamped to `(h, w)`.
+    pub fn expand(&self, m: usize, h: usize, w: usize) -> BBox {
+        BBox {
+            y0: self.y0.saturating_sub(m),
+            x0: self.x0.saturating_sub(m),
+            y1: (self.y1 + m).min(h),
+            x1: (self.x1 + m).min(w),
+        }
+    }
+}
+
+/// A detected moving object: the classification work unit ("task" in the
+/// paper). Carries the crop plus the routing/measurement metadata.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub camera: CameraId,
+    pub frame_seq: u64,
+    /// Frame capture time (query latency is measured from here).
+    pub t_capture: f64,
+    /// When the detector emitted the task.
+    pub t_detected: f64,
+    pub bbox: BBox,
+    /// Crop already resized to the CNN input resolution.
+    pub crop: Image,
+    /// Ground-truth class of the dominant object (available because the
+    /// substrate is synthetic; used for true-accuracy metrics only, never
+    /// by the pipeline itself).
+    pub truth: Option<ClassId>,
+}
+
+/// Where a task was ultimately classified.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Where {
+    /// Answered by the CQ-specific CNN on this edge.
+    Edge(NodeId),
+    /// Uploaded (doubtful band) and re-classified by the cloud CNN.
+    Cloud,
+}
+
+/// Final per-task query answer.
+#[derive(Clone, Debug)]
+pub struct Verdict {
+    pub task_id: u64,
+    pub camera: CameraId,
+    pub frame_seq: u64,
+    /// Query-object decision.
+    pub positive: bool,
+    /// Edge-classifier confidence f (probability of query object).
+    pub confidence: f32,
+    pub decided_at: Where,
+    /// End-to-end per-frame query latency (seconds).
+    pub latency: f64,
+    /// Ground truth positivity, if known.
+    pub truth_positive: Option<bool>,
+    /// What the ground-truth (cloud) CNN would answer — the paper measures
+    /// accuracy against the cloud model.
+    pub oracle_positive: Option<bool>,
+}
+
+/// A user query command (paper Fig. 1): object class + camera set.
+#[derive(Clone, Debug)]
+pub struct QueryCmd {
+    pub object: ClassId,
+    pub cameras: Vec<CameraId>,
+    /// Sampling interval `s` in seconds (paper uses 1 s).
+    pub interval: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_roundtrip() {
+        for i in 0..NUM_CLASSES {
+            let c = ClassId::from_index(i).unwrap();
+            assert_eq!(c.index(), i);
+            assert_eq!(ClassId::from_name(c.name()), Some(c));
+        }
+        assert!(ClassId::from_index(8).is_none());
+        assert!(ClassId::from_name("boat").is_none());
+    }
+
+    #[test]
+    fn node_id_cloud() {
+        assert!(NodeId::CLOUD.is_cloud());
+        assert!(!NodeId(3).is_cloud());
+        assert_eq!(format!("{}", NodeId(0)), "cloud");
+        assert_eq!(format!("{}", NodeId(2)), "edge2");
+    }
+
+    #[test]
+    fn image_set_at_roundtrip() {
+        let mut img = Image::new(4, 6);
+        img.set(2, 3, [0.1, 0.2, 0.3]);
+        assert_eq!(img.at(2, 3), [0.1, 0.2, 0.3]);
+        assert_eq!(img.at(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn image_crop_bounds() {
+        let mut img = Image::new(8, 8);
+        for y in 0..8 {
+            for x in 0..8 {
+                img.set(y, x, [y as f32, x as f32, 0.0]);
+            }
+        }
+        let c = img.crop(2, 3, 5, 7);
+        assert_eq!((c.h, c.w), (3, 4));
+        assert_eq!(c.at(0, 0), [2.0, 3.0, 0.0]);
+        assert_eq!(c.at(2, 3), [4.0, 6.0, 0.0]);
+        // clamped
+        let c2 = img.crop(6, 6, 20, 20);
+        assert_eq!((c2.h, c2.w), (2, 2));
+    }
+
+    #[test]
+    fn resize_identity() {
+        let mut img = Image::new(5, 7);
+        for i in 0..img.data.len() {
+            img.data[i] = (i % 13) as f32 / 13.0;
+        }
+        let out = img.resize(5, 7);
+        for (a, b) in img.data.iter().zip(&out.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn resize_constant_preserved() {
+        let img = Image::filled(9, 4, [0.25, 0.5, 0.75]);
+        let out = img.resize(32, 32);
+        for px in out.data.chunks_exact(3) {
+            assert!((px[0] - 0.25).abs() < 1e-6);
+            assert!((px[1] - 0.5).abs() < 1e-6);
+            assert!((px[2] - 0.75).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bbox_geometry() {
+        let b = BBox { y0: 2, x0: 4, y1: 10, x1: 8 };
+        assert_eq!(b.height(), 8);
+        assert_eq!(b.width(), 4);
+        assert_eq!(b.area(), 32);
+        assert!((b.aspect() - 2.0).abs() < 1e-6);
+        assert!((b.iou(&b) - 1.0).abs() < 1e-6);
+        let c = BBox { y0: 6, x0: 4, y1: 14, x1: 8 };
+        let iou = b.iou(&c);
+        assert!(iou > 0.0 && iou < 1.0);
+        let far = BBox { y0: 100, x0: 100, y1: 110, x1: 110 };
+        assert_eq!(b.iou(&far), 0.0);
+    }
+
+    #[test]
+    fn bbox_expand_clamps() {
+        let b = BBox { y0: 1, x0: 1, y1: 5, x1: 5 };
+        let e = b.expand(3, 6, 6);
+        assert_eq!(e, BBox { y0: 0, x0: 0, y1: 6, x1: 6 });
+    }
+}

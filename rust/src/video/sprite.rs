@@ -1,0 +1,337 @@
+//! Analytic sprite renderer — the Rust mirror of `python/compile/data.py`.
+//!
+//! The serving-side object distribution must equal the distribution the
+//! CNNs were trained on, so this file implements the *same specification*:
+//! per-pixel analytic masks in canonical [-1,1]² coordinates, f32 math,
+//! `lowbias32`-hashed per-pixel noise, no anti-aliasing. Golden tests below
+//! compare pixels against `artifacts/golden_sprites.bin` produced by the
+//! Python side.
+
+use crate::types::{ClassId, Image};
+
+/// Dark wheel/tyre colour (shared constant with data.py::WHEEL).
+pub const WHEEL: [f32; 3] = [0.13, 0.13, 0.15];
+
+/// Fully explicit, RNG-free description of one rendered object.
+#[derive(Clone, Debug)]
+pub struct SpriteParams {
+    pub cls: ClassId,
+    pub size: usize,
+    pub base: [f32; 3],
+    pub accent: [f32; 3],
+    pub bg: [f32; 3],
+    pub rot: f32,
+    pub jx: f32,
+    pub jy: f32,
+    pub noise: f32,
+    pub seed: u32,
+}
+
+/// lowbias32-style integer hash; same constants as data.py::_hash32.
+#[inline]
+pub fn hash32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB_352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846C_A68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Uniform noise in [-1, 1] for pixel (x, y) under `seed`.
+#[inline]
+pub fn pixel_noise(x: u32, y: u32, seed: u32) -> f32 {
+    let h = hash32(
+        x.wrapping_mul(73_856_093) ^ y.wrapping_mul(19_349_663) ^ seed.wrapping_mul(83_492_791),
+    );
+    (h as f32 / 4_294_967_295.0) * 2.0 - 1.0
+}
+
+// ---------------------------------------------------------------------------
+// Analytic masks (canonical coords: u right, v down)
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn rect(u: f32, v: f32, cx: f32, cy: f32, hw: f32, hh: f32) -> bool {
+    (u - cx).abs() <= hw && (v - cy).abs() <= hh
+}
+
+#[inline]
+fn ellipse(u: f32, v: f32, cx: f32, cy: f32, ru: f32, rv: f32) -> bool {
+    let du = (u - cx) / ru;
+    let dv = (v - cy) / rv;
+    du * du + dv * dv <= 1.0
+}
+
+#[inline]
+fn circle(u: f32, v: f32, cx: f32, cy: f32, r: f32) -> bool {
+    ellipse(u, v, cx, cy, r, r)
+}
+
+#[inline]
+fn ring(u: f32, v: f32, cx: f32, cy: f32, r: f32, w: f32) -> bool {
+    let d2 = (u - cx) * (u - cx) + (v - cy) * (v - cy);
+    d2 <= (r + w) * (r + w) && d2 >= (r - w) * (r - w)
+}
+
+#[inline]
+fn seg(u: f32, v: f32, x1: f32, y1: f32, x2: f32, y2: f32, w: f32) -> bool {
+    let (dx, dy) = (x2 - x1, y2 - y1);
+    let ll = (dx * dx + dy * dy).max(1e-9);
+    let t = (((u - x1) * dx + (v - y1) * dy) / ll).clamp(0.0, 1.0);
+    let (px, py) = (x1 + t * dx, y1 + t * dy);
+    (u - px) * (u - px) + (v - py) * (v - py) <= w * w
+}
+
+/// Evaluate the ordered layer list for `cls` at canonical point (u, v);
+/// returns the colour of the topmost hit layer, if any. Must mirror
+/// data.py::class_layers (same geometry constants, same order).
+fn layer_colour(cls: ClassId, u: f32, v: f32, base: [f32; 3], accent: [f32; 3]) -> Option<[f32; 3]> {
+    let b = base;
+    let a = accent;
+    let w = WHEEL;
+    // Layers are painted in order; the *last* hit wins, so scan in reverse.
+    macro_rules! layers {
+        ($(($m:expr, $c:expr)),+ $(,)?) => {{
+            let ls: &[(bool, [f32; 3])] = &[$(($m, $c)),+];
+            ls.iter().rev().find(|(hit, _)| *hit).map(|(_, c)| *c)
+        }};
+    }
+    match cls {
+        ClassId::Car => layers![
+            (rect(u, v, 0.0, 0.08, 0.72, 0.26), b),
+            (rect(u, v, -0.05, -0.22, 0.36, 0.16), a),
+            (circle(u, v, -0.42, 0.42, 0.16), w),
+            (circle(u, v, 0.42, 0.42, 0.16), w),
+        ],
+        ClassId::Bus => layers![
+            (rect(u, v, 0.0, 0.0, 0.85, 0.45), b),
+            (rect(u, v, 0.0, -0.2, 0.75, 0.1), a),
+            (circle(u, v, -0.5, 0.5, 0.14), w),
+            (circle(u, v, 0.5, 0.5, 0.14), w),
+        ],
+        ClassId::Truck => layers![
+            (rect(u, v, -0.58, 0.0, 0.2, 0.3), a),
+            (rect(u, v, 0.18, -0.08, 0.55, 0.38), b),
+            (circle(u, v, -0.58, 0.42, 0.13), w),
+            (circle(u, v, 0.05, 0.44, 0.13), w),
+            (circle(u, v, 0.6, 0.44, 0.13), w),
+        ],
+        ClassId::Moped => layers![
+            (circle(u, v, -0.45, 0.42, 0.2), w),
+            (circle(u, v, 0.45, 0.42, 0.2), w),
+            (rect(u, v, 0.08, 0.08, 0.28, 0.2), b),
+            (seg(u, v, 0.35, -0.3, 0.3, 0.1, 0.06), a),
+            (rect(u, v, 0.35, -0.35, 0.14, 0.05), a),
+            (rect(u, v, -0.28, -0.1, 0.16, 0.07), b),
+        ],
+        ClassId::Bicycle => layers![
+            (ring(u, v, -0.45, 0.32, 0.3, 0.07), w),
+            (ring(u, v, 0.45, 0.32, 0.3, 0.07), w),
+            (seg(u, v, -0.45, 0.32, 0.05, -0.3, 0.05), b),
+            (seg(u, v, 0.05, -0.3, 0.45, 0.32, 0.05), b),
+            (seg(u, v, -0.45, 0.32, 0.0, 0.32, 0.05), b),
+            (rect(u, v, 0.05, -0.38, 0.12, 0.04), a),
+        ],
+        ClassId::Person => layers![
+            (rect(u, v, -0.1, 0.55, 0.08, 0.3), a),
+            (rect(u, v, 0.12, 0.55, 0.08, 0.3), a),
+            (ellipse(u, v, 0.0, -0.02, 0.24, 0.38), b),
+            (circle(u, v, 0.0, -0.56, 0.18), a),
+        ],
+        ClassId::Dog => layers![
+            (rect(u, v, -0.3, 0.5, 0.06, 0.22), b),
+            (rect(u, v, 0.3, 0.5, 0.06, 0.22), b),
+            (ellipse(u, v, 0.0, 0.12, 0.48, 0.24), b),
+            (circle(u, v, 0.52, -0.1, 0.17), b),
+            (seg(u, v, -0.48, 0.0, -0.68, -0.3, 0.05), b),
+        ],
+        ClassId::Cart => layers![
+            (rect(u, v, 0.1, -0.02, 0.48, 0.3), b),
+            (circle(u, v, 0.1, 0.45, 0.18), w),
+            (seg(u, v, -0.38, -0.1, -0.75, -0.45, 0.05), a),
+        ],
+    }
+}
+
+/// Rasterise one sprite on its background: `(size, size, 3)` f32 image.
+pub fn render_sprite(p: &SpriteParams) -> Image {
+    let s = p.size;
+    let mut img = Image::filled(s, s, p.bg);
+    let (cos_r, sin_r) = (p.rot.cos(), p.rot.sin());
+    for y in 0..s {
+        // half-pixel centres mapped to [-1, 1]
+        let v = (2.0 * y as f32 + 1.0) / s as f32 - 1.0;
+        for x in 0..s {
+            let u = (2.0 * x as f32 + 1.0) / s as f32 - 1.0;
+            let uc = u - p.jx;
+            let vc = v - p.jy;
+            let ur = uc * cos_r + vc * sin_r;
+            let vr = -uc * sin_r + vc * cos_r;
+            let mut px = if let Some(c) = layer_colour(p.cls, ur, vr, p.base, p.accent) {
+                c
+            } else {
+                p.bg
+            };
+            if p.noise > 0.0 {
+                for (ch, val) in px.iter_mut().enumerate() {
+                    let seed = p.seed.wrapping_add((ch as u32).wrapping_mul(1_013_904_223));
+                    *val += p.noise * pixel_noise(x as u32, y as u32, seed);
+                }
+            }
+            img.set(y, x, [px[0].clamp(0.0, 1.0), px[1].clamp(0.0, 1.0), px[2].clamp(0.0, 1.0)]);
+        }
+    }
+    img
+}
+
+/// Paint a sprite into a larger frame at integer offset `(oy, ox)` without
+/// the sprite's own background: only pixels whose canonical-space mask hits
+/// a layer are painted (background stays the frame's). Noise is applied to
+/// painted pixels only.
+pub fn paint_sprite(frame: &mut Image, p: &SpriteParams, oy: i64, ox: i64) {
+    let s = p.size as i64;
+    let (cos_r, sin_r) = (p.rot.cos(), p.rot.sin());
+    for sy in 0..s {
+        let fy = oy + sy;
+        if fy < 0 || fy >= frame.h as i64 {
+            continue;
+        }
+        let v = (2.0 * sy as f32 + 1.0) / s as f32 - 1.0;
+        for sx in 0..s {
+            let fx = ox + sx;
+            if fx < 0 || fx >= frame.w as i64 {
+                continue;
+            }
+            let u = (2.0 * sx as f32 + 1.0) / s as f32 - 1.0;
+            let uc = u - p.jx;
+            let vc = v - p.jy;
+            let ur = uc * cos_r + vc * sin_r;
+            let vr = -uc * sin_r + vc * cos_r;
+            if let Some(mut c) = layer_colour(p.cls, ur, vr, p.base, p.accent) {
+                if p.noise > 0.0 {
+                    for (ch, val) in c.iter_mut().enumerate() {
+                        let seed = p.seed.wrapping_add((ch as u32).wrapping_mul(1_013_904_223));
+                        *val += p.noise * pixel_noise(sx as u32, sy as u32, seed);
+                    }
+                }
+                frame.set(fy as usize, fx as usize, [
+                    c[0].clamp(0.0, 1.0),
+                    c[1].clamp(0.0, 1.0),
+                    c[2].clamp(0.0, 1.0),
+                ]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::NUM_CLASSES;
+
+    fn demo_params(cls: ClassId) -> SpriteParams {
+        SpriteParams {
+            cls,
+            size: 24,
+            base: [0.8, 0.2, 0.2],
+            accent: [0.2, 0.2, 0.8],
+            bg: [0.5, 0.5, 0.5],
+            rot: 0.0,
+            jx: 0.0,
+            jy: 0.0,
+            noise: 0.0,
+            seed: 0,
+        }
+    }
+
+    #[test]
+    fn hash32_pinned_values() {
+        // Same pins as python/tests/test_data.py::test_hash32_pinned_values.
+        assert_eq!(hash32(0), 0);
+        assert_eq!(hash32(1), 1_753_845_952);
+        assert_eq!(hash32(2), 3_507_691_905);
+        assert_eq!(hash32(12_345), 2_435_775_735);
+        assert_eq!(hash32(0xFFFF_FFFF), 1_734_902_346);
+    }
+
+    #[test]
+    fn pixel_noise_bounded_and_deterministic() {
+        let mut acc = 0.0;
+        for y in 0..16u32 {
+            for x in 0..16u32 {
+                let n = pixel_noise(x, y, 42);
+                assert!(n.abs() <= 1.0);
+                assert_eq!(n, pixel_noise(x, y, 42));
+                acc += (n as f64) * (n as f64);
+            }
+        }
+        let std = (acc / 256.0).sqrt();
+        assert!(std > 0.3, "noise degenerate: std {std}");
+    }
+
+    #[test]
+    fn render_deterministic() {
+        let p = demo_params(ClassId::Moped);
+        assert_eq!(render_sprite(&p).data, render_sprite(&p).data);
+    }
+
+    #[test]
+    fn classes_render_distinct() {
+        let imgs: Vec<Image> = (0..NUM_CLASSES)
+            .map(|i| render_sprite(&demo_params(ClassId::from_index(i).unwrap())))
+            .collect();
+        for i in 0..imgs.len() {
+            for j in i + 1..imgs.len() {
+                assert!(imgs[i].mad(&imgs[j]) > 0.005, "classes {i} vs {j} identical");
+            }
+        }
+    }
+
+    #[test]
+    fn sprite_covers_sane_fraction() {
+        for i in 0..NUM_CLASSES {
+            let p = demo_params(ClassId::from_index(i).unwrap());
+            let img = render_sprite(&p);
+            let bg = Image::filled(p.size, p.size, p.bg);
+            let mut hits = 0;
+            for (a, b) in img.data.chunks_exact(3).zip(bg.data.chunks_exact(3)) {
+                if (a[0] - b[0]).abs().max((a[1] - b[1]).abs()).max((a[2] - b[2]).abs()) > 0.05 {
+                    hits += 1;
+                }
+            }
+            let frac = hits as f64 / (p.size * p.size) as f64;
+            assert!((0.05..0.9).contains(&frac), "class {i}: coverage {frac}");
+        }
+    }
+
+    #[test]
+    fn paint_respects_frame_bounds() {
+        let mut frame = Image::filled(40, 60, [0.4, 0.4, 0.4]);
+        let p = demo_params(ClassId::Car);
+        // Paint partially outside — must not panic, must change some pixels.
+        paint_sprite(&mut frame, &p, -10, 50);
+        paint_sprite(&mut frame, &p, 20, 20);
+        let base = Image::filled(40, 60, [0.4, 0.4, 0.4]);
+        assert!(frame.mad(&base) > 0.0);
+    }
+
+    #[test]
+    fn paint_leaves_background_untouched() {
+        let mut frame = Image::filled(64, 64, [0.3, 0.6, 0.3]);
+        let p = demo_params(ClassId::Person);
+        paint_sprite(&mut frame, &p, 20, 20);
+        // Far corner is untouched.
+        assert_eq!(frame.at(0, 0), [0.3, 0.6, 0.3]);
+        assert_eq!(frame.at(63, 63), [0.3, 0.6, 0.3]);
+    }
+
+    #[test]
+    fn noise_changes_pixels() {
+        let mut p = demo_params(ClassId::Bus);
+        let clean = render_sprite(&p);
+        p.noise = 0.1;
+        let noisy = render_sprite(&p);
+        assert!(clean.mad(&noisy) > 0.0);
+    }
+}

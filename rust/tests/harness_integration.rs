@@ -1,0 +1,144 @@
+//! Harness integration over synthetic compute: scheme orderings that the
+//! paper's tables rely on, run on the three prototype settings. These run
+//! without artifacts (synthetic confidences) so they always execute.
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::harness::{ComputeMode, Harness, SchemeResult};
+
+fn synth() -> ComputeMode {
+    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+}
+
+fn run(cfg: &Config, scheme: Scheme) -> SchemeResult {
+    let mut h = Harness::new(cfg.clone(), synth());
+    h.run(scheme).expect("run")
+}
+
+#[test]
+fn table2_shape_single_edge() {
+    // Full calibrated frame size: the 48x64 shortcut merges sprites into
+    // blobs and under-loads the single edge, washing out the Table II
+    // latency ordering.
+    let cfg = Config { duration: 240.0, ..Config::single_edge() };
+    let se = run(&cfg, Scheme::SurveilEdge);
+    let fixed = run(&cfg, Scheme::SurveilEdgeFixed);
+    let eo = run(&cfg, Scheme::EdgeOnly);
+    let co = run(&cfg, Scheme::CloudOnly);
+
+    // Paper Table II orderings:
+    assert!((co.row.accuracy - 1.0).abs() < 1e-9, "cloud-only is ground truth");
+    assert!(se.row.accuracy > eo.row.accuracy, "SE acc {} vs edge-only {}", se.row.accuracy, eo.row.accuracy);
+    assert!(se.row.avg_latency < co.row.avg_latency, "SE lat {} vs cloud-only {}", se.row.avg_latency, co.row.avg_latency);
+    assert!(se.row.avg_latency < eo.row.avg_latency, "SE lat {} vs edge-only {}", se.row.avg_latency, eo.row.avg_latency);
+    assert_eq!(eo.row.bandwidth_mb, 0.0);
+    assert!(co.row.bandwidth_mb >= se.row.bandwidth_mb, "bandwidth: CO {} >= SE {}", co.row.bandwidth_mb, se.row.bandwidth_mb);
+    assert!(fixed.row.bandwidth_mb < se.row.bandwidth_mb, "fixed uploads less than SE (paper Table II)");
+}
+
+#[test]
+fn table3_shape_homogeneous() {
+    let cfg = Config { duration: 240.0, frame_h: 48, frame_w: 64, ..Config::homogeneous() };
+    let se = run(&cfg, Scheme::SurveilEdge);
+    let eo = run(&cfg, Scheme::EdgeOnly);
+    let fixed = run(&cfg, Scheme::SurveilEdgeFixed);
+    // Multi-edge: the allocator exploits staggered busy windows, so the
+    // speedup over edge-only/fixed grows (paper: 15.8x / 16.2x).
+    assert!(se.row.avg_latency < eo.row.avg_latency);
+    assert!(se.row.avg_latency < fixed.row.avg_latency);
+    assert!(se.row.accuracy > eo.row.accuracy);
+}
+
+#[test]
+fn table4_shape_heterogeneous() {
+    let cfg = Config { duration: 240.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
+    let se = run(&cfg, Scheme::SurveilEdge);
+    let eo = run(&cfg, Scheme::EdgeOnly);
+    // The weak (0.25x) edge collapses in edge-only; SE drains it.
+    assert!(se.row.avg_latency < eo.row.avg_latency);
+    // Variance story (Fig. 8): SE's p99 is far below edge-only's.
+    assert!(se.latency.percentile(0.99) < eo.latency.percentile(0.99));
+}
+
+#[test]
+fn hetero_slowest_edge_dominates_edge_only_tail() {
+    let cfg = Config { duration: 240.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
+    let eo = run(&cfg, Scheme::EdgeOnly);
+    // Group per-frame latencies by home edge: edge 1 (speed 0.25) should
+    // have a worse mean than edge 3 (speed 1.0) under edge-only.
+    let mean_for = |edge: u32| {
+        let xs: Vec<f64> = eo.per_frame.iter().filter(|(_, _, e)| *e == edge).map(|(_, l, _)| *l).collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let slow = mean_for(1);
+    let fast = mean_for(3);
+    assert!(slow > fast, "slow edge mean {slow} should exceed fast edge mean {fast}");
+}
+
+#[test]
+fn surveiledge_tail_beats_fixed_tail() {
+    // Fig. 6(b)/7: the adaptive scheme prevents the ever-growing queueing
+    // tail the fixed scheme suffers.
+    let cfg = Config { duration: 240.0, frame_h: 48, frame_w: 64, ..Config::homogeneous() };
+    let se = run(&cfg, Scheme::SurveilEdge);
+    let fixed = run(&cfg, Scheme::SurveilEdgeFixed);
+    assert!(se.latency.percentile(0.95) < fixed.latency.percentile(0.95));
+}
+
+#[test]
+fn pdf_data_for_figures_is_well_formed() {
+    let cfg = Config { duration: 120.0, frame_h: 48, frame_w: 64, ..Config::single_edge() };
+    let se = run(&cfg, Scheme::SurveilEdge);
+    let (centres, dens) = se.latency.pdf(30);
+    assert_eq!(centres.len(), 30);
+    let width = centres[1] - centres[0];
+    let integral: f64 = dens.iter().map(|d| d * width).sum();
+    assert!((integral - 1.0).abs() < 1e-6);
+    // Per-frame series exists for the line plots.
+    assert_eq!(se.per_frame.len() as u64, se.tasks);
+}
+
+#[test]
+fn edge_outage_rerouting() {
+    // Extension experiment (failure injection): edge 1 goes dark for
+    // t in [60, 120). SurveilEdge reroutes its tasks; edge-only stalls them
+    // until recovery. Compare the latency impact on edge-1 frames.
+    use surveiledge::harness::EdgeOutage;
+    let cfg = Config { duration: 240.0, ..Config::homogeneous() };
+    let outage = EdgeOutage { edge: 1, from: 60.0, until: 120.0 };
+
+    let se = Harness::new(cfg.clone(), synth()).with_outage(outage).run(Scheme::SurveilEdge).unwrap();
+    let eo = Harness::new(cfg.clone(), synth()).with_outage(outage).run(Scheme::EdgeOnly).unwrap();
+
+    let edge1_mean = |r: &SchemeResult| {
+        let xs: Vec<f64> = r.per_frame.iter().filter(|(_, _, e)| *e == 1).map(|(_, l, _)| *l).collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    let se_m = edge1_mean(&se);
+    let eo_m = edge1_mean(&eo);
+    assert!(
+        se_m < eo_m,
+        "allocator should absorb the outage: SE edge1 mean {se_m:.2}s vs edge-only {eo_m:.2}s"
+    );
+    // Edge-only must show a severe stall (tasks held >= tens of seconds).
+    let eo_max = eo
+        .per_frame
+        .iter()
+        .filter(|(_, _, e)| *e == 1)
+        .map(|(_, l, _)| *l)
+        .fold(0.0f64, f64::max);
+    assert!(eo_max > 30.0, "expected a stall spike under edge-only, max {eo_max:.1}s");
+    // All tasks still answered eventually under both schemes.
+    assert_eq!(se.latency.len() as u64, se.tasks);
+}
+
+#[test]
+fn shipped_config_presets_load_and_run() {
+    for preset in ["single_edge", "homogeneous", "heterogeneous", "bicycle_query"] {
+        let path = format!("{}/configs/{preset}.toml", env!("CARGO_MANIFEST_DIR"));
+        let mut cfg = Config::from_file(std::path::Path::new(&path))
+            .unwrap_or_else(|e| panic!("{preset}: {e}"));
+        cfg.duration = 30.0; // shrink for the test
+        let r = Harness::new(cfg, synth()).run(Scheme::SurveilEdge).unwrap();
+        assert!(r.tasks > 0, "{preset} produced no tasks");
+    }
+}

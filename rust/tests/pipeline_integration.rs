@@ -1,0 +1,148 @@
+//! Full-pipeline integration: inference service + offline stage + online
+//! fine-tune + the DES harness in PJRT mode. Skipped when `artifacts/`
+//! has not been built.
+
+use std::path::{Path, PathBuf};
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::coordinator::{offline_stage, online_fine_tune, OfflineConfig};
+use surveiledge::harness::{ComputeMode, Harness, PjrtCtx};
+use surveiledge::runtime::service::InferenceService;
+use surveiledge::types::ClassId;
+use surveiledge::video::standard_deployment;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn service_spawns_and_serves_all_request_kinds() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let svc = InferenceService::spawn(dir, vec![1, 2]).expect("service");
+    let h = svc.handle.clone();
+
+    // Edge + cloud inference on a synthetic crop.
+    let crop = vec![0.5f32; 32 * 32 * 3];
+    let edge_probs = h.edge_infer(1, crop.clone()).unwrap();
+    assert_eq!(edge_probs.len(), 2);
+    assert!((edge_probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    let cloud_probs = h.cloud_infer(crop.clone()).unwrap();
+    assert_eq!(cloud_probs.len(), 8);
+
+    // Unknown edge is an error, not a panic.
+    assert!(h.edge_infer(99, crop.clone()).is_err());
+
+    // Frame-diff through the HLO artifact.
+    let n = 96 * 128 * 3;
+    let prev = vec![0.2f32; n];
+    let mut cur = vec![0.2f32; n];
+    let mut nxt = vec![0.2f32; n];
+    for i in 0..600 {
+        cur[10_000 + i] = 0.9;
+        nxt[20_000 + i] = 0.9;
+    }
+    let mask = h.framediff(prev, cur, nxt).unwrap();
+    assert_eq!(mask.len(), 96 * 128);
+
+    // Fine-tune on a renderer corpus, then deploy; the deployed model must
+    // behave differently from the pretrained one on some crop.
+    let (pixels, labels) = surveiledge::harness::finetune_corpus(ClassId::Moped, 96, 5);
+    let before = h.edge_infer(1, pixels[..32 * 32 * 3].to_vec()).unwrap();
+    let ft = h.fine_tune(pixels.clone(), labels, 12, 0.005, false).unwrap();
+    assert_eq!(ft.losses.len(), 12);
+    assert!(ft.losses.iter().all(|l| l.is_finite()));
+    h.deploy_edge(1, ft.params.clone()).unwrap();
+    let after = h.edge_infer(1, pixels[..32 * 32 * 3].to_vec()).unwrap();
+    assert!(
+        (before[1] - after[1]).abs() > 1e-6,
+        "deploying fine-tuned weights changed nothing: {before:?} vs {after:?}"
+    );
+    // Edge 2 still runs the pretrained weights.
+    let other = h.edge_infer(2, pixels[..32 * 32 * 3].to_vec()).unwrap();
+    assert!((other[1] - before[1]).abs() < 1e-5, "edge 2 weights must be untouched");
+
+    let stats = h.stats().unwrap();
+    assert!(stats.edge_infer.calls >= 4);
+    assert!(stats.cloud_infer.calls >= 1);
+    assert!(stats.train.calls >= 12);
+}
+
+#[test]
+fn offline_stage_profiles_clusters_and_datasets() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let svc = InferenceService::spawn(dir, vec![1]).expect("service");
+    // 6 cameras alternating Road/Square scenes.
+    let mut cams = standard_deployment(6, 96, 128, 33);
+    let cfg = OfflineConfig { duration: 60.0, k: 2, ..OfflineConfig::default() };
+    let stage = offline_stage(&mut cams, &svc.handle, &cfg).expect("offline stage");
+
+    assert_eq!(stage.profiles.len(), 6);
+    for p in &stage.profiles {
+        let s: f64 = p.proportions.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+    assert_eq!(stage.clustering.centres.len(), 2);
+    let total_crops: usize = stage.datasets.iter().map(|d| d.crops.len()).sum();
+    assert!(total_crops > 20, "offline stage produced only {total_crops} labeled crops");
+
+    // Online stage: fine-tune for the cluster containing camera 0.
+    let cluster = stage.cluster_of_camera(surveiledge::types::CameraId(0)).unwrap();
+    if stage.datasets[cluster].crops.len() >= 48 {
+        let ft = online_fine_tune(
+            &svc.handle,
+            &stage.datasets[cluster],
+            ClassId::Moped,
+            &[1],
+            10,
+            9,
+        )
+        .expect("online fine-tune");
+        assert_eq!(ft.losses.len(), 10);
+    }
+}
+
+#[test]
+fn harness_pjrt_mode_single_edge() {
+    let Some(_dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let cfg = Config {
+        duration: 30.0,
+        artifacts: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ..Config::single_edge()
+    };
+    let ctx = PjrtCtx::prepare(&cfg, 10).expect("pjrt ctx");
+    let mut h = Harness::new(cfg, ComputeMode::Pjrt(Box::new(ctx)));
+    let r = h.run(Scheme::SurveilEdge).expect("run");
+    assert!(r.tasks > 5, "PJRT harness produced only {} tasks", r.tasks);
+    assert_eq!(r.latency.len() as u64, r.tasks);
+    assert!(r.row.accuracy > 0.3, "PJRT accuracy {}", r.row.accuracy);
+    assert!(r.row.avg_latency > 0.0);
+}
+
+#[test]
+fn harness_pjrt_cloud_only_is_oracle() {
+    let Some(_dir) = artifact_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let cfg = Config {
+        duration: 20.0,
+        artifacts: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+        ..Config::single_edge()
+    };
+    let ctx = PjrtCtx::prepare(&cfg, 0).expect("pjrt ctx");
+    let mut h = Harness::new(cfg, ComputeMode::Pjrt(Box::new(ctx)));
+    let r = h.run(Scheme::CloudOnly).expect("run");
+    // Accuracy vs the oracle is 1.0 by construction in cloud-only.
+    assert!((r.row.accuracy - 1.0).abs() < 1e-9);
+    assert!(r.row.bandwidth_mb > 0.0);
+}

@@ -1,0 +1,407 @@
+//! Integration tests: the AOT artifact bundle executed through the PJRT
+//! runtime. These are the tests that prove the three layers compose:
+//! Python-trained weights + Pallas-lowered HLO + Rust execution reproduce
+//! the Python-side golden outputs bit-for-bit (within f32 tolerance).
+//!
+//! Skipped (cleanly) when `artifacts/` has not been built.
+
+use std::path::{Path, PathBuf};
+
+use surveiledge::runtime::{read_blob, Engine, MomentumSgd};
+use surveiledge::types::Image;
+use surveiledge::video::sprite::{render_sprite, SpriteParams};
+use surveiledge::types::ClassId;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Each test owns an Engine: `PjRtClient` is `Rc`-based (thread-bound),
+/// and multiple CPU clients coexist happily in one process.
+fn engine() -> Option<Engine> {
+    artifact_dir().map(|d| Engine::new(&d).expect("engine"))
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match engine() {
+            Some(e) => e,
+            None => {
+                eprintln!("skipping: artifacts/ not built");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let eng = require_artifacts!();
+    let m = &eng.manifest;
+    assert_eq!(m.img, 32);
+    assert_eq!(m.classes.len(), 8);
+    assert!(m.edge_params.len() >= 10);
+    assert!(m.cloud_params.len() >= 10);
+    assert!(m.edge_head_group <= m.edge_params.len());
+    for key in ["edge_infer_b1", "edge_infer_b8", "cloud_infer_b1", "cloud_infer_b8", "edge_train", "framediff"] {
+        assert!(m.artifacts.contains_key(key), "missing artifact {key}");
+        assert!(m.artifact_path(key).unwrap().exists());
+    }
+}
+
+#[test]
+fn edge_model_reproduces_golden_probs() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let batch = read_blob(&dir.join("golden_batch.bin")).unwrap();
+    let want = read_blob(&dir.join("golden_edge_probs.bin")).unwrap();
+    let params = eng.edge_pretrained().unwrap();
+    let model = eng.edge_model(8, &params).unwrap();
+    let got = model.infer(&batch).unwrap();
+    assert_eq!(got.len(), 8);
+    for (i, row) in got.iter().enumerate() {
+        assert_eq!(row.len(), 2);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+        for (j, &p) in row.iter().enumerate() {
+            let w = want[i * 2 + j];
+            assert!((p - w).abs() < 1e-3, "edge prob[{i}][{j}] {p} vs golden {w}");
+        }
+    }
+}
+
+#[test]
+fn cloud_model_reproduces_golden_probs() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let batch = read_blob(&dir.join("golden_batch.bin")).unwrap();
+    let want = read_blob(&dir.join("golden_cloud_probs.bin")).unwrap();
+    let params = eng.cloud_trained().unwrap();
+    let model = eng.cloud_model(8, &params).unwrap();
+    let got = model.infer(&batch).unwrap();
+    for (i, row) in got.iter().enumerate() {
+        for (j, &p) in row.iter().enumerate() {
+            let w = want[i * 8 + j];
+            assert!((p - w).abs() < 1e-3, "cloud prob[{i}][{j}] {p} vs golden {w}");
+        }
+    }
+}
+
+#[test]
+fn cloud_classifies_golden_batch_correctly() {
+    // The golden batch is one sprite per class in order; the trained cloud
+    // CNN should get (nearly) all of them right — it is the ground truth.
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let batch = read_blob(&dir.join("golden_batch.bin")).unwrap();
+    let params = eng.cloud_trained().unwrap();
+    let model = eng.cloud_model(8, &params).unwrap();
+    let got = model.infer(&batch).unwrap();
+    let correct = got
+        .iter()
+        .enumerate()
+        .filter(|(i, row)| {
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            argmax == *i
+        })
+        .count();
+    assert!(correct >= 6, "cloud got only {correct}/8 of its own classes");
+}
+
+#[test]
+fn batch1_matches_batch8() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let batch = read_blob(&dir.join("golden_batch.bin")).unwrap();
+    let params = eng.edge_pretrained().unwrap();
+    let m8 = eng.edge_model(8, &params).unwrap();
+    let m1 = eng.edge_model(1, &params).unwrap();
+    let full = m8.infer(&batch).unwrap();
+    let px = 32 * 32 * 3;
+    for i in 0..8 {
+        let one = m1.infer(&batch[i * px..(i + 1) * px]).unwrap();
+        for j in 0..2 {
+            assert!(
+                (one[0][j] - full[i][j]).abs() < 1e-4,
+                "b1 vs b8 mismatch at {i},{j}: {} vs {}",
+                one[0][j],
+                full[i][j]
+            );
+        }
+    }
+}
+
+#[test]
+fn rust_rendered_sprite_is_classified_by_cloud() {
+    // Full cross-language loop: sprite rendered in RUST, classified by the
+    // Python-trained cloud CNN through PJRT. This is the test that pins
+    // the two renderer implementations to the same distribution.
+    let eng = require_artifacts!();
+    let params = eng.cloud_trained().unwrap();
+    let model = eng.cloud_model(1, &params).unwrap();
+    let mut correct = 0;
+    let classes = [ClassId::Car, ClassId::Bus, ClassId::Person, ClassId::Moped];
+    for (k, cls) in classes.iter().enumerate() {
+        let sprite = render_sprite(&SpriteParams {
+            cls: *cls,
+            size: 24,
+            base: [0.75, 0.25, 0.2],
+            accent: [0.2, 0.35, 0.8],
+            bg: [0.45, 0.47, 0.44],
+            rot: 0.05,
+            jx: 0.02,
+            jy: -0.02,
+            noise: 0.04,
+            seed: 7000 + k as u32,
+        });
+        let crop = sprite.resize(32, 32);
+        let probs = model.infer(&crop.data).unwrap();
+        let argmax = probs[0]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == cls.index() {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 3, "cloud CNN recognised only {correct}/4 rust-rendered sprites");
+}
+
+#[test]
+fn golden_resize_matches_python() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let input = read_blob(&dir.join("golden_resize_in.bin")).unwrap();
+    let want = read_blob(&dir.join("golden_resize_out.bin")).unwrap();
+    let img = Image { h: 24, w: 24, data: input };
+    let out = img.resize(32, 32);
+    assert_eq!(out.data.len(), want.len());
+    let max_diff = out
+        .data
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "rust resize deviates from python by {max_diff}");
+}
+
+#[test]
+fn golden_sprites_match_python_renderer() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let blob = read_blob(&dir.join("golden_sprites.bin")).unwrap();
+    let per = 24 * 24 * 3;
+    assert_eq!(blob.len(), 8 * per);
+    for cls in 0..8usize {
+        let p = SpriteParams {
+            cls: ClassId::from_index(cls).unwrap(),
+            size: 24,
+            base: [0.8, 0.2, 0.2],
+            accent: [0.2, 0.3, 0.8],
+            bg: [0.45, 0.47, 0.44],
+            rot: 0.15,
+            jx: 0.05,
+            jy: -0.04,
+            noise: 0.06,
+            seed: 1000 + cls as u32,
+        };
+        let img = render_sprite(&p);
+        let want = &blob[cls * per..(cls + 1) * per];
+        // Hard-mask rasterisation: tiny trig differences can flip boundary
+        // pixels, so compare by mismatch fraction, not exact equality.
+        let mismatches = img
+            .data
+            .iter()
+            .zip(want)
+            .filter(|(a, b)| (*a - *b).abs() > 1e-3)
+            .count();
+        let frac = mismatches as f64 / per as f64;
+        assert!(frac < 0.01, "class {cls}: {:.3}% pixels differ from python", frac * 100.0);
+    }
+}
+
+#[test]
+fn finetune_step_decreases_loss_and_updates_head_only() {
+    let eng = require_artifacts!();
+    let trainer = eng.trainer().unwrap();
+    let mut params = eng.edge_pretrained().unwrap();
+    let before = params.clone();
+    let n = params.len();
+    let mask = MomentumSgd::head_only_mask(n, eng.manifest.edge_head_group);
+    let mut opt = MomentumSgd::new(&eng.manifest.edge_params, 0.005, mask.clone());
+
+    // Build a fine-tune batch from rust-rendered sprites: query = moped.
+    let b = trainer.batch;
+    let mut pixels = Vec::with_capacity(b * 32 * 32 * 3);
+    let mut labels = Vec::with_capacity(b);
+    for i in 0..b {
+        let is_pos = i % 2 == 0;
+        let cls = if is_pos { ClassId::Moped } else { ClassId::Car };
+        let sprite = render_sprite(&SpriteParams {
+            cls,
+            size: 20 + (i % 8),
+            base: [0.3 + 0.05 * (i % 5) as f32, 0.5, 0.4],
+            accent: [0.6, 0.3, 0.2 + 0.05 * (i % 4) as f32],
+            bg: [0.45, 0.47, 0.44],
+            rot: 0.02 * i as f32 - 0.3,
+            jx: 0.0,
+            jy: 0.0,
+            noise: 0.05,
+            seed: 9000 + i as u32,
+        });
+        pixels.extend_from_slice(&sprite.resize(32, 32).data);
+        labels.push(is_pos as i32);
+    }
+
+    let mut losses = Vec::new();
+    for _ in 0..20 {
+        let out = trainer.grad_step(&params, &pixels, &labels).unwrap();
+        assert!(out.loss.is_finite());
+        losses.push(out.loss);
+        opt.step(&mut params, &out.grads);
+    }
+    let first3: f32 = losses[..3].iter().sum::<f32>() / 3.0;
+    let last3: f32 = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
+    assert!(last3 < first3, "fine-tune loss did not decrease: {losses:?}");
+    // Masked (backbone) params unchanged; head params moved.
+    for i in 0..n {
+        let changed = params[i] != before[i];
+        assert_eq!(changed, mask[i], "param {i} mask violation (changed={changed})");
+    }
+}
+
+#[test]
+fn framediff_hlo_matches_native() {
+    let eng = require_artifacts!();
+    let fd = eng.framediff().unwrap();
+    let (h, w) = (fd.h, fd.w);
+    // A moving block triplet.
+    let mut prev = Image::filled(h, w, [0.5, 0.5, 0.5]);
+    let mut cur = prev.clone();
+    let mut nxt = prev.clone();
+    for y in 20..40 {
+        for x in 10..30 {
+            prev.set(y, x, [1.0, 0.9, 0.8]);
+        }
+        for x in 40..60 {
+            cur.set(y, x, [1.0, 0.9, 0.8]);
+        }
+        for x in 70..90 {
+            nxt.set(y, x, [1.0, 0.9, 0.8]);
+        }
+    }
+    let got = fd.mask(&prev.data, &cur.data, &nxt.data).unwrap();
+    let want = surveiledge::detect::framediff::framediff_native(&prev, &cur, &nxt, 0.1);
+    assert_eq!(got.len(), want.len());
+    let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+    assert_eq!(diff, 0, "HLO vs native framediff: {diff} differing pixels");
+    assert!(got.iter().any(|&m| m == 1), "mask must detect the moving block");
+}
+
+#[test]
+fn deployed_weight_swap_changes_output() {
+    let eng = require_artifacts!();
+    let dir = &eng.manifest.dir;
+    let batch1: Vec<f32> = read_blob(&dir.join("golden_batch.bin")).unwrap()[..32 * 32 * 3].to_vec();
+    let params = eng.edge_pretrained().unwrap();
+    let mut model = eng.edge_model(1, &params).unwrap();
+    let before = model.infer(&batch1).unwrap()[0].clone();
+    // Perturb the head weights and redeploy (what fine-tune deployment does).
+    let mut newp = params.clone();
+    let n = newp.len();
+    for v in newp[n - 2].iter_mut() {
+        *v += 0.5;
+    }
+    model.set_params(&newp).unwrap();
+    let after = model.infer(&batch1).unwrap()[0].clone();
+    assert!(
+        (before[1] - after[1]).abs() > 1e-6,
+        "weight swap had no effect: {before:?} vs {after:?}"
+    );
+}
+
+#[test]
+fn microbatcher_pads_and_splits_correctly() {
+    let eng = require_artifacts!();
+    use std::time::Duration;
+    use surveiledge::runtime::batcher::MicroBatcher;
+
+    let params = eng.edge_pretrained().unwrap();
+    // Reference answers from the b1 model.
+    let m1 = eng.edge_model(1, &params).unwrap();
+    let dir = &eng.manifest.dir;
+    let batch = read_blob(&dir.join("golden_batch.bin")).unwrap();
+    let px = 32 * 32 * 3;
+
+    let m8 = eng.edge_model(8, &params).unwrap();
+    let (mut batcher, handle) = MicroBatcher::new(m8, 64, Duration::from_millis(5));
+
+    // Send 5 requests (partial batch -> padding) from another thread.
+    let senders: Vec<std::thread::JoinHandle<Vec<f32>>> = (0..5)
+        .map(|i| {
+            let h = handle.clone();
+            let crop = batch[i * px..(i + 1) * px].to_vec();
+            std::thread::spawn(move || h.infer(crop).unwrap())
+        })
+        .collect();
+    // Pump windows until all replies are in.
+    let mut pumps = 0;
+    while pumps < 50 {
+        batcher.pump(Duration::from_millis(10));
+        pumps += 1;
+        if batcher.stats().requests >= 5 {
+            break;
+        }
+    }
+    for (i, s) in senders.into_iter().enumerate() {
+        let got = s.join().unwrap();
+        let want = m1.infer(&batch[i * px..(i + 1) * px]).unwrap()[0].clone();
+        for j in 0..2 {
+            assert!(
+                (got[j] - want[j]).abs() < 1e-4,
+                "batched row {i} col {j}: {} vs b1 {}",
+                got[j],
+                want[j]
+            );
+        }
+    }
+    let stats = batcher.stats();
+    assert_eq!(stats.requests, 5);
+    assert!(stats.batches >= 1);
+}
+
+#[test]
+fn microbatcher_isolates_bad_requests() {
+    let eng = require_artifacts!();
+    use std::time::Duration;
+    use surveiledge::runtime::batcher::MicroBatcher;
+
+    let params = eng.edge_pretrained().unwrap();
+    let m8 = eng.edge_model(8, &params).unwrap();
+    let (mut batcher, handle) = MicroBatcher::new(m8, 8, Duration::from_millis(2));
+
+    let bad = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer(vec![0.0; 10])) // wrong size
+    };
+    let good = {
+        let h = handle.clone();
+        std::thread::spawn(move || h.infer(vec![0.5; 32 * 32 * 3]))
+    };
+    let mut pumps = 0;
+    while pumps < 50 && batcher.stats().requests < 2 {
+        batcher.pump(Duration::from_millis(10));
+        pumps += 1;
+    }
+    assert!(bad.join().unwrap().is_err(), "bad-size request must fail alone");
+    let probs = good.join().unwrap().expect("good request must survive the batch");
+    assert_eq!(probs.len(), 2);
+}
