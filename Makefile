@@ -1,0 +1,22 @@
+# Convenience targets. The Rust build itself is plain cargo (offline,
+# path-only deps); see README.md.
+
+.PHONY: build test doc artifacts bench
+
+build:
+	cargo build --release
+
+# Tier-1 verification (what CI runs on the default feature set).
+test:
+	cargo build --release && cargo test -q
+
+doc:
+	cargo doc --no-deps
+
+# Build the AOT artifact bundle (needs Python + JAX; runs once).
+# Python is build-time only — never on the request path.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts/manifest.json
+
+bench:
+	cargo bench --bench bench_tables

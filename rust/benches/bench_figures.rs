@@ -48,7 +48,7 @@ fn figure(fig: &str, cfg: Config, edges: &[u32]) -> anyhow::Result<()> {
             r.latency.percentile(0.99),
             centres.len()
         );
-        dump(&format!("fig{fig}_pdf_{}", r.row.scheme.replace(['(', ')'], "")), &csv);
+        dump(&format!("fig{fig}_pdf_{}", r.row.scheme.replace(&['(', ')'][..], "")), &csv);
 
         // (b)-(d): per-frame series, per home edge.
         for &edge in edges {
@@ -77,7 +77,7 @@ fn figure(fig: &str, cfg: Config, edges: &[u32]) -> anyhow::Result<()> {
             );
             let csv = render_csv(&["t", "latency_s"], &[&times, &lats]);
             dump(
-                &format!("fig{fig}_series_{}_edge{edge}", r.row.scheme.replace(['(', ')'], "")),
+                &format!("fig{fig}_series_{}_edge{edge}", r.row.scheme.replace(&['(', ')'][..], "")),
                 &csv,
             );
         }

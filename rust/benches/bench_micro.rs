@@ -123,32 +123,46 @@ fn main() -> anyhow::Result<()> {
     let crop = rand_image(&mut rng, 24, 24);
     bench.run("image::resize 24->32", || crop.resize(32, 32));
 
-    // --- PJRT (artifact-dependent) ----------------------------------------------
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        Bench::header("PJRT inference (AOT artifacts)");
-        let engine = surveiledge::runtime::Engine::new(std::path::Path::new("artifacts"))?;
-        let edge1 = engine.edge_model(1, &engine.edge_pretrained()?)?;
-        let edge8 = engine.edge_model(8, &engine.edge_pretrained()?)?;
-        let cloud1 = engine.cloud_model(1, &engine.cloud_trained()?)?;
-        let fd = engine.framediff()?;
-        let crop1 = vec![0.5f32; 32 * 32 * 3];
-        let crop8 = vec![0.5f32; 8 * 32 * 32 * 3];
-        bench.run("pjrt::edge_infer b1", || edge1.infer(&crop1).unwrap().len());
-        bench.run("pjrt::edge_infer b8", || edge8.infer(&crop8).unwrap().len());
-        bench.run("pjrt::cloud_infer b1", || cloud1.infer(&crop1).unwrap().len());
-        let fh = engine.manifest.frame_h;
-        let fw = engine.manifest.frame_w;
-        let fr = vec![0.4f32; fh * fw * 3];
-        bench.run("pjrt::framediff_hlo", || fd.mask(&fr, &fr, &fr).unwrap().len());
-        // Ablation companion: native vs HLO dense stage at the same size.
-        let p2 = Image { h: fh, w: fw, data: fr.clone() };
-        bench.run("detect::framediff_native (same size)", || {
-            framediff_native(&p2, &p2, &p2, 0.1)
-        });
-    } else {
-        println!("\n(artifacts/ not built; skipping PJRT micro-benchmarks)");
-    }
+    // --- reference classifier (default-build CNN stand-in) -----------------------
+    let clf = surveiledge::runtime::reference::ReferenceClassifier::new(32);
+    let ref_crop = vec![0.5f32; 32 * 32 * 3];
+    bench.run("reference::cloud_probs 32x32", || clf.cloud_probs(&ref_crop).unwrap().len());
+
+    // --- PJRT (artifact-dependent, `--features pjrt`) -----------------------------
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut bench)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("\n(built without the `pjrt` feature; skipping PJRT micro-benchmarks)");
 
     println!("\n{} benchmarks completed", bench.results().len());
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(bench: &mut Bench) -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(artifacts/ not built; skipping PJRT micro-benchmarks)");
+        return Ok(());
+    }
+    Bench::header("PJRT inference (AOT artifacts)");
+    let engine = surveiledge::runtime::Engine::new(std::path::Path::new("artifacts"))?;
+    let edge1 = engine.edge_model(1, &engine.edge_pretrained()?)?;
+    let edge8 = engine.edge_model(8, &engine.edge_pretrained()?)?;
+    let cloud1 = engine.cloud_model(1, &engine.cloud_trained()?)?;
+    let fd = engine.framediff()?;
+    let crop1 = vec![0.5f32; 32 * 32 * 3];
+    let crop8 = vec![0.5f32; 8 * 32 * 32 * 3];
+    bench.run("pjrt::edge_infer b1", || edge1.infer(&crop1).unwrap().len());
+    bench.run("pjrt::edge_infer b8", || edge8.infer(&crop8).unwrap().len());
+    bench.run("pjrt::cloud_infer b1", || cloud1.infer(&crop1).unwrap().len());
+    let fh = engine.manifest.frame_h;
+    let fw = engine.manifest.frame_w;
+    let fr = vec![0.4f32; fh * fw * 3];
+    bench.run("pjrt::framediff_hlo", || fd.mask(&fr, &fr, &fr).unwrap().len());
+    // Ablation companion: native vs HLO dense stage at the same size.
+    let p2 = Image { h: fh, w: fw, data: fr.clone() };
+    bench.run("detect::framediff_native (same size)", || {
+        framediff_native(&p2, &p2, &p2, 0.1)
+    });
     Ok(())
 }

@@ -8,7 +8,7 @@
 //! classification through the real AOT-compiled CNNs.
 
 use surveiledge::config::{Config, Scheme};
-use surveiledge::harness::{ComputeMode, Harness, PjrtCtx};
+use surveiledge::harness::{standard_mode, Harness};
 use surveiledge::metrics::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -25,11 +25,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut rows = Vec::new();
     for scheme in Scheme::all() {
-        let mode = if pjrt {
-            ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(&cfg, 30)?))
-        } else {
-            ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
-        };
+        let mode = standard_mode(&cfg, pjrt)?;
         let mut harness = Harness::new(cfg.clone(), mode);
         let result = harness.run(scheme)?;
         println!(

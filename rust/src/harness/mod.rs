@@ -8,10 +8,12 @@
 //! the experiments run the paper's multi-hour regime in seconds on this
 //! one-core host. Compute itself has two modes:
 //!
-//! * [`ComputeMode::Pjrt`] — every classification is a *real* PJRT call on
-//!   the AOT artifacts (real CNN confidences; logical service times).
-//! * [`ComputeMode::Synthetic`] — confidences drawn from a calibrated
-//!   distribution (for fast sweeps and benches without artifacts).
+//! * `ComputeMode::Pjrt` (requires `--features pjrt`) — every
+//!   classification is a *real* PJRT call on the AOT artifacts (real CNN
+//!   confidences; logical service times).
+//! * `ComputeMode::Synthetic` — confidences drawn from a calibrated
+//!   distribution (for fast sweeps and benches without artifacts; the
+//!   default build's only mode).
 //!
 //! Network model: each edge has a FIFO uplink of `uplink_mbps`; a crop's
 //! wire size models the *native-resolution* crop the paper ships (our
@@ -26,6 +28,7 @@ use crate::config::{Config, Scheme};
 use crate::detect::{detect, DetectConfig};
 use crate::estimator::LatencyEstimator;
 use crate::metrics::{Confusion, LatencyRecorder, SchemeRow};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ModelRunner, MomentumSgd};
 use crate::sched::{allocate, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
 use crate::testkit::Rng;
@@ -54,7 +57,8 @@ impl Default for ServiceTimes {
 
 /// Compute source for classifications.
 pub enum ComputeMode {
-    /// Real PJRT inference through the AOT bundle.
+    /// Real PJRT inference through the AOT bundle (`--features pjrt`).
+    #[cfg(feature = "pjrt")]
     Pjrt(Box<PjrtCtx>),
     /// Calibrated synthetic confidences (no artifacts required).
     Synthetic {
@@ -69,13 +73,40 @@ pub enum ComputeMode {
     },
 }
 
+impl ComputeMode {
+    /// The calibrated synthetic mode every CLI/bench defaults to (matches
+    /// the paper-era confidence calibration, DESIGN.md §3).
+    pub fn synthetic_default() -> ComputeMode {
+        ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+    }
+}
+
+/// Standard mode selection shared by the binary, benches and examples:
+/// PJRT when requested (requires the `pjrt` feature and artifacts, with 30
+/// fine-tune steps), the calibrated synthetic mode otherwise.
+pub fn standard_mode(cfg: &Config, pjrt: bool) -> crate::Result<ComputeMode> {
+    let _ = cfg; // only consulted on the PJRT path
+    if pjrt {
+        #[cfg(feature = "pjrt")]
+        return Ok(ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(cfg, 30)?)));
+        #[cfg(not(feature = "pjrt"))]
+        anyhow::bail!(
+            "--pjrt / BENCH_PJRT=1 needs a build with the runtime bridge: \
+             cargo build --release --features pjrt (and `make artifacts`)"
+        );
+    }
+    Ok(ComputeMode::synthetic_default())
+}
+
 /// PJRT context: engine + fine-tuned edge model + cloud model.
+#[cfg(feature = "pjrt")]
 pub struct PjrtCtx {
     pub engine: Engine,
     pub edge_model: ModelRunner,
     pub cloud_model: ModelRunner,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtCtx {
     /// Build the context: load the bundle and run the online fine-tuning
     /// stage (head-group momentum-SGD on a renderer-generated
@@ -154,6 +185,7 @@ struct SimTask {
     t_capture: f64,
     home_edge: u32,
     /// Crop pixels (PJRT mode) — empty in synthetic mode.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     crop: Vec<f32>,
     wire_bytes: u64,
     truth_positive: Option<bool>,
@@ -269,6 +301,7 @@ impl Harness {
         let cfg = self.cfg.clone();
         let n_edges = cfg.edges.len() as u32;
         let (frame_h, frame_w) = match &self.mode {
+            #[cfg(feature = "pjrt")]
             ComputeMode::Pjrt(ctx) => (ctx.engine.manifest.frame_h, ctx.engine.manifest.frame_w),
             ComputeMode::Synthetic { .. } => (cfg.frame_h, cfg.frame_w),
         };
@@ -382,6 +415,7 @@ impl Harness {
                                 t_capture: t - cfg.interval, // crop comes from the middle frame
                                 home_edge: cam_edge[ci],
                                 crop: match &self.mode {
+                                    #[cfg(feature = "pjrt")]
                                     ComputeMode::Pjrt(_) => crop.data,
                                     ComputeMode::Synthetic { .. } => Vec::new(),
                                 },
@@ -578,7 +612,9 @@ impl Harness {
         rng: &mut Rng,
     ) -> crate::Result<(bool, Option<f32>)> {
         let query = self.cfg.query;
+        let _ = crop; // only the PJRT arm consumes pixels
         match &mut self.mode {
+            #[cfg(feature = "pjrt")]
             ComputeMode::Pjrt(ctx) => {
                 let probs = ctx.cloud_model.infer(&crop.data)?;
                 let best = probs[0]
@@ -611,6 +647,7 @@ impl Harness {
     /// Edge CNN confidence for a task at classify time.
     fn edge_confidence(&mut self, task: &SimTask) -> crate::Result<f32> {
         match &mut self.mode {
+            #[cfg(feature = "pjrt")]
             ComputeMode::Pjrt(ctx) => {
                 let probs = ctx.edge_model.infer(&task.crop)?;
                 Ok(probs[0].get(1).copied().unwrap_or(0.0))

@@ -13,7 +13,7 @@ use std::path::Path;
 
 use surveiledge::config::{Config, Scheme};
 use surveiledge::coordinator::{offline_stage, OfflineConfig};
-use surveiledge::harness::{run_all_schemes, ComputeMode, Harness, PjrtCtx};
+use surveiledge::harness::{run_all_schemes, standard_mode, Harness};
 use surveiledge::metrics::render_table;
 use surveiledge::runtime::service::InferenceService;
 use surveiledge::runtime::Manifest;
@@ -59,20 +59,12 @@ fn load_config(args: &[String]) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
-fn mode_for(cfg: &Config, pjrt: bool) -> anyhow::Result<ComputeMode> {
-    if pjrt {
-        Ok(ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(cfg, 30)?)))
-    } else {
-        Ok(ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 })
-    }
-}
-
 fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let scheme = arg_value(args, "--scheme")
         .and_then(|s| Scheme::from_name(&s))
         .unwrap_or(Scheme::SurveilEdge);
-    let mode = mode_for(&cfg, has_flag(args, "--pjrt"))?;
+    let mode = standard_mode(&cfg, has_flag(args, "--pjrt"))?;
     let mut h = Harness::new(cfg, mode);
     let r = h.run(scheme)?;
     println!("{}", render_table("result", std::slice::from_ref(&r.row)));
@@ -97,7 +89,7 @@ fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
         }
         _ => "Table IV — heterogeneous edges and cloud",
     };
-    let results = run_all_schemes(&cfg, &mut || mode_for(&cfg, pjrt))?;
+    let results = run_all_schemes(&cfg, &mut || standard_mode(&cfg, pjrt))?;
     let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
     println!("{}", render_table(title, &rows));
     Ok(())

@@ -241,22 +241,23 @@ pub struct UploadedTask {
     pub edge_confidence: f32,
 }
 
+fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize) -> &'a [u8] {
+    let s = &bytes[*off..*off + n];
+    *off += n;
+    s
+}
+
 pub fn decode_task(bytes: &[u8]) -> crate::Result<UploadedTask> {
     anyhow::ensure!(bytes.len() >= 44, "short task payload");
     let mut off = 0usize;
-    let mut take = |n: usize| {
-        let s = &bytes[off..off + n];
-        off += n;
-        s
-    };
-    let id = u64::from_le_bytes(take(8).try_into()?);
-    let camera = u32::from_le_bytes(take(4).try_into()?);
-    let frame_seq = u64::from_le_bytes(take(8).try_into()?);
-    let t_capture = f64::from_le_bytes(take(8).try_into()?);
-    let confidence = f32::from_le_bytes(take(4).try_into()?);
-    let truth_raw = u32::from_le_bytes(take(4).try_into()?);
-    let h = u32::from_le_bytes(take(4).try_into()?) as usize;
-    let w = u32::from_le_bytes(take(4).try_into()?) as usize;
+    let id = u64::from_le_bytes(take(bytes, &mut off, 8).try_into()?);
+    let camera = u32::from_le_bytes(take(bytes, &mut off, 4).try_into()?);
+    let frame_seq = u64::from_le_bytes(take(bytes, &mut off, 8).try_into()?);
+    let t_capture = f64::from_le_bytes(take(bytes, &mut off, 8).try_into()?);
+    let confidence = f32::from_le_bytes(take(bytes, &mut off, 4).try_into()?);
+    let truth_raw = u32::from_le_bytes(take(bytes, &mut off, 4).try_into()?);
+    let h = u32::from_le_bytes(take(bytes, &mut off, 4).try_into()?) as usize;
+    let w = u32::from_le_bytes(take(bytes, &mut off, 4).try_into()?) as usize;
     anyhow::ensure!(bytes.len() == 44 + h * w * 3 * 4, "task payload size mismatch");
     let mut data = Vec::with_capacity(h * w * 3);
     for chunk in bytes[44..].chunks_exact(4) {

@@ -2,19 +2,30 @@
 //! path (the only place compute happens at serving time — Python is
 //! build-time only).
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. One compiled executable per model
-//! variant; CNN weights are **runtime arguments**, uploaded once as device
-//! buffers and reused across calls (`execute_b`), so deploying fine-tuned
-//! weights is a buffer swap, not a recompile.
+//! Execution pattern (gated behind the `pjrt` cargo feature): parse the HLO
+//! text module (`HloModuleProto::from_text_file`), wrap it as a computation
+//! (`XlaComputation::from_proto`), compile it once on the PJRT CPU client
+//! (`PjRtClient::cpu` + `compile`), then `execute_b` per request. One
+//! compiled executable per model variant; CNN weights are **runtime
+//! arguments**, uploaded once as device buffers and reused across calls, so
+//! deploying fine-tuned weights is a buffer swap, not a recompile.
+//!
+//! Without the `pjrt` feature, the artifact bookkeeping here ([`Manifest`],
+//! blobs, [`MomentumSgd`]) still compiles, and [`service`] serves requests
+//! through the pure-Rust [`reference`] classifier instead.
 
 pub mod json;
+pub mod reference;
+pub mod service;
+#[cfg(feature = "pjrt")]
+pub mod batcher;
 
 use std::collections::HashMap;
 use std::io::Read;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
 use json::Json;
@@ -196,6 +207,7 @@ impl ServiceStats {
 }
 
 /// A compiled model with its weights resident on device.
+#[cfg(feature = "pjrt")]
 pub struct ModelRunner {
     exe: xla::PjRtLoadedExecutable,
     param_buffers: Vec<xla::PjRtBuffer>,
@@ -207,6 +219,7 @@ pub struct ModelRunner {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRunner {
     /// Probability output for a batch of crops. `pixels` is HWC f32 of
     /// exactly `batch * img * img * 3` elements. Returns `batch` rows of
@@ -239,6 +252,7 @@ impl ModelRunner {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn upload_params(
     client: &xla::PjRtClient,
     specs: &[ParamSpec],
@@ -264,6 +278,7 @@ pub struct GradOutput {
 }
 
 /// The edge_train executable: (params.., x, y) -> (grads.., loss, acc).
+#[cfg(feature = "pjrt")]
 pub struct TrainRunner {
     exe: xla::PjRtLoadedExecutable,
     specs: Vec<ParamSpec>,
@@ -273,6 +288,7 @@ pub struct TrainRunner {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl TrainRunner {
     pub fn grad_step(
         &self,
@@ -311,6 +327,7 @@ impl TrainRunner {
 }
 
 /// The framediff executable: 3 frames -> binary mask.
+#[cfg(feature = "pjrt")]
 pub struct FrameDiffRunner {
     exe: xla::PjRtLoadedExecutable,
     pub h: usize,
@@ -319,6 +336,7 @@ pub struct FrameDiffRunner {
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl FrameDiffRunner {
     pub fn mask(&self, prev: &[f32], cur: &[f32], nxt: &[f32]) -> crate::Result<Vec<u8>> {
         let want = self.h * self.w * 3;
@@ -344,11 +362,13 @@ impl FrameDiffRunner {
 
 /// The engine: one PJRT CPU client + every compiled executable the
 /// deployment needs.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub manifest: Manifest,
     client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn new(artifact_dir: &Path) -> crate::Result<Engine> {
         let manifest = Manifest::load(artifact_dir)?;
@@ -552,5 +572,3 @@ mod tests {
         assert_eq!(s.max_secs, 3.0);
     }
 }
-pub mod service;
-pub mod batcher;

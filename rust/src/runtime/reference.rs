@@ -1,0 +1,299 @@
+//! Pure-Rust reference classifier — the default-build stand-in for the
+//! PJRT-executed CNNs.
+//!
+//! The synthetic substrate renders every object from an analytic per-class
+//! shape specification ([`crate::video::sprite`]), so a shape-template
+//! matcher is a faithful (and fully deterministic) reference
+//! implementation of "a CNN that recognises these classes": extract the
+//! crop's foreground mask, compare it against each class's canonical
+//! silhouette by intersection-over-union, and softmax the scores. The
+//! [`super::service::InferenceService`] serves this classifier when the
+//! crate is built without the `pjrt` feature, which keeps
+//! `surveiledge offline` and the examples runnable offline with no
+//! artifacts and no XLA runtime.
+//!
+//! The CQ-specific "fine-tuned weights" of reference mode are just the
+//! query class, encoded by [`encode_query_params`] — the one piece of
+//! information the real fine-tuned head carries that the generic
+//! pretrained weights do not.
+
+use crate::types::{ClassId, NUM_CLASSES};
+use crate::video::sprite::{render_sprite, SpriteParams};
+
+/// Foreground threshold: a pixel belongs to the object when any channel
+/// deviates from the estimated background by more than this.
+const FG_THRESHOLD: f32 = 0.12;
+
+/// Softmax sharpness over the IoU scores (calibrated so clean sprites get
+/// confident argmax probabilities while ambiguous crops stay soft).
+const SHARPNESS: f64 = 12.0;
+
+/// Template-matching classifier over the 8 object classes.
+pub struct ReferenceClassifier {
+    img: usize,
+    /// Per-class canonical silhouette at `img`×`img` (rot 0, no jitter).
+    templates: Vec<Vec<bool>>,
+}
+
+impl ReferenceClassifier {
+    /// Build the classifier at the CNN input resolution (32 in the bundle).
+    pub fn new(img: usize) -> ReferenceClassifier {
+        let templates = (0..NUM_CLASSES)
+            .map(|i| {
+                let sprite = render_sprite(&SpriteParams {
+                    cls: ClassId::from_index(i).expect("class index"),
+                    size: img,
+                    base: [1.0, 1.0, 1.0],
+                    accent: [1.0, 1.0, 1.0],
+                    bg: [0.0, 0.0, 0.0],
+                    rot: 0.0,
+                    jx: 0.0,
+                    jy: 0.0,
+                    noise: 0.0,
+                    seed: 0,
+                });
+                // Layers are white or the (dark, but non-zero) wheel colour
+                // on a black background: any lit channel marks foreground.
+                sprite
+                    .data
+                    .chunks_exact(3)
+                    .map(|px| px[0].max(px[1]).max(px[2]) > 0.05)
+                    .collect()
+            })
+            .collect();
+        ReferenceClassifier { img, templates }
+    }
+
+    /// CNN input resolution this classifier was built for.
+    pub fn img(&self) -> usize {
+        self.img
+    }
+
+    /// Foreground mask of a crop: estimate the background colour from the
+    /// border pixels, then threshold the per-pixel deviation.
+    pub fn foreground_mask(&self, pixels: &[f32]) -> Vec<bool> {
+        let s = self.img;
+        let mut bg = [0.0f32; 3];
+        let mut n = 0usize;
+        for y in 0..s {
+            for x in 0..s {
+                if y == 0 || y == s - 1 || x == 0 || x == s - 1 {
+                    let i = (y * s + x) * 3;
+                    bg[0] += pixels[i];
+                    bg[1] += pixels[i + 1];
+                    bg[2] += pixels[i + 2];
+                    n += 1;
+                }
+            }
+        }
+        for c in bg.iter_mut() {
+            *c /= n.max(1) as f32;
+        }
+        pixels
+            .chunks_exact(3)
+            .map(|px| {
+                (px[0] - bg[0])
+                    .abs()
+                    .max((px[1] - bg[1]).abs())
+                    .max((px[2] - bg[2]).abs())
+                    > FG_THRESHOLD
+            })
+            .collect()
+    }
+
+    /// Per-class IoU between the crop's foreground mask and the canonical
+    /// class silhouettes.
+    pub fn scores(&self, pixels: &[f32]) -> crate::Result<[f64; NUM_CLASSES]> {
+        anyhow::ensure!(
+            pixels.len() == self.img * self.img * 3,
+            "reference classifier: got {} px, want {}x{}x3",
+            pixels.len(),
+            self.img,
+            self.img
+        );
+        let mask = self.foreground_mask(pixels);
+        let mut out = [0.0f64; NUM_CLASSES];
+        for (ci, tmpl) in self.templates.iter().enumerate() {
+            let mut inter = 0usize;
+            let mut union = 0usize;
+            for (a, b) in mask.iter().zip(tmpl.iter()) {
+                inter += (*a && *b) as usize;
+                union += (*a || *b) as usize;
+            }
+            out[ci] = if union == 0 { 0.0 } else { inter as f64 / union as f64 };
+        }
+        Ok(out)
+    }
+
+    /// 8-class probabilities (the cloud CNN stand-in): softmax over IoUs.
+    pub fn cloud_probs(&self, pixels: &[f32]) -> crate::Result<Vec<f32>> {
+        let scores = self.scores(pixels)?;
+        let max = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = scores.iter().map(|s| ((s - max) * SHARPNESS).exp()).collect();
+        let total: f64 = exps.iter().sum();
+        Ok(exps.iter().map(|e| (e / total) as f32).collect())
+    }
+
+    /// Binary query confidence `[p_not_query, p_query]` (the CQ-specific
+    /// edge CNN stand-in). The query class is the "fine-tuned head": an
+    /// edge that has not been fine-tuned yet has no query to score against
+    /// (the service answers an uninformative 0.5 for it instead).
+    pub fn edge_probs(&self, pixels: &[f32], query: ClassId) -> crate::Result<Vec<f32>> {
+        let scores = self.scores(pixels)?;
+        let s_q = scores[query.index()];
+        let s_other = scores
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != query.index())
+            .map(|(_, s)| *s)
+            .fold(0.0f64, f64::max);
+        let f = (s_q / (s_q + s_other + 1e-6)) as f32;
+        Ok(vec![1.0 - f, f])
+    }
+
+    /// Majority class among the positively-labeled crops of a fine-tune
+    /// dataset — how reference mode recovers the query class.
+    pub fn majority_class(&self, pixels: &[f32], labels: &[i32]) -> Option<ClassId> {
+        let px_per = self.img * self.img * 3;
+        let mut counts = [0usize; NUM_CLASSES];
+        for (i, &label) in labels.iter().enumerate() {
+            if label != 1 {
+                continue;
+            }
+            let crop = pixels.get(i * px_per..(i + 1) * px_per)?;
+            if let Ok(scores) = self.scores(crop) {
+                let mut best = 0usize;
+                for c in 1..NUM_CLASSES {
+                    if scores[c] > scores[best] {
+                        best = c;
+                    }
+                }
+                counts[best] += 1;
+            }
+        }
+        let (best, n) = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, n)| **n)
+            .map(|(i, n)| (i, *n))?;
+        if n == 0 {
+            None
+        } else {
+            ClassId::from_index(best)
+        }
+    }
+}
+
+/// Encode a query class as reference-mode "deployed weights".
+pub fn encode_query_params(query: ClassId) -> Vec<Vec<f32>> {
+    vec![vec![query.index() as f32]]
+}
+
+/// Decode reference-mode deployed weights back to the query class; `None`
+/// for any other weight layout (treated as the generic pretrained weights).
+pub fn decode_query_params(params: &[Vec<f32>]) -> Option<ClassId> {
+    if params.len() == 1 && params[0].len() == 1 {
+        let v = params[0][0];
+        if v.is_finite() && v >= 0.0 {
+            ClassId::from_index(v.round() as usize)
+        } else {
+            None
+        }
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_crop(cls: ClassId, seed: u32) -> Vec<f32> {
+        render_sprite(&SpriteParams {
+            cls,
+            size: 24,
+            base: [0.8, 0.25, 0.2],
+            accent: [0.2, 0.35, 0.8],
+            bg: [0.45, 0.47, 0.44],
+            rot: 0.0,
+            jx: 0.0,
+            jy: 0.0,
+            noise: 0.03,
+            seed,
+        })
+        .resize(32, 32)
+        .data
+    }
+
+    #[test]
+    fn templates_recognise_their_classes() {
+        let clf = ReferenceClassifier::new(32);
+        let mut correct = 0;
+        for i in 0..NUM_CLASSES {
+            let cls = ClassId::from_index(i).unwrap();
+            let probs = clf.cloud_probs(&demo_crop(cls, 100 + i as u32)).unwrap();
+            let argmax = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += (argmax == i) as usize;
+        }
+        assert!(correct >= 6, "reference classifier got only {correct}/8 clean sprites");
+    }
+
+    #[test]
+    fn cloud_probs_are_a_distribution() {
+        let clf = ReferenceClassifier::new(32);
+        let probs = clf.cloud_probs(&demo_crop(ClassId::Bus, 7)).unwrap();
+        assert_eq!(probs.len(), NUM_CLASSES);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn edge_probs_separate_query_from_rest() {
+        let clf = ReferenceClassifier::new(32);
+        let pos = clf.edge_probs(&demo_crop(ClassId::Moped, 9), ClassId::Moped).unwrap();
+        let neg = clf.edge_probs(&demo_crop(ClassId::Car, 11), ClassId::Moped).unwrap();
+        assert!(pos[1] > 0.55, "query sprite confidence {}", pos[1]);
+        assert!(neg[1] < 0.45, "non-query sprite confidence {}", neg[1]);
+        assert!((pos[0] + pos[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn wrong_input_size_is_an_error() {
+        let clf = ReferenceClassifier::new(32);
+        assert!(clf.cloud_probs(&[0.0; 10]).is_err());
+        assert!(clf.edge_probs(&[0.0; 10], ClassId::Car).is_err());
+    }
+
+    #[test]
+    fn majority_vote_recovers_query() {
+        let clf = ReferenceClassifier::new(32);
+        let mut pixels = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..8u32 {
+            let positive = i % 2 == 0;
+            let cls = if positive { ClassId::Person } else { ClassId::Truck };
+            pixels.extend_from_slice(&demo_crop(cls, 40 + i));
+            labels.push(positive as i32);
+        }
+        assert_eq!(clf.majority_class(&pixels, &labels), Some(ClassId::Person));
+        assert_eq!(clf.majority_class(&[], &[]), None);
+    }
+
+    #[test]
+    fn query_params_roundtrip() {
+        for i in 0..NUM_CLASSES {
+            let cls = ClassId::from_index(i).unwrap();
+            assert_eq!(decode_query_params(&encode_query_params(cls)), Some(cls));
+        }
+        assert_eq!(decode_query_params(&[]), None);
+        assert_eq!(decode_query_params(&[vec![1.0, 2.0]]), None);
+        assert_eq!(decode_query_params(&[vec![-1.0]]), None);
+        assert_eq!(decode_query_params(&[vec![f32::NAN]]), None);
+        assert_eq!(decode_query_params(&[vec![99.0]]), None);
+    }
+}

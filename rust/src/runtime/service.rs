@@ -1,17 +1,28 @@
-//! Inference service: a dedicated thread that owns the PJRT engine.
+//! Inference service: a dedicated thread that owns the classification
+//! backend.
 //!
 //! `xla::PjRtClient` is `Rc`-based and thread-bound, but the serving system
 //! is multi-threaded (edge/cloud node event loops). The service thread owns
-//! the engine and every compiled model; node threads talk to it through a
+//! the backend and every model; node threads talk to it through a
 //! cloneable [`ServiceHandle`] (bounded channel + reply channels) — the
 //! same shape a production system has around a single accelerator worker.
+//!
+//! Two backends, selected at build time:
+//!
+//! * with `--features pjrt`, the worker owns the PJRT engine and serves the
+//!   AOT HLO artifacts;
+//! * otherwise it serves the pure-Rust [`super::reference`] classifier —
+//!   no artifacts, no XLA, deterministic template-matching CNN stand-in —
+//!   so `surveiledge offline` and the examples run in a default build.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
-use super::{Engine, ModelRunner, MomentumSgd, ServiceStats};
+use super::ServiceStats;
+#[cfg(feature = "pjrt")]
+use super::{Engine, ModelRunner, MomentumSgd};
 
 /// Requests the service understands.
 enum Request {
@@ -127,15 +138,22 @@ pub struct InferenceService {
 }
 
 impl InferenceService {
-    /// Spawn the service: loads the engine, compiles edge models for
-    /// `edge_ids` (all starting from the pretrained weights), the cloud
-    /// model, the trainer, and the framediff kernel.
+    /// Spawn the service. With the `pjrt` feature this loads the engine and
+    /// compiles edge models for `edge_ids` (all starting from the
+    /// pretrained weights), the cloud model, the trainer, and the framediff
+    /// kernel; without it, the worker serves the pure-Rust reference
+    /// classifier and needs no artifacts on disk.
     pub fn spawn(artifact_dir: PathBuf, edge_ids: Vec<u32>) -> crate::Result<InferenceService> {
         let (tx, rx) = sync_channel::<Request>(256);
         let (ready_tx, ready_rx) = sync_channel::<crate::Result<()>>(1);
         let worker = std::thread::Builder::new()
             .name("inference-service".into())
-            .spawn(move || worker_main(artifact_dir, edge_ids, rx, ready_tx))?;
+            .spawn(move || {
+                #[cfg(feature = "pjrt")]
+                worker_main(artifact_dir, edge_ids, rx, ready_tx);
+                #[cfg(not(feature = "pjrt"))]
+                reference_worker_main(artifact_dir, edge_ids, rx, ready_tx);
+            })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("service thread died during init"))??;
@@ -152,6 +170,7 @@ impl Drop for InferenceService {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn worker_main(
     artifact_dir: PathBuf,
     edge_ids: Vec<u32>,
@@ -236,6 +255,7 @@ fn worker_main(
 /// weights, run momentum-SGD on the context-specific dataset. `full=false`
 /// updates only the head group ("SurveilEdge" scheme); `full=true` trains
 /// everything from scratch ("All Fine-tune" baseline).
+#[cfg(feature = "pjrt")]
 #[allow(clippy::too_many_arguments)]
 fn run_fine_tune(
     engine: &Engine,
@@ -298,8 +318,221 @@ fn run_fine_tune(
     Ok(FineTuneResult { params, losses, accs, train_secs: t0.elapsed().as_secs_f64() })
 }
 
+/// Reference-mode worker (default build, no `pjrt` feature): serves every
+/// request through [`super::reference::ReferenceClassifier`]. Deterministic
+/// and artifact-free — fine-tuning here *selects the query class* from the
+/// labeled dataset (majority template vote over the positives) and encodes
+/// it as the deployed "weights", which is exactly the piece of information
+/// the real CQ-specific CNN's fine-tuned head carries.
+#[cfg(not(feature = "pjrt"))]
+fn reference_worker_main(
+    artifact_dir: PathBuf,
+    edge_ids: Vec<u32>,
+    rx: Receiver<Request>,
+    ready: SyncSender<crate::Result<()>>,
+) {
+    use std::time::Instant;
+
+    use super::reference::{decode_query_params, ReferenceClassifier};
+    use crate::types::ClassId;
+
+    // Reference mode needs nothing from disk; the artifact dir is accepted
+    // for signature compatibility with the PJRT worker.
+    let _ = artifact_dir;
+    let clf = ReferenceClassifier::new(32);
+    // Per-edge deployment: the CQ the edge model was tuned for, or `None`
+    // while the generic (query-less) pretrained weights are in place.
+    let mut edges: HashMap<u32, Option<ClassId>> = HashMap::new();
+    for id in &edge_ids {
+        edges.insert(*id, None);
+    }
+    let mut snap = ServiceSnapshot::default();
+    let _ = ready.send(Ok(()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::EdgeInfer { edge_id, pixels, reply } => {
+                let t0 = Instant::now();
+                let r = match edges.get(&edge_id) {
+                    // Fine-tuned: score against the deployed query class.
+                    Some(Some(query)) => clf.edge_probs(&pixels, *query),
+                    // Generic pretrained weights carry no query head yet:
+                    // answer an uninformative 0.5 regardless of the query.
+                    Some(None) => Ok(vec![0.5, 0.5]),
+                    None => Err(anyhow::anyhow!("unknown edge {edge_id}")),
+                };
+                snap.edge_infer.record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(r);
+            }
+            Request::CloudInfer { pixels, reply } => {
+                let t0 = Instant::now();
+                let r = clf.cloud_probs(&pixels);
+                snap.cloud_infer.record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(r);
+            }
+            Request::DeployEdge { edge_id, params, reply } => {
+                edges.insert(edge_id, decode_query_params(&params));
+                let _ = reply.send(Ok(()));
+            }
+            Request::FineTune { pixels, labels, steps, lr, full, reply } => {
+                let t0 = Instant::now();
+                let r = reference_fine_tune(&clf, &pixels, &labels, steps, lr, full, t0);
+                snap.train.record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(r);
+            }
+            Request::FrameDiff { prev, cur, nxt, reply } => {
+                let t0 = Instant::now();
+                let r = reference_framediff(&prev, &cur, &nxt);
+                snap.framediff.record(t0.elapsed().as_secs_f64());
+                let _ = reply.send(r);
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(snap.clone());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+/// Reference-mode fine-tune: recover the query class from the labeled set
+/// (majority template vote over positives), measure the resulting
+/// classifier's accuracy on the set, and synthesise a convergence curve of
+/// `steps` points toward it. Returned params encode the query class for
+/// [`super::reference::decode_query_params`].
+#[cfg(not(feature = "pjrt"))]
+fn reference_fine_tune(
+    clf: &super::reference::ReferenceClassifier,
+    pixels: &[f32],
+    labels: &[i32],
+    steps: usize,
+    lr: f32,
+    full: bool,
+    t0: std::time::Instant,
+) -> crate::Result<FineTuneResult> {
+    use super::reference::encode_query_params;
+
+    anyhow::ensure!(!labels.is_empty(), "fine-tune dataset is empty");
+    let px_per = clf.img() * clf.img() * 3;
+    anyhow::ensure!(
+        pixels.len() == labels.len() * px_per,
+        "pixels/labels mismatch ({} px for {} labels of {px_per} px)",
+        pixels.len(),
+        labels.len()
+    );
+    let query = clf
+        .majority_class(pixels, labels)
+        .ok_or_else(|| anyhow::anyhow!("fine-tune dataset has no positive examples"))?;
+
+    // Measured accuracy of the tuned reference classifier on this set.
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let probs = clf.edge_probs(&pixels[i * px_per..(i + 1) * px_per], query)?;
+        let pred = (probs[1] >= 0.5) as i32;
+        correct += (pred == label) as usize;
+    }
+    let final_acc = correct as f32 / labels.len() as f32;
+
+    // Deterministic convergence curve: from-scratch training starts higher
+    // and converges slower per-step than head-group fine-tuning, mirroring
+    // the paper's Fig. 5 contrast.
+    let (l0, rate) = if full { (2.08f32, lr * 20.0) } else { (0.69f32, lr * 40.0) };
+    let floor = 0.05f32;
+    let mut losses = Vec::with_capacity(steps);
+    let mut accs = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let decay = (-(rate * (k + 1) as f32)).exp();
+        losses.push(floor + (l0 - floor) * decay);
+        accs.push(final_acc - (final_acc - 0.5).max(0.0) * decay);
+    }
+    Ok(FineTuneResult {
+        params: encode_query_params(query),
+        losses,
+        accs,
+        train_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Reference-mode frame difference: the native dense stage
+/// ([`crate::detect::framediff::framediff_native`]) at the detection
+/// threshold, with the frame shape recovered from the calibrated 4:3
+/// deployments (96×128 by default).
+#[cfg(not(feature = "pjrt"))]
+fn reference_framediff(prev: &[f32], cur: &[f32], nxt: &[f32]) -> crate::Result<Vec<u8>> {
+    use crate::detect::framediff::framediff_native;
+    use crate::types::Image;
+
+    anyhow::ensure!(
+        prev.len() == cur.len() && nxt.len() == cur.len() && cur.len() % 3 == 0,
+        "frame triplet size mismatch"
+    );
+    let hw = cur.len() / 3;
+    let h = ((hw as f64) * 0.75).sqrt().round() as usize;
+    // Accept only exact 4:3 shapes: a near-miss that happens to divide
+    // evenly must not silently produce a wrongly-shaped mask.
+    anyhow::ensure!(
+        h > 0 && hw % h == 0 && (hw / h) * 3 == h * 4,
+        "cannot infer a 4:3 frame shape from {} pixels (reference mode only \
+         supports the calibrated 4:3 deployments); build with --features pjrt \
+         for manifest-driven frame shapes",
+        hw
+    );
+    let w = hw / h;
+    let as_img = |data: &[f32]| Image { h, w, data: data.to_vec() };
+    Ok(framediff_native(&as_img(prev), &as_img(cur), &as_img(nxt), 0.1))
+}
+
 #[cfg(test)]
 mod tests {
-    // Service tests require artifacts; they live in
+    // PJRT service tests require artifacts; they live in
     // rust/tests/pipeline_integration.rs so `cargo test --lib` stays fast.
+    // Reference-mode behaviour is covered here (default build only).
+    #![allow(unused_imports)]
+    use super::*;
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn reference_service_end_to_end() {
+        use crate::harness::finetune_corpus;
+        use crate::types::ClassId;
+
+        let svc = InferenceService::spawn("artifacts".into(), vec![1, 2]).expect("spawn");
+        let h = svc.handle.clone();
+
+        // Cloud + edge inference on a rendered corpus crop.
+        let (pixels, labels) = finetune_corpus(ClassId::Moped, 64, 7);
+        let crop = pixels[..32 * 32 * 3].to_vec();
+        let cloud = h.cloud_infer(crop.clone()).unwrap();
+        assert_eq!(cloud.len(), 8);
+        assert!((cloud.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        let edge = h.edge_infer(1, crop.clone()).unwrap();
+        assert_eq!(edge.len(), 2);
+        assert!((edge.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(h.edge_infer(99, crop.clone()).is_err(), "unknown edge must error");
+
+        // Fine-tune recovers the query and deploying it sharpens answers.
+        let ft = h.fine_tune(pixels.clone(), labels.clone(), 12, 0.005, false).unwrap();
+        assert_eq!(ft.losses.len(), 12);
+        assert!(ft.losses.windows(2).all(|w| w[1] <= w[0]), "losses must decrease");
+        h.deploy_edge(1, ft.params.clone()).unwrap();
+        let after = h.edge_infer(1, crop.clone()).unwrap();
+        assert!((after[1] - edge[1]).abs() > 1e-6, "deploy must change the answer");
+
+        // Frame diff on the default 96x128 frames.
+        let n = 96 * 128 * 3;
+        let prev = vec![0.2f32; n];
+        let mut cur = vec![0.2f32; n];
+        let mut nxt = vec![0.2f32; n];
+        for i in 0..600 {
+            cur[10_000 + i] = 0.9;
+            nxt[20_000 + i] = 0.9;
+        }
+        let mask = h.framediff(prev, cur, nxt).unwrap();
+        assert_eq!(mask.len(), 96 * 128);
+        assert!(mask.iter().any(|&m| m == 1));
+
+        let stats = h.stats().unwrap();
+        assert!(stats.edge_infer.calls >= 3);
+        assert!(stats.cloud_infer.calls >= 1);
+        assert!(stats.framediff.calls >= 1);
+    }
 }

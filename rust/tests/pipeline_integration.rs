@@ -1,6 +1,8 @@
 //! Full-pipeline integration: inference service + offline stage + online
 //! fine-tune + the DES harness in PJRT mode. Skipped when `artifacts/`
-//! has not been built.
+//! has not been built; requires the `pjrt` feature (the default build
+//! exercises the same pipeline through `runtime::reference` instead).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 

@@ -3,7 +3,10 @@
 //! Python-trained weights + Pallas-lowered HLO + Rust execution reproduce
 //! the Python-side golden outputs bit-for-bit (within f32 tolerance).
 //!
-//! Skipped (cleanly) when `artifacts/` has not been built.
+//! Skipped (cleanly) when `artifacts/` has not been built. The whole file
+//! requires the `pjrt` feature (the runtime bridge is compiled out of the
+//! default build).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 

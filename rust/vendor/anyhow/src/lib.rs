@@ -1,0 +1,215 @@
+//! Offline shim of the `anyhow` error-handling API.
+//!
+//! The SurveilEdge build must succeed with no network access and no crate
+//! registry cache, so this workspace vendors the small subset of `anyhow`
+//! the codebase uses instead of fetching the real crate:
+//!
+//! * [`Error`] — a boxed, type-erased error with `Display`/`Debug`, an
+//!   alternate (`{:#}`) chain rendering, and [`Error::downcast_ref`];
+//! * [`Result`] — `Result<T, Error>` with a default error type;
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Any `std::error::Error + Send + Sync + 'static` converts into [`Error`]
+//! via `?`, exactly like the real crate. `Context`/backtrace support is
+//! intentionally omitted (nothing in this workspace uses it).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Type-erased error, convertible from any standard error.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (what `anyhow!` produces).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Downcast to a concrete error type, if this error wraps one.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        self.inner.downcast_ref::<T>()
+    }
+
+    /// The root cause chain, starting at this error's inner value.
+    pub fn chain(&self) -> Chain<'_> {
+        let head: &(dyn StdError + 'static) = self.inner.as_ref();
+        Chain { next: Some(head) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the full cause chain, anyhow-style.
+            let mut first = true;
+            for cause in self.chain() {
+                if !first {
+                    f.write_str(": ")?;
+                }
+                write!(f, "{cause}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.inner)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut causes = self.chain();
+        causes.next(); // skip self
+        let mut any = false;
+        for cause in causes {
+            if !any {
+                f.write_str("\n\nCaused by:")?;
+                any = true;
+            }
+            write!(f, "\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Iterator over an error's cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let current = self.next?;
+        self.next = current.source();
+        Some(current)
+    }
+}
+
+/// Plain-message error (what the `anyhow!` macro wraps).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_literal() -> Result<()> {
+        bail!("plain message")
+    }
+
+    fn fails_fmt(n: usize) -> Result<u32> {
+        ensure!(n < 3, "too big: {n}");
+        ensure!(n != 2, "exactly {}", n);
+        Ok(n as u32)
+    }
+
+    fn io_err() -> Result<String> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(String::new())
+    }
+
+    #[test]
+    fn macros_and_display() {
+        assert_eq!(fails_literal().unwrap_err().to_string(), "plain message");
+        assert_eq!(fails_fmt(5).unwrap_err().to_string(), "too big: 5");
+        assert_eq!(fails_fmt(2).unwrap_err().to_string(), "exactly 2");
+        assert_eq!(fails_fmt(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_err().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+    }
+
+    #[test]
+    fn alternate_display_renders_chain() {
+        let e = Error::msg("top");
+        assert_eq!(format!("{e:#}"), "top");
+        let io = io_err().unwrap_err();
+        assert!(format!("{io:#}").contains("gone"));
+    }
+
+    #[test]
+    fn anyhow_macro_inline_captures() {
+        let name = "edge1";
+        let e = anyhow!("unknown node {name}");
+        assert_eq!(e.to_string(), "unknown node edge1");
+        let e2 = anyhow!("{} + {}", 1, 2);
+        assert_eq!(e2.to_string(), "1 + 2");
+    }
+}

@@ -1,0 +1,168 @@
+//! Offline API stub of the PJRT surface of the `xla` crate.
+//!
+//! The `surveiledge` runtime bridge (`rust/src/runtime`) is written against
+//! the PJRT CPU-client API of the `xla` crate: load an HLO text module,
+//! compile it once, upload weights as device buffers, and execute from the
+//! request path. That crate links a vendored XLA C++ build, which is not
+//! available in the offline build environment — so this stub provides the
+//! same *types and signatures* with runtime-erroring bodies, letting
+//! `cargo build --features pjrt` type-check and link the entire gated path
+//! with no network access and no C++ toolchain.
+//!
+//! To actually execute the AOT artifacts, replace the `xla` path dependency
+//! in `rust/Cargo.toml` with the real crate; no `surveiledge` source changes
+//! are needed. Every constructor here returns [`XlaError`] immediately
+//! (`PjRtClient::cpu()` is the entry point), so the stub can never produce
+//! wrong numbers — only a clear "rebuild against real XLA" error.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Error type for every stubbed operation.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    message: String,
+}
+
+impl XlaError {
+    fn unavailable(what: &str) -> XlaError {
+        XlaError {
+            message: format!(
+                "{what}: this build links the offline `xla` API stub; point the `xla` \
+                 path dependency in rust/Cargo.toml at the real crate (vendored XLA \
+                 C++ runtime) to execute PJRT artifacts"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+/// Result alias matching the real crate's fallible API.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// A parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (always errors in the stub).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(XlaError::unavailable(&format!("HloModuleProto::from_text_file({path:?})")))
+    }
+}
+
+/// A computation ready for compilation (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module (infallible in the real crate, so also here).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to the host as a literal (always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A host-side literal value (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Extract element 0 of a tuple literal (always errors).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(XlaError::unavailable("Literal::to_tuple1"))
+    }
+
+    /// Extract all elements of a tuple literal (always errors).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(XlaError::unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a typed host vector (always errors).
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(XlaError::unavailable("Literal::to_vec"))
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with buffer arguments; accepts owned or borrowed buffers
+    /// (`&[PjRtBuffer]` and `&[&PjRtBuffer]`), like the real crate.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// The PJRT CPU client (stub). `cpu()` is the only constructor and it
+/// errors immediately, so no other stubbed method is reachable at runtime.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client (always errors in the stub).
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Upload a host slice as a device buffer (always errors).
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(XlaError::unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    /// Compile a computation (always errors).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_explanatory() {
+        let err = PjRtClient::cpu().err().expect("stub must error");
+        let msg = err.to_string();
+        assert!(msg.contains("stub"), "{msg}");
+        assert!(msg.contains("PjRtClient::cpu"), "{msg}");
+    }
+
+    #[test]
+    fn from_text_file_errors() {
+        let Err(_) = HloModuleProto::from_text_file("x.hlo.txt") else {
+            panic!("stub from_text_file must fail");
+        };
+    }
+}
