@@ -13,6 +13,7 @@
 //! (`verdict/...`), and parameter-DB replication (`paramdb/...`).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 
@@ -59,6 +60,15 @@ pub fn topic_matches(filter: &str, topic: &str) -> bool {
     }
 }
 
+/// Transit fault hook for chaos testing: decides, per publish, whether the
+/// message is lost before it reaches the broker (as if dropped on the wire).
+/// `seq` is the broker's monotonically increasing publish counter, so a
+/// deterministic implementation (e.g. [`crate::faults::FaultPlan`]) makes
+/// every drop reproducible from its seed.
+pub trait LinkFault: Send + Sync {
+    fn drop_publish(&self, topic: &str, seq: u64) -> bool;
+}
+
 struct Subscription {
     filter: String,
     sender: SyncSender<Message>,
@@ -70,6 +80,8 @@ struct BrokerInner {
     retained: Mutex<HashMap<String, Message>>,
     next_id: Mutex<u64>,
     stats: Mutex<BusStats>,
+    fault: Mutex<Option<Arc<dyn LinkFault>>>,
+    pub_seq: AtomicU64,
 }
 
 /// Broker throughput counters (observability + bandwidth accounting).
@@ -79,6 +91,8 @@ pub struct BusStats {
     pub delivered: u64,
     pub dropped: u64,
     pub bytes: u64,
+    /// Publishes swallowed by an installed [`LinkFault`] (chaos testing).
+    pub injected_drops: u64,
 }
 
 /// The in-process broker. Cheap to clone; all clones share state.
@@ -101,8 +115,22 @@ impl Broker {
                 retained: Mutex::new(HashMap::new()),
                 next_id: Mutex::new(1),
                 stats: Mutex::new(BusStats::default()),
+                fault: Mutex::new(None),
+                pub_seq: AtomicU64::new(0),
             }),
         }
+    }
+
+    /// Install a transit fault: subsequent publishes consult it and may be
+    /// dropped before reaching any subscriber (counted in
+    /// [`BusStats::injected_drops`]).
+    pub fn set_link_fault(&self, fault: Arc<dyn LinkFault>) {
+        *self.inner.fault.lock().unwrap() = Some(fault);
+    }
+
+    /// Remove an installed transit fault; delivery returns to normal.
+    pub fn clear_link_fault(&self) {
+        *self.inner.fault.lock().unwrap() = None;
     }
 
     /// Subscribe with a bounded queue; returns the receiving end and the
@@ -138,7 +166,21 @@ impl Broker {
     }
 
     /// Publish; returns the number of subscribers the message reached.
+    /// An installed [`LinkFault`] may swallow the message first — a faulted
+    /// publish reaches nobody and does not update retained state (the wire
+    /// lost it before the broker ever saw it).
     pub fn publish(&self, msg: Message, qos: QoS) -> usize {
+        let seq = self.inner.pub_seq.fetch_add(1, Ordering::Relaxed);
+        let faulted = {
+            let fault = self.inner.fault.lock().unwrap();
+            fault.as_ref().map_or(false, |f| f.drop_publish(&msg.topic, seq))
+        };
+        if faulted {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.published += 1;
+            stats.injected_drops += 1;
+            return 0;
+        }
         if msg.retained {
             self.inner
                 .retained
@@ -327,6 +369,95 @@ mod tests {
         }
         pubber.join().unwrap();
         assert_eq!(got.len(), 50);
+    }
+
+    struct DropEven;
+    impl LinkFault for DropEven {
+        fn drop_publish(&self, _topic: &str, seq: u64) -> bool {
+            seq % 2 == 0
+        }
+    }
+
+    #[test]
+    fn link_fault_swallows_publishes_deterministically() {
+        let b = Broker::new();
+        let (rx, _) = b.subscribe("t", 64);
+        b.set_link_fault(Arc::new(DropEven));
+        let mut reached = 0;
+        for i in 0..10u8 {
+            reached += b.publish(Message::new("t", vec![i]), QoS::AtLeastOnce);
+        }
+        assert_eq!(reached, 5, "even seqs (0,2,4,6,8) must be swallowed");
+        let got: Vec<u8> = (0..5).map(|_| rx.recv().unwrap().payload[0]).collect();
+        assert_eq!(got, vec![1, 3, 5, 7, 9]);
+        let s = b.stats();
+        assert_eq!(s.published, 10);
+        assert_eq!(s.injected_drops, 5);
+        assert_eq!(s.delivered, 5);
+    }
+
+    #[test]
+    fn faulted_retained_publish_is_not_stored() {
+        let b = Broker::new();
+        b.set_link_fault(Arc::new(DropEven)); // seq 0 dropped
+        b.publish(Message::retained("cfg/alpha", vec![1]), QoS::AtLeastOnce);
+        b.clear_link_fault();
+        let (rx, _) = b.subscribe("cfg/alpha", 4);
+        assert!(rx.try_recv().is_err(), "a message lost on the wire must not retain");
+        // Delivery back to normal after clear.
+        assert_eq!(b.publish(Message::new("cfg/alpha", vec![2]), QoS::AtLeastOnce), 1);
+    }
+
+    #[test]
+    fn fault_plan_drops_near_rate_and_reproducibly() {
+        use crate::faults::{FaultPlan, LinkFaults};
+        let plan = Arc::new(FaultPlan {
+            seed: 42,
+            link: LinkFaults { drop_p: 0.25, ..LinkFaults::default() },
+            ..FaultPlan::default()
+        });
+        let run = || {
+            let b = Broker::new();
+            b.set_link_fault(plan.clone());
+            let (_rx, _) = b.subscribe("chaos", 4096);
+            for i in 0..2000u16 {
+                b.publish(Message::new("chaos", i.to_le_bytes().to_vec()), QoS::AtLeastOnce);
+            }
+            b.stats().injected_drops
+        };
+        let dropped = run();
+        let rate = dropped as f64 / 2000.0;
+        assert!((rate - 0.25).abs() < 0.05, "drop rate {rate}");
+        assert_eq!(run(), dropped, "same plan + same publish order = same drops");
+    }
+
+    /// Obviously-correct recursive matcher used as the property-test oracle
+    /// for the iterator-based [`topic_matches`].
+    fn reference_matches(filter: &[&str], topic: &[&str]) -> bool {
+        match (filter.split_first(), topic.split_first()) {
+            (Some((&"#", _)), _) => true,
+            (Some((&"+", _)), Some((_, tr))) => reference_matches(&filter[1..], tr),
+            (Some((&fl, _)), Some((&tl, tr))) if fl == tl => reference_matches(&filter[1..], tr),
+            (None, None) => true,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn prop_topic_matches_agrees_with_reference() {
+        check("topic_matches_vs_reference", |rng, _| {
+            // Random topics and filters over a tiny alphabet so collisions
+            // (and thus true matches) are common.
+            let levels = ["a", "b", "c", "+", "#"];
+            let topic_levels = ["a", "b", "c"];
+            let fdepth = rng.range_usize(1, 5);
+            let tdepth = rng.range_usize(1, 5);
+            let filter: Vec<&str> = (0..fdepth).map(|_| levels[rng.range_usize(0, levels.len())]).collect();
+            let topic: Vec<&str> = (0..tdepth).map(|_| topic_levels[rng.range_usize(0, topic_levels.len())]).collect();
+            let got = topic_matches(&filter.join("/"), &topic.join("/"));
+            let want = reference_matches(&filter, &topic);
+            assert_eq!(got, want, "filter {filter:?} vs topic {topic:?}");
+        });
     }
 
     #[test]

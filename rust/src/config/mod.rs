@@ -7,6 +7,7 @@
 
 pub mod toml;
 
+use crate::faults::{CrashWindow, FaultPlan, SlowWindow};
 use crate::types::ClassId;
 use std::path::Path;
 use toml::TomlDoc;
@@ -83,6 +84,9 @@ pub struct Config {
     pub seed: u64,
     /// Path to the AOT artifact bundle.
     pub artifacts: String,
+    /// Fault schedule for chaos scenarios (`[faults]` in TOML). Empty by
+    /// default: no injection, zero overhead.
+    pub faults: FaultPlan,
 }
 
 impl Default for Config {
@@ -105,6 +109,7 @@ impl Default for Config {
             gamma2: 0.25,
             seed: 7,
             artifacts: "artifacts".into(),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -195,6 +200,48 @@ impl Config {
                 .iter()
                 .zip(cams.iter())
                 .map(|(&s, &c)| NodeSpec { speed: s, cameras: c as u32 })
+                .collect();
+        }
+        if let Some(v) = doc.get_i64("faults", "seed") {
+            cfg.faults.seed = v as u64;
+        }
+        if let Some(v) = doc.get_f64("faults", "drop_p") {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "faults.drop_p must be in [0,1]");
+            cfg.faults.link.drop_p = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "delay") {
+            cfg.faults.link.delay = v;
+        }
+        if let Some(v) = doc.get_f64("faults", "jitter") {
+            cfg.faults.link.jitter = v;
+        }
+        // Crash and slow windows use the same parallel-array idiom as
+        // [edges]: crash_node[i] is down for [crash_from[i], crash_until[i]).
+        if let Some(nodes) = doc.get_i64_array("faults", "crash_node") {
+            let from = doc.get_f64_array("faults", "crash_from").unwrap_or_default();
+            let until = doc.get_f64_array("faults", "crash_until").unwrap_or_default();
+            anyhow::ensure!(
+                from.len() == nodes.len() && until.len() == nodes.len(),
+                "faults.crash_node/crash_from/crash_until length mismatch"
+            );
+            cfg.faults.crashes = nodes
+                .iter()
+                .zip(from.iter().zip(until.iter()))
+                .map(|(&n, (&f, &u))| CrashWindow { node: n as u32, from: f, until: u })
+                .collect();
+        }
+        if let Some(nodes) = doc.get_i64_array("faults", "slow_node") {
+            let from = doc.get_f64_array("faults", "slow_from").unwrap_or_default();
+            let until = doc.get_f64_array("faults", "slow_until").unwrap_or_default();
+            let factor = doc.get_f64_array("faults", "slow_factor").unwrap_or_default();
+            anyhow::ensure!(
+                from.len() == nodes.len() && until.len() == nodes.len() && factor.len() == nodes.len(),
+                "faults.slow_node/slow_from/slow_until/slow_factor length mismatch"
+            );
+            cfg.faults.slow = nodes
+                .iter()
+                .zip(from.iter().zip(until.iter().zip(factor.iter())))
+                .map(|(&n, (&f, (&u, &x)))| SlowWindow { node: n as u32, from: f, until: u, factor: x })
                 .collect();
         }
         anyhow::ensure!(!cfg.edges.is_empty(), "at least one edge required");
@@ -300,5 +347,43 @@ cameras = [3, 5]
     fn parse_rejects_mismatched_edge_arrays() {
         let text = "[edges]\nspeed = [1.0, 0.5]\ncameras = [4]\n";
         assert!(Config::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn parse_fault_plan() {
+        let text = r#"
+[faults]
+seed = 42
+drop_p = 0.05
+delay = 0.02
+jitter = 0.01
+crash_node = [1, 2]
+crash_from = [10.0, 50.0]
+crash_until = [40.0, 55.0]
+slow_node = [3]
+slow_from = [0.0]
+slow_until = [30.0]
+slow_factor = [2.5]
+"#;
+        let c = Config::from_toml(text).unwrap();
+        assert_eq!(c.faults.seed, 42);
+        assert_eq!(c.faults.link.drop_p, 0.05);
+        assert_eq!(c.faults.link.delay, 0.02);
+        assert_eq!(c.faults.link.jitter, 0.01);
+        assert_eq!(c.faults.crashes.len(), 2);
+        assert!(c.faults.is_down(1, 20.0));
+        assert!(!c.faults.is_down(1, 45.0));
+        assert!(c.faults.is_down(2, 52.0));
+        assert_eq!(c.faults.slowdown(3, 10.0), 2.5);
+        assert!(!c.faults.is_empty());
+    }
+
+    #[test]
+    fn parse_faults_defaults_empty_and_validates() {
+        let c = Config::from_toml("[query]\nobject = \"person\"\n").unwrap();
+        assert!(c.faults.is_empty(), "no [faults] section = empty plan");
+        assert!(Config::from_toml("[faults]\ndrop_p = 1.5\n").is_err());
+        let mismatched = "[faults]\ncrash_node = [1]\ncrash_from = [1.0, 2.0]\ncrash_until = [5.0]\n";
+        assert!(Config::from_toml(mismatched).is_err());
     }
 }

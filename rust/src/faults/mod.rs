@@ -1,0 +1,401 @@
+//! Deterministic, seed-driven fault injection (extension beyond the paper).
+//!
+//! SurveilEdge's eq. 7 allocation and eq. 8–9 threshold adaptation only
+//! matter in production if the pipeline keeps answering queries when an
+//! edge dies, a link drops frames, or a node slows down. A [`FaultPlan`]
+//! scripts those failure modes against simulated time:
+//!
+//! * **node crash/recover** — [`CrashWindow`]s during which a node accepts
+//!   no work and loses its in-flight task,
+//! * **link faults** — per-message drop decisions and delivery delays,
+//!   decided by a *stateless hash* of `(seed, message, attempt)` so the
+//!   outcome is reproducible from the seed alone, independent of thread
+//!   interleaving or event-loop ordering,
+//! * **slow nodes** — [`SlowWindow`]s multiplying a node's service time.
+//!
+//! The plan is consumed in three places: the experiment harness
+//! (`crate::harness`) replays it inside the DES and reports recovery
+//! metrics; the broker (`crate::bus`) accepts it as a [`crate::bus::LinkFault`]
+//! to drop published messages in live mode; and [`FaultPlan::script_onto`]
+//! schedules the crash/recover timeline onto a [`crate::simclock::Sim`]
+//! for bespoke scenarios. Message *reorder* emerges from per-message
+//! delivery jitter (two messages with different hashed delays swap order).
+
+use std::sync::{Arc, Mutex};
+
+use crate::simclock::Sim;
+
+/// Heartbeat publish period (seconds) for node liveness (`hb/<node>` keys
+/// in the parameter DB).
+pub const HB_INTERVAL: f64 = 1.0;
+
+/// A node whose last heartbeat is older than this is treated as dead by
+/// the allocator (failover exclusion window: 2.5 heartbeat periods).
+pub const HB_STALE_AFTER: f64 = 2.5;
+
+/// Base acknowledgement timeout for a dispatched task (seconds); retries
+/// back off exponentially from here.
+pub const ACK_TIMEOUT: f64 = 0.25;
+
+/// Dispatch attempts before the sender gives up on the remote path and
+/// degrades (edge-local verdict) or falls back to local processing.
+pub const MAX_DISPATCH_ATTEMPTS: u32 = 6;
+
+/// Bounded exponential backoff: `ACK_TIMEOUT · 2^min(attempt, 4)`
+/// (0.25 s, 0.5 s, 1 s, 2 s, 4 s, 4 s, ...).
+pub fn backoff(attempt: u32) -> f64 {
+    ACK_TIMEOUT * (1u64 << attempt.min(4)) as f64
+}
+
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Stateless hash of `(seed, stream, item)` mapped to `[0, 1)`. The same
+/// triple always yields the same value — the determinism backbone for
+/// per-message fault decisions.
+pub fn unit_hash(seed: u64, stream: u64, item: u64) -> f64 {
+    let h = mix64(mix64(seed ^ mix64(stream)) ^ item);
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// A node is dead for `t ∈ [from, until)`: it accepts no work, stops
+/// heartbeating, and loses whatever it was serving at `from`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CrashWindow {
+    pub node: u32,
+    pub from: f64,
+    pub until: f64,
+}
+
+/// A node serves `factor`× slower for `t ∈ [from, until)` (factors are
+/// clamped to ≥ 1: these model stragglers, not speedups).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SlowWindow {
+    pub node: u32,
+    pub from: f64,
+    pub until: f64,
+    pub factor: f64,
+}
+
+/// Per-message link fault parameters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkFaults {
+    /// Probability a dispatched message is dropped in transit.
+    pub drop_p: f64,
+    /// Fixed extra delivery delay (seconds) on every delivered message.
+    pub delay: f64,
+    /// Additional uniform-hashed delay in `[0, jitter)` per message —
+    /// nonzero jitter reorders messages.
+    pub jitter: f64,
+}
+
+/// A complete, reproducible fault schedule. [`Default`] is the empty plan
+/// (no faults), which injects nothing and costs nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every per-message hash decision.
+    pub seed: u64,
+    pub crashes: Vec<CrashWindow>,
+    pub slow: Vec<SlowWindow>,
+    pub link: LinkFaults,
+}
+
+/// One entry of the scripted fault timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    Crash { node: u32 },
+    Recover { node: u32 },
+    SlowStart { node: u32, factor: f64 },
+    SlowEnd { node: u32 },
+}
+
+impl FaultPlan {
+    /// The empty plan: injects nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty()
+            && self.slow.is_empty()
+            && self.link == LinkFaults::default()
+    }
+
+    /// Is `node` inside any crash window at time `t`?
+    pub fn is_down(&self, node: u32, t: f64) -> bool {
+        self.crashes.iter().any(|c| c.node == node && t >= c.from && t < c.until)
+    }
+
+    /// Recovery time of the crash window covering `(node, t)`, if any
+    /// (the latest `until` among overlapping windows).
+    pub fn recovery_after(&self, node: u32, t: f64) -> Option<f64> {
+        self.crashes
+            .iter()
+            .filter(|c| c.node == node && t >= c.from && t < c.until)
+            .map(|c| c.until)
+            .fold(None, |acc, u| Some(acc.map_or(u, |a: f64| a.max(u))))
+    }
+
+    /// Service-time multiplier for `node` at `t` (product of active slow
+    /// windows; ≥ 1).
+    pub fn slowdown(&self, node: u32, t: f64) -> f64 {
+        self.slow
+            .iter()
+            .filter(|s| s.node == node && t >= s.from && t < s.until)
+            .map(|s| s.factor.max(1.0))
+            .product::<f64>()
+            .max(1.0)
+    }
+
+    /// Is dispatch attempt `attempt` of message `msg` dropped in transit?
+    /// Pure function of `(seed, msg, attempt)` — re-running a scenario
+    /// with the same seed reproduces every drop.
+    pub fn drops(&self, msg: u64, attempt: u32) -> bool {
+        self.link.drop_p > 0.0
+            && unit_hash(self.seed, 0xD20F, msg.wrapping_mul(64).wrapping_add(attempt as u64))
+                < self.link.drop_p
+    }
+
+    /// Extra delivery delay for message `msg` (fixed delay + hashed
+    /// jitter). Distinct jitter per message is what reorders deliveries.
+    pub fn delay_of(&self, msg: u64) -> f64 {
+        self.link.delay + self.link.jitter * unit_hash(self.seed, 0xDE1A, msg)
+    }
+
+    /// The crash/slow schedule as a time-sorted event list (stable order
+    /// for equal times: crashes before slow windows, declaration order
+    /// within each).
+    pub fn timeline(&self) -> Vec<(f64, FaultEvent)> {
+        let mut out: Vec<(f64, FaultEvent)> = Vec::new();
+        for c in &self.crashes {
+            if c.until > c.from {
+                out.push((c.from, FaultEvent::Crash { node: c.node }));
+                out.push((c.until, FaultEvent::Recover { node: c.node }));
+            }
+        }
+        for s in &self.slow {
+            if s.until > s.from {
+                out.push((s.from, FaultEvent::SlowStart { node: s.node, factor: s.factor }));
+                out.push((s.until, FaultEvent::SlowEnd { node: s.node }));
+            }
+        }
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+
+    /// Script the crash/slow timeline onto a discrete-event simulator:
+    /// `handler(sim, t, event)` fires at each scheduled fault transition.
+    pub fn script_onto<F>(&self, sim: &mut Sim, handler: F)
+    where
+        F: FnMut(&mut Sim, f64, FaultEvent) + Send + 'static,
+    {
+        let h = Arc::new(Mutex::new(handler));
+        for (t, ev) in self.timeline() {
+            let h = h.clone();
+            sim.schedule_at(t, move |s| {
+                let mut g = h.lock().unwrap();
+                (*g)(s, t, ev);
+            });
+        }
+    }
+}
+
+/// Live-mode broker injection: a plan plugged into the bus drops published
+/// messages at the plan's link rate (see [`crate::bus::Broker::set_link_fault`]).
+impl crate::bus::LinkFault for FaultPlan {
+    fn drop_publish(&self, _topic: &str, seq: u64) -> bool {
+        self.drops(seq, 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_injects_nothing() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(!p.is_down(1, 5.0));
+        assert_eq!(p.slowdown(1, 5.0), 1.0);
+        for m in 0..1000 {
+            assert!(!p.drops(m, 0));
+            assert_eq!(p.delay_of(m), 0.0);
+        }
+        assert!(p.timeline().is_empty());
+    }
+
+    #[test]
+    fn crash_window_covers_half_open_interval() {
+        let p = FaultPlan {
+            crashes: vec![CrashWindow { node: 2, from: 10.0, until: 20.0 }],
+            ..FaultPlan::default()
+        };
+        assert!(!p.is_down(2, 9.99));
+        assert!(p.is_down(2, 10.0));
+        assert!(p.is_down(2, 19.99));
+        assert!(!p.is_down(2, 20.0));
+        assert!(!p.is_down(1, 15.0), "other nodes unaffected");
+        assert_eq!(p.recovery_after(2, 15.0), Some(20.0));
+        assert_eq!(p.recovery_after(2, 25.0), None);
+    }
+
+    #[test]
+    fn overlapping_crashes_recover_at_latest_until() {
+        let p = FaultPlan {
+            crashes: vec![
+                CrashWindow { node: 1, from: 5.0, until: 15.0 },
+                CrashWindow { node: 1, from: 10.0, until: 30.0 },
+            ],
+            ..FaultPlan::default()
+        };
+        assert_eq!(p.recovery_after(1, 12.0), Some(30.0));
+    }
+
+    #[test]
+    fn slowdown_is_clamped_product() {
+        let p = FaultPlan {
+            slow: vec![
+                SlowWindow { node: 1, from: 0.0, until: 10.0, factor: 2.0 },
+                SlowWindow { node: 1, from: 5.0, until: 10.0, factor: 3.0 },
+                SlowWindow { node: 1, from: 0.0, until: 10.0, factor: 0.5 }, // clamped to 1
+            ],
+            ..FaultPlan::default()
+        };
+        assert_eq!(p.slowdown(1, 2.0), 2.0);
+        assert_eq!(p.slowdown(1, 7.0), 6.0);
+        assert_eq!(p.slowdown(1, 11.0), 1.0);
+        assert_eq!(p.slowdown(2, 7.0), 1.0);
+    }
+
+    #[test]
+    fn drops_are_deterministic_and_near_rate() {
+        let p = FaultPlan {
+            seed: 42,
+            link: LinkFaults { drop_p: 0.05, ..LinkFaults::default() },
+            ..FaultPlan::default()
+        };
+        let n = 20_000u64;
+        let dropped = (0..n).filter(|&m| p.drops(m, 0)).count();
+        let rate = dropped as f64 / n as f64;
+        assert!((rate - 0.05).abs() < 0.01, "drop rate {rate}");
+        // Determinism: identical plan, identical decisions.
+        let q = p.clone();
+        for m in 0..1000 {
+            assert_eq!(p.drops(m, 0), q.drops(m, 0));
+            assert_eq!(p.drops(m, 3), q.drops(m, 3));
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_drop_patterns() {
+        let mk = |seed| FaultPlan {
+            seed,
+            link: LinkFaults { drop_p: 0.5, ..LinkFaults::default() },
+            ..FaultPlan::default()
+        };
+        let (a, b) = (mk(1), mk(2));
+        let differing = (0..1000u64).filter(|&m| a.drops(m, 0) != b.drops(m, 0)).count();
+        assert!(differing > 300, "only {differing}/1000 decisions differ");
+    }
+
+    #[test]
+    fn retry_attempts_rehash_independently() {
+        let p = FaultPlan {
+            seed: 7,
+            link: LinkFaults { drop_p: 0.5, ..LinkFaults::default() },
+            ..FaultPlan::default()
+        };
+        // A message dropped on attempt 0 is not condemned forever: across
+        // many messages, some first-drop messages succeed on retry.
+        let rescued = (0..2000u64)
+            .filter(|&m| p.drops(m, 0) && !p.drops(m, 1))
+            .count();
+        assert!(rescued > 200, "rescued {rescued}");
+    }
+
+    #[test]
+    fn delay_within_bounds_and_jitter_reorders() {
+        let p = FaultPlan {
+            seed: 9,
+            link: LinkFaults { drop_p: 0.0, delay: 0.1, jitter: 0.2 },
+            ..FaultPlan::default()
+        };
+        let mut seen_reorder = false;
+        let mut prev = p.delay_of(0);
+        for m in 1..200 {
+            let d = p.delay_of(m);
+            assert!((0.1..0.3 + 1e-12).contains(&d), "delay {d}");
+            if d < prev {
+                seen_reorder = true;
+            }
+            prev = d;
+        }
+        assert!(seen_reorder, "jitter must produce at least one inversion");
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff(0), 0.25);
+        assert_eq!(backoff(1), 0.5);
+        assert_eq!(backoff(2), 1.0);
+        assert_eq!(backoff(4), 4.0);
+        assert_eq!(backoff(10), 4.0, "backoff is capped");
+    }
+
+    #[test]
+    fn timeline_is_sorted_and_paired() {
+        let p = FaultPlan {
+            crashes: vec![
+                CrashWindow { node: 2, from: 30.0, until: 40.0 },
+                CrashWindow { node: 1, from: 10.0, until: 20.0 },
+            ],
+            slow: vec![SlowWindow { node: 1, from: 15.0, until: 35.0, factor: 2.0 }],
+            ..FaultPlan::default()
+        };
+        let tl = p.timeline();
+        assert_eq!(tl.len(), 6);
+        for w in tl.windows(2) {
+            assert!(w[0].0 <= w[1].0, "timeline out of order: {tl:?}");
+        }
+        assert_eq!(tl[0], (10.0, FaultEvent::Crash { node: 1 }));
+        assert_eq!(tl[5], (40.0, FaultEvent::Recover { node: 2 }));
+    }
+
+    #[test]
+    fn script_onto_fires_in_sim_time() {
+        let p = FaultPlan {
+            crashes: vec![CrashWindow { node: 1, from: 2.0, until: 5.0 }],
+            ..FaultPlan::default()
+        };
+        let mut sim = Sim::new();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        {
+            let log = log.clone();
+            p.script_onto(&mut sim, move |_, t, ev| log.lock().unwrap().push((t, ev)));
+        }
+        sim.run_until(10.0);
+        let got = log.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                (2.0, FaultEvent::Crash { node: 1 }),
+                (5.0, FaultEvent::Recover { node: 1 }),
+            ]
+        );
+    }
+
+    #[test]
+    fn unit_hash_is_uniform_ish() {
+        let n = 10_000u64;
+        let mean: f64 = (0..n).map(|i| unit_hash(3, 1, i)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        for i in 0..1000 {
+            assert_eq!(unit_hash(3, 1, i), unit_hash(3, 1, i));
+        }
+    }
+}

@@ -27,7 +27,10 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::config::{Config, Scheme};
 use crate::detect::{detect, DetectConfig};
 use crate::estimator::LatencyEstimator;
-use crate::metrics::{Confusion, LatencyRecorder, SchemeRow};
+use crate::faults::{backoff, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
+use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
+use crate::nodes::node_alive;
+use crate::paramdb::{ParamDb, Value};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ModelRunner, MomentumSgd};
 use crate::sched::{allocate, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
@@ -193,6 +196,11 @@ struct SimTask {
     oracle_positive: bool,
     /// Precomputed edge confidence (synthetic mode) or None (PJRT).
     synth_confidence: Option<f32>,
+    /// Delivery attempts so far (fault runs: drop / no-ack retries).
+    attempt: u32,
+    /// Set once an edge classified it doubtful — from then on its
+    /// destination is pinned to the cloud re-check path.
+    doubtful: bool,
 }
 
 /// DES events.
@@ -205,6 +213,18 @@ enum Event {
     UplinkFinish { edge: u32 },
     /// A failed edge comes back and resumes its queue.
     NodeResume { node: u32 },
+    /// Heartbeat tick: every live node publishes `hb/<id>` (fault runs
+    /// only — fault-free runs never schedule this).
+    Heartbeat,
+    /// Scripted fault-plan transitions.
+    FaultCrash { node: u32 },
+    FaultRecover { node: u32 },
+    /// Stale-heartbeat detection point after a crash: sweep the dead
+    /// node's stranded queue back through the allocator.
+    Failover { node: u32, crash_from: f64 },
+    /// Ack-timeout backoff expired: re-dispatch a task whose delivery
+    /// failed.
+    Redispatch { task: SimTask },
 }
 
 struct HeapKey(f64, u64);
@@ -235,6 +255,8 @@ struct NodeSim {
     busy: bool,
     estimator: LatencyEstimator,
     speed: f64,
+    /// Pending NodeFinish event id — cancelled when the node crashes.
+    finish_ev: Option<u64>,
 }
 
 /// Per-edge uplink state.
@@ -258,6 +280,8 @@ pub struct SchemeResult {
     pub tasks: u64,
     /// Mean doubtful-band width over the run (ablation diagnostics).
     pub mean_band_width: f64,
+    /// Recovery metrics under fault injection (all-zero without a plan).
+    pub faults: FaultStats,
 }
 
 /// Fault injection: an edge node goes dark for a time window. Tasks that
@@ -282,17 +306,27 @@ pub struct Harness {
     pub cfg: Config,
     pub times: ServiceTimes,
     pub mode: ComputeMode,
-    /// Optional fault injection.
+    /// Optional fault injection (legacy single-window outage).
     pub outage: Option<EdgeOutage>,
+    /// Scripted fault plan (crashes, drops, delays, slowdowns) — defaults
+    /// to `cfg.faults`; `FaultPlan::none()` leaves the run fault-free.
+    pub plan: FaultPlan,
 }
 
 impl Harness {
     pub fn new(cfg: Config, mode: ComputeMode) -> Harness {
-        Harness { cfg, times: ServiceTimes::default(), mode, outage: None }
+        let plan = cfg.faults.clone();
+        Harness { cfg, times: ServiceTimes::default(), mode, outage: None, plan }
     }
 
     pub fn with_outage(mut self, outage: EdgeOutage) -> Harness {
         self.outage = Some(outage);
+        self
+    }
+
+    /// Override the fault schedule (defaults to the config's `[faults]`).
+    pub fn with_plan(mut self, plan: FaultPlan) -> Harness {
+        self.plan = plan;
         self
     }
 
@@ -322,6 +356,7 @@ impl Harness {
             busy: false,
             estimator: LatencyEstimator::new(self.times.cloud_infer),
             speed: cfg.cloud_speed,
+            finish_ev: None,
         });
         for e in &cfg.edges {
             nodes.push(NodeSim {
@@ -329,9 +364,10 @@ impl Harness {
                 busy: false,
                 estimator: LatencyEstimator::new(self.times.edge_infer / e.speed),
                 speed: e.speed,
+                finish_ev: None,
             });
         }
-        let mut uplinks: Vec<Uplink> = (0..n_edges)
+        let uplinks: Vec<Uplink> = (0..n_edges)
             .map(|_| Uplink { queue: VecDeque::new(), busy: false, queued_bytes: 0 })
             .collect();
         let mut controllers: Vec<ThresholdController> = (0..n_edges)
@@ -349,10 +385,41 @@ impl Harness {
         let detect_cfg = DetectConfig::default();
         let uplink_bps = cfg.uplink_mbps * 1_000_000.0 / 8.0;
 
-        let mut heap: EventHeap = BinaryHeap::new();
-        let mut events: EventMap = std::collections::HashMap::new();
-        let mut seq = 0u64;
-        schedule_ev(&mut heap, &mut events, &mut seq, cfg.interval, Event::Sample);
+        let mut des = Des {
+            nodes,
+            uplinks,
+            heap: BinaryHeap::new(),
+            events: std::collections::HashMap::new(),
+            seq: 0,
+            cloud_bytes: 0,
+            fstats: FaultStats::default(),
+            times: self.times,
+            uplink_bps,
+            fx: FaultCtx { plan: self.plan.clone(), outage: self.outage },
+        };
+        des.schedule(cfg.interval, Event::Sample);
+        // Heartbeats + scripted crash transitions only exist under a
+        // non-empty plan, so fault-free runs replay the exact event
+        // sequence they always had.
+        let faulty = !des.fx.plan.is_empty();
+        let db = ParamDb::new();
+        // Drain horizon: keep serving queued tasks after the last sample.
+        let drain_until = cfg.duration + 60.0;
+        if faulty {
+            des.schedule(0.0, Event::Heartbeat);
+            for c in des.fx.plan.crashes.clone() {
+                if c.until > c.from {
+                    des.schedule(c.from, Event::FaultCrash { node: c.node });
+                    des.schedule(c.until, Event::FaultRecover { node: c.node });
+                    if scheme == Scheme::SurveilEdge {
+                        des.schedule(
+                            c.from + HB_STALE_AFTER,
+                            Event::Failover { node: c.node, crash_from: c.from },
+                        );
+                    }
+                }
+            }
+        }
 
         let mut rng = Rng::new(cfg.seed ^ 0x5EED);
         let mut next_task_id = 0u64;
@@ -370,22 +437,22 @@ impl Harness {
             uploads: 0,
             tasks: 0,
             mean_band_width: 0.0,
+            faults: FaultStats::default(),
         };
-        let mut cloud_bytes = 0u64;
         let mut band_width_acc = 0.0f64;
         let mut band_width_n = 0u64;
-        // Drain horizon: keep serving queued tasks after the last sample.
-        let drain_until = cfg.duration + 60.0;
 
-        while let Some(Reverse((HeapKey(t, id), _))) = heap.pop() {
+        while let Some(Reverse((HeapKey(t, id), _))) = des.heap.pop() {
             if t > drain_until {
                 break;
             }
-            let ev = events.remove(&id).expect("event slot");
+            // A missing slot is a cancelled event (a crash cancels the
+            // victim's in-flight completion).
+            let Some(ev) = des.events.remove(&id) else { continue };
             match ev {
                 Event::Sample => {
                     if t + cfg.interval <= cfg.duration {
-                        schedule_ev(&mut heap, &mut events, &mut seq, t + cfg.interval, Event::Sample);
+                        des.schedule(t + cfg.interval, Event::Sample);
                     }
                     // Detect on every camera at this tick.
                     for ci in 0..cameras.len() {
@@ -423,40 +490,27 @@ impl Harness {
                                 truth_positive: truth_cls.map(|c| c == cfg.query),
                                 oracle_positive,
                                 synth_confidence,
+                                attempt: 0,
+                                doubtful: false,
                             };
                             next_task_id += 1;
                             result.tasks += 1;
                             // Route (eq. 7 or the scheme's fixed policy).
-                            let dest = self.route(scheme, task.home_edge, &nodes, &uplinks, &cfg, t);
-                            if dest.is_cloud() {
-                                cloud_bytes += task.wire_bytes;
-                                let e = (task.home_edge - 1) as usize;
-                                uplinks[e].queued_bytes += task.wire_bytes;
-                                uplinks[e].queue.push_back(task);
-                                kick_uplink(&mut uplinks, e, t, uplink_bps, &mut heap, &mut events, &mut seq);
-                            } else {
-                                enqueue_node(
-                                    &mut nodes,
-                                    dest.0 as usize,
-                                    task,
-                                    t,
-                                    &self.times,
-                                    self.outage,
-                                    &mut heap,
-                                    &mut events,
-                                    &mut seq,
-                                );
-                            }
+                            let dest =
+                                self.route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
+                            self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
                         }
                         prev_frames[ci] = Some((f_prev, frame.image));
                     }
                 }
                 Event::NodeFinish { node } => {
                     let n = node as usize;
-                    let task = nodes[n].queue.pop_front().expect("finish without task");
-                    nodes[n].busy = false;
-                    let service = service_time(node, &nodes[n], &self.times);
-                    nodes[n].estimator.observe(service);
+                    des.nodes[n].finish_ev = None;
+                    let mut task = des.nodes[n].queue.pop_front().expect("finish without task");
+                    des.nodes[n].busy = false;
+                    let service =
+                        service_time(node, &des.nodes[n], &self.times) * des.fx.plan.slowdown(node, t);
+                    des.nodes[n].estimator.observe(service);
                     if node == 0 {
                         // Cloud verdict: the oracle's answer, by definition.
                         let latency = (t - task.t_capture) + cfg.rtt / 2.0;
@@ -484,9 +538,9 @@ impl Harness {
                             // so the eq. 8 signal tracks the doubtful path:
                             // uplink backlog + cloud queue + rtt. (Edge
                             // queueing is the allocator's job, eq. 7.)
-                            let signal = uplinks[e].queued_bytes as f64 / uplink_bps
-                                + (nodes[0].queue.len() + nodes[0].busy as usize) as f64
-                                    * nodes[0].estimator.estimate()
+                            let signal = des.uplinks[e].queued_bytes as f64 / uplink_bps
+                                + (des.nodes[0].queue.len() + des.nodes[0].busy as usize) as f64
+                                    * des.nodes[0].estimator.estimate()
                                 + cfg.rtt;
                             // update() multiplies queue*t; feed the signal
                             // as (1, signal) to keep the eq. 8 form.
@@ -517,39 +571,104 @@ impl Harness {
                                 );
                             }
                             BandDecision::Doubtful => {
-                                result.uploads += 1;
-                                cloud_bytes += task.wire_bytes;
-                                let home = task.home_edge;
-                                uplinks[(home - 1) as usize].queued_bytes += task.wire_bytes;
-                                uplinks[(home - 1) as usize].queue.push_back(task);
-                                kick_uplink(
-                                    &mut uplinks,
-                                    (home - 1) as usize,
-                                    t,
-                                    uplink_bps,
-                                    &mut heap,
-                                    &mut events,
-                                    &mut seq,
-                                );
+                                if faulty && !node_alive(&db, 0, t) {
+                                    // Graceful degradation: the cloud's
+                                    // heartbeat is stale, so answer with
+                                    // the edge confidence rather than
+                                    // queue into a dead path.
+                                    self.degrade_finish(task, t, &mut des, &mut result)?;
+                                } else {
+                                    result.uploads += 1;
+                                    task.doubtful = true;
+                                    let e = (task.home_edge - 1) as usize;
+                                    des.push_uplink(e, task, t);
+                                }
                             }
                         }
                     }
                     // Start the next queued task, if any.
-                    start_if_idle(&mut nodes, n, t, &self.times, self.outage, &mut heap, &mut events, &mut seq);
+                    des.start_if_idle(n, t);
                 }
                 Event::NodeResume { node } => {
                     let n = node as usize;
-                    nodes[n].busy = false;
-                    start_if_idle(&mut nodes, n, t, &self.times, self.outage, &mut heap, &mut events, &mut seq);
+                    des.nodes[n].busy = false;
+                    des.start_if_idle(n, t);
                 }
                 Event::UplinkFinish { edge } => {
                     let e = edge as usize;
-                    let task = uplinks[e].queue.pop_front().expect("uplink finish without task");
-                    uplinks[e].queued_bytes = uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
-                    uplinks[e].busy = false;
-                    // Deliver to the cloud queue after half an RTT.
-                    enqueue_node(&mut nodes, 0, task, t + cfg.rtt / 2.0, &self.times, self.outage, &mut heap, &mut events, &mut seq);
-                    kick_uplink(&mut uplinks, e, t, uplink_bps, &mut heap, &mut events, &mut seq);
+                    let task =
+                        des.uplinks[e].queue.pop_front().expect("uplink finish without task");
+                    des.uplinks[e].queued_bytes =
+                        des.uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
+                    des.uplinks[e].busy = false;
+                    des.kick_uplink(e, t);
+                    if des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t) {
+                        // Lost in transit, or the cloud is down: no ack
+                        // arrives before the timeout.
+                        self.retry_or_degrade(scheme, task, t, &mut des, &db, &mut result)?;
+                    } else {
+                        // Deliver to the cloud queue after half an RTT
+                        // (+ any injected one-way delay).
+                        let arrival = t + cfg.rtt / 2.0 + des.fx.plan.delay_of(task.id);
+                        des.enqueue_node(0, task, arrival);
+                    }
+                }
+                Event::Heartbeat => {
+                    for n in 0..des.nodes.len() as u32 {
+                        if !des.fx.plan.is_down(n, t) {
+                            db.put(&ParamDb::key_hb(n), Value::F64(t));
+                        }
+                    }
+                    if t + HB_INTERVAL <= drain_until {
+                        des.schedule(t + HB_INTERVAL, Event::Heartbeat);
+                    }
+                }
+                Event::FaultCrash { node } => {
+                    // The in-flight task (if any) is lost mid-service:
+                    // cancel its completion. The task itself stays at the
+                    // queue front for the failover sweep / restart.
+                    let n = node as usize;
+                    if let Some(ev_id) = des.nodes[n].finish_ev.take() {
+                        des.events.remove(&ev_id);
+                        des.nodes[n].busy = false;
+                    }
+                }
+                Event::FaultRecover { node } => {
+                    des.start_if_idle(node as usize, t);
+                }
+                Event::Failover { node, crash_from } => {
+                    // Stale-heartbeat detection point: if the node is
+                    // still down, re-queue its stranded tasks through the
+                    // allocator (which now excludes it).
+                    if des.fx.plan.is_down(node, t) {
+                        let stranded: Vec<SimTask> =
+                            des.nodes[node as usize].queue.drain(..).collect();
+                        if !stranded.is_empty() && des.fstats.time_to_reroute == 0.0 {
+                            des.fstats.time_to_reroute = t - crash_from;
+                        }
+                        for task in stranded {
+                            des.fstats.rerouted += 1;
+                            let dest = self
+                                .route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
+                            self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
+                        }
+                    }
+                }
+                Event::Redispatch { task } => {
+                    if task.doubtful {
+                        if !node_alive(&db, 0, t) {
+                            // Still no cloud: answer locally instead of
+                            // re-uploading into a dead path.
+                            self.degrade_finish(task, t, &mut des, &mut result)?;
+                        } else {
+                            let e = (task.home_edge - 1) as usize;
+                            des.push_uplink(e, task, t);
+                        }
+                    } else {
+                        let dest =
+                            self.route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
+                        self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
+                    }
                 }
             }
         }
@@ -557,16 +676,107 @@ impl Harness {
         let f2 = result.vs_oracle.f2();
         result.row.accuracy = f2;
         result.row.avg_latency = result.latency.mean();
-        result.row.bandwidth_mb = cloud_bytes as f64 / (1024.0 * 1024.0);
+        result.row.bandwidth_mb = des.cloud_bytes as f64 / (1024.0 * 1024.0);
         result.mean_band_width = if band_width_n > 0 {
             band_width_acc / band_width_n as f64
         } else {
             0.0
         };
+        result.faults = des.fstats;
+        result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
         Ok(result)
     }
 
+    /// Send `task` toward `dest` (as chosen by [`Harness::route`]). Under
+    /// a fault plan a remote hop can fail — a dropped message or a dead
+    /// destination goes to the retry path instead of a queue.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch(
+        &mut self,
+        scheme: Scheme,
+        task: SimTask,
+        dest: NodeId,
+        t: f64,
+        des: &mut Des,
+        db: &ParamDb,
+        result: &mut SchemeResult,
+    ) -> crate::Result<()> {
+        let home = task.home_edge;
+        if dest.is_cloud() {
+            // Uplink transfer; transit faults apply at delivery time.
+            des.push_uplink((home - 1) as usize, task, t);
+        } else if dest.0 != home
+            && (des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(dest.0, t))
+        {
+            // Edge-to-edge hop lost (or the peer just died): no ack.
+            self.retry_or_degrade(scheme, task, t, des, db, result)?;
+        } else {
+            let delay = if dest.0 != home { des.fx.plan.delay_of(task.id) } else { 0.0 };
+            des.enqueue_node(dest.0 as usize, task, t + delay);
+        }
+        Ok(())
+    }
+
+    /// A delivery failed: count the retry, back off exponentially, and
+    /// re-dispatch — or give up gracefully once the attempt budget is
+    /// spent or the cloud is known dead.
+    fn retry_or_degrade(
+        &mut self,
+        scheme: Scheme,
+        mut task: SimTask,
+        t: f64,
+        des: &mut Des,
+        db: &ParamDb,
+        result: &mut SchemeResult,
+    ) -> crate::Result<()> {
+        des.fstats.retried += 1;
+        let attempt = task.attempt;
+        task.attempt += 1;
+        // Cloud-only has no edge fallback: it keeps retrying (bounded
+        // backoff) until the cloud answers.
+        if scheme != Scheme::CloudOnly {
+            let cloud_dead = task.doubtful && !node_alive(db, 0, t);
+            if cloud_dead || task.attempt >= MAX_DISPATCH_ATTEMPTS {
+                if task.doubtful {
+                    // §IV-D's latency/accuracy trade at its limit: an
+                    // edge verdict now beats a cloud verdict never.
+                    return self.degrade_finish(task, t, des, result);
+                }
+                // Unclassified task: fall back to local processing.
+                let home = task.home_edge as usize;
+                des.enqueue_node(home, task, t);
+                return Ok(());
+            }
+        }
+        des.schedule(t + backoff(attempt), Event::Redispatch { task });
+        Ok(())
+    }
+
+    /// Edge-local verdict without the cloud re-check (graceful
+    /// degradation when the cloud path is unavailable).
+    fn degrade_finish(
+        &mut self,
+        task: SimTask,
+        t: f64,
+        des: &mut Des,
+        result: &mut SchemeResult,
+    ) -> crate::Result<()> {
+        des.fstats.degraded += 1;
+        let conf = self.edge_confidence(&task)?;
+        self.finish(
+            result,
+            conf >= 0.5,
+            task.oracle_positive,
+            task.truth_positive,
+            t - task.t_capture,
+            t,
+            task.home_edge,
+        );
+        Ok(())
+    }
+
     /// Routing policy per scheme.
+    #[allow(clippy::too_many_arguments)]
     fn route(
         &self,
         scheme: Scheme,
@@ -575,14 +785,19 @@ impl Harness {
         uplinks: &[Uplink],
         cfg: &Config,
         t: f64,
+        db: &ParamDb,
     ) -> NodeId {
         match scheme {
             Scheme::CloudOnly => NodeId::CLOUD,
             Scheme::EdgeOnly | Scheme::SurveilEdgeFixed => NodeId(home),
             Scheme::SurveilEdge => {
                 // eq. 7 over {home edge first, other edges, cloud}; edges
-                // under an injected outage are not candidates.
-                let dead = |e: u32| self.outage.map_or(false, |o| o.covers(t, e));
+                // under an injected outage or with a stale heartbeat are
+                // not candidates (failover). Without heartbeats (fault-free
+                // runs) `node_alive` is vacuously true.
+                let dead = |e: u32| {
+                    self.outage.map_or(false, |o| o.covers(t, e)) || !node_alive(db, e, t)
+                };
                 let mut cands: Vec<NodeLoad> = Vec::with_capacity(nodes.len());
                 if !dead(home) {
                     cands.push(node_load(home, &nodes[home as usize], 0.0));
@@ -598,7 +813,9 @@ impl Harness {
                 let upload = cfg.rtt
                     + (backlog + 24.0 * 24.0 * 3.0 * HD_SCALE as f64)
                         / (cfg.uplink_mbps * 125_000.0);
-                cands.push(node_load(0, &nodes[0], upload));
+                if node_alive(db, 0, t) {
+                    cands.push(node_load(0, &nodes[0], upload));
+                }
                 allocate(&cands).unwrap_or(NodeId(home))
             }
         }
@@ -696,68 +913,86 @@ fn service_time(node: u32, sim: &NodeSim, times: &ServiceTimes) -> f64 {
 type EventHeap = BinaryHeap<Reverse<(HeapKey, u8)>>;
 type EventMap = std::collections::HashMap<u64, Event>;
 
-fn schedule_ev(heap: &mut EventHeap, events: &mut EventMap, seq: &mut u64, t: f64, ev: Event) {
-    events.insert(*seq, ev);
-    heap.push(Reverse((HeapKey(t, *seq), 0)));
-    *seq += 1;
+/// Immutable fault context for one scheme run.
+struct FaultCtx {
+    plan: FaultPlan,
+    outage: Option<EdgeOutage>,
 }
 
-#[allow(clippy::too_many_arguments)]
-fn enqueue_node(
-    nodes: &mut [NodeSim],
-    n: usize,
-    task: SimTask,
-    t: f64,
-    times: &ServiceTimes,
-    outage: Option<EdgeOutage>,
-    heap: &mut EventHeap,
-    events: &mut EventMap,
-    seq: &mut u64,
-) {
-    nodes[n].queue.push_back(task);
-    start_if_idle(nodes, n, t, times, outage, heap, events, seq);
+/// Mutable discrete-event state for one scheme run, bundled so the
+/// dispatch / retry / failover paths share one signature.
+struct Des {
+    nodes: Vec<NodeSim>,
+    uplinks: Vec<Uplink>,
+    heap: EventHeap,
+    events: EventMap,
+    seq: u64,
+    /// Bytes shipped over any uplink (bandwidth accounting).
+    cloud_bytes: u64,
+    fstats: FaultStats,
+    times: ServiceTimes,
+    uplink_bps: f64,
+    fx: FaultCtx,
 }
 
-fn start_if_idle(
-    nodes: &mut [NodeSim],
-    n: usize,
-    t: f64,
-    times: &ServiceTimes,
-    outage: Option<EdgeOutage>,
-    heap: &mut EventHeap,
-    events: &mut EventMap,
-    seq: &mut u64,
-) {
-    if nodes[n].busy || nodes[n].queue.is_empty() {
-        return;
+impl Des {
+    /// Schedule `ev` at time `t`; the returned id cancels it via
+    /// `events.remove` (the heap entry then no-ops).
+    fn schedule(&mut self, t: f64, ev: Event) -> u64 {
+        let id = self.seq;
+        self.events.insert(id, ev);
+        self.heap.push(Reverse((HeapKey(t, id), 0)));
+        self.seq += 1;
+        id
     }
-    // A dead edge holds its queue until recovery (cloud never fails here).
-    if let Some(o) = outage {
-        if n > 0 && o.covers(t, n as u32) {
-            nodes[n].busy = true; // freeze; resume event at recovery
-            schedule_ev(heap, events, seq, o.until, Event::NodeResume { node: n as u32 });
+
+    fn enqueue_node(&mut self, n: usize, task: SimTask, t: f64) {
+        self.nodes[n].queue.push_back(task);
+        self.start_if_idle(n, t);
+    }
+
+    fn start_if_idle(&mut self, n: usize, t: f64) {
+        if self.nodes[n].busy || self.nodes[n].queue.is_empty() {
             return;
         }
+        // Legacy outage: a dead edge holds its queue until recovery
+        // (cloud never fails on this path).
+        if let Some(o) = self.fx.outage {
+            if n > 0 && o.covers(t, n as u32) {
+                self.nodes[n].busy = true; // freeze; resume event at recovery
+                self.schedule(o.until, Event::NodeResume { node: n as u32 });
+                return;
+            }
+        }
+        // Fault-plan crash: the queue is frozen but the node is not
+        // marked busy — FaultRecover (or the failover sweep) picks the
+        // tasks back up.
+        if self.fx.plan.is_down(n as u32, t) {
+            return;
+        }
+        self.nodes[n].busy = true;
+        let service =
+            service_time(n as u32, &self.nodes[n], &self.times) * self.fx.plan.slowdown(n as u32, t);
+        let id = self.schedule(t + service, Event::NodeFinish { node: n as u32 });
+        self.nodes[n].finish_ev = Some(id);
     }
-    nodes[n].busy = true;
-    let service = service_time(n as u32, &nodes[n], times);
-    schedule_ev(heap, events, seq, t + service, Event::NodeFinish { node: n as u32 });
-}
 
-fn kick_uplink(
-    uplinks: &mut [Uplink],
-    e: usize,
-    t: f64,
-    uplink_bps: f64,
-    heap: &mut EventHeap,
-    events: &mut EventMap,
-    seq: &mut u64,
-) {
-    if !uplinks[e].busy {
-        if let Some(front) = uplinks[e].queue.front() {
-            uplinks[e].busy = true;
-            let transfer = front.wire_bytes as f64 / uplink_bps.max(1.0);
-            schedule_ev(heap, events, seq, t + transfer, Event::UplinkFinish { edge: e as u32 });
+    /// Queue a task on an edge's uplink toward the cloud (a retry
+    /// retransmits, so the bytes count again).
+    fn push_uplink(&mut self, e: usize, task: SimTask, t: f64) {
+        self.cloud_bytes += task.wire_bytes;
+        self.uplinks[e].queued_bytes += task.wire_bytes;
+        self.uplinks[e].queue.push_back(task);
+        self.kick_uplink(e, t);
+    }
+
+    fn kick_uplink(&mut self, e: usize, t: f64) {
+        if !self.uplinks[e].busy {
+            if let Some(front) = self.uplinks[e].queue.front() {
+                self.uplinks[e].busy = true;
+                let transfer = front.wire_bytes as f64 / self.uplink_bps.max(1.0);
+                self.schedule(t + transfer, Event::UplinkFinish { edge: e as u32 });
+            }
         }
     }
 }
@@ -842,6 +1077,62 @@ mod tests {
             se.row.avg_latency,
             eo.row.avg_latency
         );
+    }
+
+    #[test]
+    fn fault_free_run_reports_quiet_fault_stats() {
+        let cfg = small_cfg();
+        let mut h = Harness::new(cfg, synth_mode());
+        let r = h.run(Scheme::SurveilEdge).unwrap();
+        assert!(!r.faults.any(), "fault-free run must not retry/reroute/degrade");
+        assert_eq!(r.faults.lost, 0);
+    }
+
+    #[test]
+    fn empty_plan_matches_default_run_exactly() {
+        let cfg = small_cfg();
+        let mut h1 = Harness::new(cfg.clone(), synth_mode());
+        let mut h2 = Harness::new(cfg, synth_mode()).with_plan(FaultPlan::none());
+        let a = h1.run(Scheme::SurveilEdge).unwrap();
+        let b = h2.run(Scheme::SurveilEdge).unwrap();
+        assert_eq!(a.tasks, b.tasks);
+        assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
+        assert!((a.row.bandwidth_mb - b.row.bandwidth_mb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slow_window_inflates_edge_latency() {
+        let cfg = small_cfg();
+        let mut base = Harness::new(cfg.clone(), synth_mode());
+        let b = base.run(Scheme::EdgeOnly).unwrap();
+        let plan = FaultPlan {
+            slow: vec![crate::faults::SlowWindow { node: 1, from: 0.0, until: 60.0, factor: 8.0 }],
+            ..FaultPlan::none()
+        };
+        let mut slowed = Harness::new(cfg, synth_mode()).with_plan(plan);
+        let s = slowed.run(Scheme::EdgeOnly).unwrap();
+        assert!(
+            s.row.avg_latency > b.row.avg_latency,
+            "slowdown {} should exceed base {}",
+            s.row.avg_latency,
+            b.row.avg_latency
+        );
+        assert_eq!(s.faults.lost, 0, "slow tasks still drain");
+        assert_eq!(s.latency.len() as u64, s.tasks);
+    }
+
+    #[test]
+    fn cloud_crash_degrades_doubtfuls_instead_of_stranding() {
+        let cfg = small_cfg();
+        let plan = FaultPlan {
+            crashes: vec![crate::faults::CrashWindow { node: 0, from: 5.0, until: 100.0 }],
+            ..FaultPlan::none()
+        };
+        let mut h = Harness::new(cfg, synth_mode()).with_plan(plan);
+        let r = h.run(Scheme::SurveilEdge).unwrap();
+        assert_eq!(r.faults.lost, 0, "no task may be stranded by the cloud outage");
+        assert_eq!(r.latency.len() as u64, r.tasks);
+        assert!(r.faults.degraded > 0, "cloud outage must force edge-local verdicts");
     }
 
     #[test]

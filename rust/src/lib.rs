@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod detect;
 pub mod estimator;
+pub mod faults;
 pub mod harness;
 pub mod metrics;
 pub mod nodes;

@@ -192,6 +192,32 @@ impl BandwidthMeter {
     }
 }
 
+/// Recovery accounting for fault-injection runs (chaos scenarios; see
+/// `crate::faults`). All counters are 0 for a fault-free run.
+#[derive(Clone, Copy, Default, Debug, PartialEq)]
+pub struct FaultStats {
+    /// Failed deliveries re-sent after an ack timeout (dropped in transit
+    /// or addressed to a node that was down).
+    pub retried: u64,
+    /// Tasks swept off a crashed node's queue and re-allocated.
+    pub rerouted: u64,
+    /// Tasks answered with an edge-local verdict because the cloud was
+    /// unreachable or the retry budget ran out (graceful degradation).
+    pub degraded: u64,
+    /// Tasks that never received a verdict by the end of the run.
+    pub lost: u64,
+    /// Seconds from the first crash to its failover sweep (0.0 when no
+    /// sweep re-queued anything).
+    pub time_to_reroute: f64,
+}
+
+impl FaultStats {
+    /// Did the run see any fault-recovery activity at all?
+    pub fn any(&self) -> bool {
+        self.retried + self.rerouted + self.degraded + self.lost > 0
+    }
+}
+
 /// One row of a paper-style results table (Tables II–IV).
 #[derive(Clone, Debug)]
 pub struct SchemeRow {
@@ -241,6 +267,15 @@ pub fn render_csv(headers: &[&str], columns: &[&[f64]]) -> String {
 mod tests {
     use super::*;
     use crate::testkit::check;
+
+    #[test]
+    fn fault_stats_default_is_quiet() {
+        let f = FaultStats::default();
+        assert!(!f.any());
+        assert_eq!(f, FaultStats { retried: 0, rerouted: 0, degraded: 0, lost: 0, time_to_reroute: 0.0 });
+        assert!(FaultStats { retried: 1, ..FaultStats::default() }.any());
+        assert!(FaultStats { lost: 1, ..FaultStats::default() }.any());
+    }
 
     #[test]
     fn confusion_counts() {

@@ -59,6 +59,22 @@ impl NodeState {
             Value::F64(self.estimator.lock().unwrap().estimate()),
         );
     }
+
+    /// Publish a liveness heartbeat (`hb/<id>` = scenario seconds). Peers
+    /// exclude this node from allocation once the value goes stale
+    /// ([`crate::faults::HB_STALE_AFTER`]).
+    pub fn heartbeat(&self, db: &ParamDb, now: f64) {
+        db.put(&ParamDb::key_hb(self.id.0), Value::F64(now));
+    }
+}
+
+/// Liveness from the replicated heartbeat key. A node that has *never*
+/// heartbeated is presumed alive (cold start / heartbeats disabled), one
+/// whose last beat is older than [`crate::faults::HB_STALE_AFTER`] is
+/// treated as dead by the allocator until it beats again.
+pub fn node_alive(db: &ParamDb, node: u32, now: f64) -> bool {
+    db.get_f64(&ParamDb::key_hb(node))
+        .map_or(true, |last| now - last <= crate::faults::HB_STALE_AFTER)
 }
 
 /// Build a final verdict for a task.
@@ -98,6 +114,10 @@ pub struct RunMetrics {
     /// Tasks uploaded but not yet answered by the cloud — the l_d (d =
     /// cloud) term of the eq. 8 controller signal in live mode.
     pub cloud_backlog: AtomicU64,
+    /// Doubtful crops answered with an edge-local verdict because the
+    /// cloud's heartbeat was stale (graceful degradation: latency over
+    /// accuracy, the §IV-D tradeoff taken to its failure-mode limit).
+    pub degraded: AtomicU64,
 }
 
 impl RunMetrics {
@@ -202,6 +222,27 @@ impl EdgeWorker {
                 Ok(Some(v))
             }
             BandDecision::Doubtful => {
+                if !node_alive(&self.db, 0, now_fn()) {
+                    // Cloud unreachable (stale heartbeat): answer locally
+                    // with a hard 0.5 split instead of stranding the crop
+                    // on a dead upload path.
+                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                    let v = verdict_from(
+                        &task,
+                        confidence,
+                        confidence >= 0.5,
+                        Where::Edge(self.state.id),
+                        now_fn(),
+                        self.query,
+                        None,
+                    );
+                    self.metrics.record_verdict(&v);
+                    self.broker.publish(
+                        Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
+                        QoS::AtMostOnce,
+                    );
+                    return Ok(Some(v));
+                }
                 self.metrics
                     .bandwidth
                     .lock()
@@ -365,6 +406,23 @@ pub fn candidates_from_db(
         .collect()
 }
 
+/// [`candidates_from_db`] restricted to live nodes: entries whose
+/// heartbeat went stale are excluded (allocator failover). The local node
+/// is always kept — it is the fallback when everything else looks dead,
+/// and a node never considers itself failed.
+pub fn live_candidates_from_db(
+    db: &ParamDb,
+    local: NodeId,
+    n_edges: u32,
+    upload_penalty: f64,
+    now: f64,
+) -> Vec<NodeLoad> {
+    candidates_from_db(db, local, n_edges, upload_penalty)
+        .into_iter()
+        .filter(|l| l.node == local || node_alive(db, l.node.0, now))
+        .collect()
+}
+
 /// Controller factory per scheme.
 pub fn controller_for(scheme: Scheme, gamma1: f64, gamma2: f64, interval: f64) -> ThresholdController {
     match scheme {
@@ -475,6 +533,39 @@ mod tests {
         let c = candidates_from_db(&db, NodeId(1), 3, 0.2);
         assert_eq!(c.len(), 4);
         assert!(c.iter().all(|l| l.queue == 0));
+    }
+
+    #[test]
+    fn node_alive_tracks_heartbeat_staleness() {
+        let db = ParamDb::new();
+        assert!(node_alive(&db, 1, 100.0), "no heartbeat yet = presumed alive");
+        let st = NodeState::new(NodeId(1), 0.4);
+        st.heartbeat(&db, 10.0);
+        assert!(node_alive(&db, 1, 12.0));
+        assert!(!node_alive(&db, 1, 10.0 + crate::faults::HB_STALE_AFTER + 0.01));
+        st.heartbeat(&db, 20.0);
+        assert!(node_alive(&db, 1, 21.0), "a fresh beat revives the node");
+    }
+
+    #[test]
+    fn live_candidates_exclude_stale_nodes_but_keep_local() {
+        let db = ParamDb::new();
+        let now = 30.0;
+        // Edge 1 beat recently, edge 2 and the cloud went silent at t=10.
+        db.put(&ParamDb::key_hb(1), Value::F64(now - 1.0));
+        db.put(&ParamDb::key_hb(2), Value::F64(10.0));
+        db.put(&ParamDb::key_hb(0), Value::F64(10.0));
+        let c = live_candidates_from_db(&db, NodeId(1), 2, 0.2, now);
+        let ids: Vec<u32> = c.iter().map(|l| l.node.0).collect();
+        assert_eq!(ids, vec![1], "stale edge 2 and stale cloud are excluded");
+        // From edge 2's own perspective it stays a candidate (local).
+        let c2 = live_candidates_from_db(&db, NodeId(2), 2, 0.2, now);
+        let ids2: Vec<u32> = c2.iter().map(|l| l.node.0).collect();
+        assert_eq!(ids2, vec![2, 1]);
+        // No heartbeats recorded at all: behaves exactly like
+        // candidates_from_db (back-compat when heartbeating is off).
+        let silent = ParamDb::new();
+        assert_eq!(live_candidates_from_db(&silent, NodeId(1), 2, 0.2, now).len(), 3);
     }
 
     #[test]

@@ -180,6 +180,11 @@ impl ParamDb {
     pub fn key_q(node: u32) -> String {
         format!("q/{node}")
     }
+    /// Last-heartbeat timestamp of `node` (seconds of scenario time) —
+    /// liveness input for allocator failover (extension beyond the paper).
+    pub fn key_hb(node: u32) -> String {
+        format!("hb/{node}")
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +291,22 @@ mod tests {
     fn key_helpers() {
         assert_eq!(ParamDb::key_t(3), "t/3");
         assert_eq!(ParamDb::key_q(0), "q/0");
+        assert_eq!(ParamDb::key_hb(2), "hb/2");
+    }
+
+    #[test]
+    fn heartbeat_key_roundtrips_and_replicates() {
+        // Heartbeats ride the same versioned-merge replication as the
+        // scheduler state: a peer that merges the snapshot sees liveness.
+        let db = ParamDb::new();
+        db.put(&ParamDb::key_hb(1), Value::F64(12.0));
+        assert_eq!(db.get_f64(&ParamDb::key_hb(1)), Some(12.0));
+        let peer = ParamDb::new();
+        for u in db.snapshot() {
+            peer.merge(&u);
+        }
+        assert_eq!(peer.get_f64(&ParamDb::key_hb(1)), Some(12.0));
+        assert_eq!(peer.get_f64(&ParamDb::key_hb(9)), None, "never-seen node has no heartbeat");
     }
 
     #[test]

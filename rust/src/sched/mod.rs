@@ -34,20 +34,23 @@ impl NodeLoad {
 /// toward the *local* node (first entry) to avoid pointless transfers,
 /// then toward lower node id for determinism.
 pub fn allocate(candidates: &[NodeLoad]) -> Option<NodeId> {
-    let mut best: Option<&NodeLoad> = None;
-    for c in candidates {
+    const EPS: f64 = 1e-12;
+    let mut best: Option<(usize, &NodeLoad)> = None;
+    for (i, c) in candidates.iter().enumerate() {
         let better = match best {
             None => true,
-            Some(b) => {
+            Some((bi, b)) => {
                 let (cb, cc) = (b.cost(), c.cost());
-                cc < cb - 1e-12
+                // Strictly cheaper wins; on a tie the incumbent first entry
+                // (the local node) is kept, otherwise the lower id wins.
+                cc < cb - EPS || ((cc - cb).abs() <= EPS && bi != 0 && c.node < b.node)
             }
         };
         if better {
-            best = Some(c);
+            best = Some((i, c));
         }
     }
-    best.map(|b| b.node)
+    best.map(|(_, b)| b.node)
 }
 
 /// Configuration for the eq. 8–9 controller.
@@ -162,6 +165,44 @@ mod tests {
     fn allocate_tie_prefers_first() {
         let c = vec![load(3, 2, 0.5), load(1, 2, 0.5)];
         assert_eq!(allocate(&c), Some(NodeId(3)));
+    }
+
+    #[test]
+    fn allocate_tie_breaks_to_lower_id_when_first_loses() {
+        // Regression: the first (local) entry is NOT part of the tie, so
+        // the documented order demands the lowest id among the tied
+        // minimum-cost nodes — the old code kept whichever came first.
+        let c = vec![load(7, 3, 1.0), load(5, 2, 0.5), load(2, 2, 0.5)];
+        // costs: 3.0, 1.0, 1.0 -> tie between id 5 and id 2 -> id 2
+        assert_eq!(allocate(&c), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn prop_allocate_tiebreak_matches_documented_order() {
+        check("allocate_tiebreak", |rng, _| {
+            // Coarse cost grid so ties are frequent; shuffled distinct ids
+            // so "first entry" and "lowest id" genuinely disagree.
+            let n = rng.range_usize(1, 8);
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            let c: Vec<NodeLoad> = ids
+                .into_iter()
+                .map(|id| NodeLoad {
+                    node: NodeId(id),
+                    queue: rng.range_usize(0, 3),
+                    t_infer: 0.5,
+                    penalty: 0.0,
+                })
+                .collect();
+            let chosen = allocate(&c).unwrap();
+            let min = c.iter().map(|l| l.cost()).fold(f64::INFINITY, f64::min);
+            let expect = if (c[0].cost() - min).abs() <= 1e-12 {
+                c[0].node // local node is part of the tie: it wins
+            } else {
+                c.iter().filter(|l| (l.cost() - min).abs() <= 1e-12).map(|l| l.node).min().unwrap()
+            };
+            assert_eq!(chosen, expect, "candidates {c:?}");
+        });
     }
 
     #[test]

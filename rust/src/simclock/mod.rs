@@ -98,17 +98,40 @@ impl Sim {
 
     /// Schedule `action` at absolute simulated time `at` (clamped to now).
     pub fn schedule_at<F: FnOnce(&mut Sim) + Send + 'static>(&mut self, at: f64, action: F) {
+        self.schedule_at_cancellable(at, action);
+    }
+
+    /// Like [`Sim::schedule_at`], but returns a token accepted by
+    /// [`Sim::cancel`] — the ack-timer primitive: schedule the retry, cancel
+    /// it when the acknowledgement arrives first. Tokens are only valid
+    /// until the heap fully drains (storage is compacted then).
+    pub fn schedule_at_cancellable<F: FnOnce(&mut Sim) + Send + 'static>(
+        &mut self,
+        at: f64,
+        action: F,
+    ) -> u64 {
         let time = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
         let slot = self.events.len();
         self.events.push(Some(SimEvent { time, action: Box::new(action) }));
         self.heap.push(Reverse(HeapKey { time, seq, slot }));
+        slot as u64
     }
 
     /// Schedule after a delay.
     pub fn schedule_in<F: FnOnce(&mut Sim) + Send + 'static>(&mut self, delay: f64, action: F) {
         self.schedule_at(self.now + delay.max(0.0), action);
+    }
+
+    /// Cancel a pending event by its token. Returns `true` if the event was
+    /// still pending (it will now never run), `false` if it already ran,
+    /// was already cancelled, or the token is stale.
+    pub fn cancel(&mut self, token: u64) -> bool {
+        self.events
+            .get_mut(token as usize)
+            .and_then(|slot| slot.take())
+            .is_some()
     }
 
     /// Run until the heap empties or simulated time exceeds `until`.
@@ -252,6 +275,53 @@ mod tests {
         }
         sim.run_until(10.0);
         assert_eq!(*log.lock().unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn cancelled_event_never_runs() {
+        let mut sim = Sim::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c1 = count.clone();
+        let token = sim.schedule_at_cancellable(2.0, move |_| {
+            c1.fetch_add(1, Ordering::SeqCst);
+        });
+        let c2 = count.clone();
+        sim.schedule_at(3.0, move |_| {
+            c2.fetch_add(10, Ordering::SeqCst);
+        });
+        assert!(sim.cancel(token));
+        let ran = sim.run_until(10.0);
+        assert_eq!(ran, 1, "only the surviving event executes");
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_rejects_fired_events() {
+        let mut sim = Sim::new();
+        let token = sim.schedule_at_cancellable(1.0, |_| {});
+        assert!(sim.cancel(token));
+        assert!(!sim.cancel(token), "second cancel is a no-op");
+        let token2 = sim.schedule_at_cancellable(2.0, |_| {});
+        sim.run_until(10.0);
+        assert!(!sim.cancel(token2), "already-fired event cannot be cancelled");
+    }
+
+    #[test]
+    fn ack_before_timeout_cancels_retry() {
+        // The dispatch idiom: schedule a retry at now+timeout, cancel it
+        // when the ack arrives first.
+        let mut sim = Sim::new();
+        let retries = Arc::new(AtomicUsize::new(0));
+        let r = retries.clone();
+        let retry = sim.schedule_at_cancellable(5.0, move |_| {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        sim.schedule_at(1.0, move |s| {
+            assert!(s.cancel(retry), "ack at t=1 beats the t=5 timeout");
+        });
+        sim.run_until(10.0);
+        assert_eq!(retries.load(Ordering::SeqCst), 0);
+        assert!((sim.now() - 1.0).abs() < 1e-9);
     }
 
     #[test]

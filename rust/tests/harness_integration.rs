@@ -133,7 +133,7 @@ fn edge_outage_rerouting() {
 
 #[test]
 fn shipped_config_presets_load_and_run() {
-    for preset in ["single_edge", "homogeneous", "heterogeneous", "bicycle_query"] {
+    for preset in ["single_edge", "homogeneous", "heterogeneous", "bicycle_query", "chaos"] {
         let path = format!("{}/configs/{preset}.toml", env!("CARGO_MANIFEST_DIR"));
         let mut cfg = Config::from_file(std::path::Path::new(&path))
             .unwrap_or_else(|e| panic!("{preset}: {e}"));
