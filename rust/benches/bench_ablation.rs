@@ -32,8 +32,8 @@ fn ablate_controller() -> anyhow::Result<()> {
     println!("|---------------|-------|--------|----------|-----------|");
     for uplink in [2.0, 4.0, 6.0, 12.0] {
         let cfg = Config { duration: duration(), uplink_mbps: uplink, ..Config::single_edge() };
-        let se = Harness::new(cfg.clone(), synth()).run(Scheme::SurveilEdge)?;
-        let fx = Harness::new(cfg, synth()).run(Scheme::SurveilEdgeFixed)?;
+        let se = Harness::builder(cfg.clone()).mode(synth()).build().run(Scheme::SurveilEdge)?;
+        let fx = Harness::builder(cfg).mode(synth()).build().run(Scheme::SurveilEdgeFixed)?;
         println!(
             "| {uplink:.0} | {:.3} | {:6.2}s | {:.3} | {:6.2}s |",
             se.row.accuracy, se.row.avg_latency, fx.row.accuracy, fx.row.avg_latency
@@ -91,7 +91,7 @@ fn ablate_gamma1() -> anyhow::Result<()> {
     println!("|----|----|-------------|----------------|");
     for gamma1 in [0.02, 0.05, 0.1, 0.3, 0.8] {
         let cfg = Config { duration: duration(), gamma1, ..Config::single_edge() };
-        let r = Harness::new(cfg, synth()).run(Scheme::SurveilEdge)?;
+        let r = Harness::builder(cfg).mode(synth()).build().run(Scheme::SurveilEdge)?;
         println!(
             "| {gamma1} | {:.3} | {:6.2}s | {:7.1} |",
             r.row.accuracy, r.row.avg_latency, r.row.bandwidth_mb
@@ -139,8 +139,9 @@ fn ablate_outage() -> anyhow::Result<()> {
     println!("| scheme | healthy lat | with-outage lat | outage penalty |");
     println!("|--------|-------------|-----------------|----------------|");
     for scheme in [Scheme::SurveilEdge, Scheme::SurveilEdgeFixed, Scheme::EdgeOnly] {
-        let healthy = Harness::new(cfg.clone(), synth()).run(scheme)?;
-        let faulted = Harness::new(cfg.clone(), synth()).with_outage(outage).run(scheme)?;
+        let healthy = Harness::builder(cfg.clone()).mode(synth()).build().run(scheme)?;
+        let faulted =
+            Harness::builder(cfg.clone()).mode(synth()).outage(outage).build().run(scheme)?;
         println!(
             "| {} | {:6.2}s | {:6.2}s | {:+6.2}s |",
             scheme.name(),

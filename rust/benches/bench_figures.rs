@@ -21,7 +21,7 @@ fn synth() -> ComputeMode {
 }
 
 fn run(cfg: &Config, scheme: Scheme) -> anyhow::Result<SchemeResult> {
-    let mut h = Harness::new(cfg.clone(), synth());
+    let mut h = Harness::builder(cfg.clone()).mode(synth()).build();
     h.run(scheme)
 }
 

@@ -7,7 +7,7 @@
 //! BENCH_PJRT=1 to route classifications through the AOT artifacts.
 
 use surveiledge::config::Config;
-use surveiledge::harness::{run_all_schemes, standard_mode};
+use surveiledge::harness::{run_all_schemes, RunSpec};
 use surveiledge::metrics::render_table;
 
 fn duration() -> f64 {
@@ -22,7 +22,7 @@ fn run_setting(title: &str, mut cfg: Config) -> anyhow::Result<()> {
     cfg.duration = duration();
     let pjrt = use_pjrt();
     let t0 = std::time::Instant::now();
-    let results = run_all_schemes(&cfg, &mut || standard_mode(&cfg, pjrt))?;
+    let results = run_all_schemes(&RunSpec::new(cfg).pjrt(pjrt))?;
     let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
     println!("{}", render_table(title, &rows));
     for r in &results {

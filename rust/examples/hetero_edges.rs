@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for scheme in Scheme::all() {
         let mode = standard_mode(&cfg, pjrt)?;
-        let mut harness = Harness::new(cfg.clone(), mode);
+        let mut harness = Harness::builder(cfg.clone()).mode(mode).build();
         let r = harness.run(scheme)?;
 
         // Per-edge latency summary (Fig. 8 (b)-(d) data).

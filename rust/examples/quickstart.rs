@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     for scheme in Scheme::all() {
         let mode = standard_mode(&cfg, pjrt)?;
-        let mut harness = Harness::new(cfg.clone(), mode);
+        let mut harness = Harness::builder(cfg.clone()).mode(mode).build();
         let result = harness.run(scheme)?;
         println!(
             "{:20} {:4} tasks, {:4} uploads, p99 latency {:.2}s",

@@ -19,6 +19,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// The one stable result schema (`crate::obs::Report`, kind
+    /// `micro_bench`) shared with `SchemeResult::report()`.
+    pub fn report(&self) -> crate::obs::Report {
+        let mut r = crate::obs::Report::new("micro_bench", &self.name);
+        r.push("iters", self.iters as f64);
+        r.push("mean_ns", self.mean_ns);
+        r.push("p50_ns", self.p50_ns);
+        r.push("p99_ns", self.p99_ns);
+        r.push("min_ns", self.min_ns);
+        r
+    }
+
     pub fn row(&self) -> String {
         format!(
             "| {} | {} | {} | {} | {} | {} |",
@@ -165,5 +177,9 @@ mod tests {
         let row = r.row();
         assert!(row.contains("| x |"));
         assert!(row.contains("1.00 µs"));
+        let rep = r.report();
+        assert_eq!(rep.kind, "micro_bench");
+        assert_eq!(rep.get("iters"), Some(100.0));
+        assert_eq!(rep.get("p99_ns"), Some(2000.0));
     }
 }

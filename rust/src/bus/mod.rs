@@ -82,6 +82,7 @@ struct BrokerInner {
     stats: Mutex<BusStats>,
     fault: Mutex<Option<Arc<dyn LinkFault>>>,
     pub_seq: AtomicU64,
+    obs: Mutex<Option<crate::obs::Registry>>,
 }
 
 /// Broker throughput counters (observability + bandwidth accounting).
@@ -117,8 +118,15 @@ impl Broker {
                 stats: Mutex::new(BusStats::default()),
                 fault: Mutex::new(None),
                 pub_seq: AtomicU64::new(0),
+                obs: Mutex::new(None),
             }),
         }
+    }
+
+    /// Mirror broker throughput into a metric registry
+    /// (`surveiledge_bus_*_total` counters, updated on every publish).
+    pub fn attach_registry(&self, reg: crate::obs::Registry) {
+        *self.inner.obs.lock().unwrap() = Some(reg);
     }
 
     /// Install a transit fault: subsequent publishes consult it and may be
@@ -176,9 +184,15 @@ impl Broker {
             fault.as_ref().map_or(false, |f| f.drop_publish(&msg.topic, seq))
         };
         if faulted {
-            let mut stats = self.inner.stats.lock().unwrap();
-            stats.published += 1;
-            stats.injected_drops += 1;
+            {
+                let mut stats = self.inner.stats.lock().unwrap();
+                stats.published += 1;
+                stats.injected_drops += 1;
+            }
+            if let Some(reg) = self.inner.obs.lock().unwrap().as_ref() {
+                reg.inc("surveiledge_bus_published_total", &[], 1);
+                reg.inc("surveiledge_bus_injected_drops_total", &[], 1);
+            }
             return 0;
         }
         if msg.retained {
@@ -220,11 +234,20 @@ impl Broker {
             let mut subs = self.inner.subs.lock().unwrap();
             subs.retain(|s| !dead.contains(&s.id));
         }
-        let mut stats = self.inner.stats.lock().unwrap();
-        stats.published += 1;
-        stats.delivered += delivered as u64;
-        stats.dropped += dropped as u64;
-        stats.bytes += msg.payload.len() as u64 * delivered.max(1) as u64;
+        let bytes = msg.payload.len() as u64 * delivered.max(1) as u64;
+        {
+            let mut stats = self.inner.stats.lock().unwrap();
+            stats.published += 1;
+            stats.delivered += delivered as u64;
+            stats.dropped += dropped as u64;
+            stats.bytes += bytes;
+        }
+        if let Some(reg) = self.inner.obs.lock().unwrap().as_ref() {
+            reg.inc("surveiledge_bus_published_total", &[], 1);
+            reg.inc("surveiledge_bus_delivered_total", &[], delivered as u64);
+            reg.inc("surveiledge_bus_dropped_total", &[], dropped as u64);
+            reg.inc("surveiledge_bus_bytes_total", &[], bytes);
+        }
         delivered
     }
 
@@ -248,6 +271,19 @@ mod tests {
         let m = rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(m.payload.as_slice(), &[1, 2, 3]);
         assert!(rx.try_recv().is_err(), "must not receive other topics");
+    }
+
+    #[test]
+    fn registry_mirrors_bus_counters() {
+        let b = Broker::new();
+        let reg = crate::obs::Registry::new();
+        b.attach_registry(reg.clone());
+        let (_rx, _) = b.subscribe("task/#", 8);
+        b.publish(Message::new("task/edge1", vec![0; 16]), QoS::AtLeastOnce);
+        assert_eq!(reg.counter("surveiledge_bus_published_total", &[]), 1);
+        assert_eq!(reg.counter("surveiledge_bus_delivered_total", &[]), 1);
+        assert_eq!(reg.counter("surveiledge_bus_bytes_total", &[]), 16);
+        assert_eq!(reg.counter("surveiledge_bus_dropped_total", &[]), 0);
     }
 
     #[test]

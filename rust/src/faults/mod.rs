@@ -119,6 +119,15 @@ impl FaultPlan {
         FaultPlan::default()
     }
 
+    /// Describe the plan's shape as gauges so an observability export is
+    /// self-documenting about what was injected.
+    pub fn export_into(&self, reg: &crate::obs::Registry, labels: &[(&str, &str)]) {
+        reg.gauge_set("surveiledge_fault_plan_seed", labels, self.seed as f64);
+        reg.gauge_set("surveiledge_fault_plan_crash_windows", labels, self.crashes.len() as f64);
+        reg.gauge_set("surveiledge_fault_plan_slow_windows", labels, self.slow.len() as f64);
+        reg.gauge_set("surveiledge_fault_plan_link_drop_p", labels, self.link.drop_p);
+    }
+
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty()
             && self.slow.is_empty()

@@ -30,10 +30,11 @@ use crate::estimator::LatencyEstimator;
 use crate::faults::{backoff, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
 use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
 use crate::nodes::node_alive;
+use crate::obs::{Registry, Report, SpanEvent, Stage};
 use crate::paramdb::{ParamDb, Value};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ModelRunner, MomentumSgd};
-use crate::sched::{allocate, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
+use crate::sched::{allocate, record_allocation, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
 use crate::testkit::Rng;
 use crate::trace::synth_confidence;
 use crate::types::{ClassId, Image, NodeId};
@@ -183,10 +184,12 @@ pub fn finetune_corpus(query: ClassId, n: usize, seed: u64) -> (Vec<f32>, Vec<i3
 /// One task flowing through the DES.
 #[derive(Clone)]
 struct SimTask {
-    #[allow(dead_code)]
     id: u64,
     t_capture: f64,
     home_edge: u32,
+    /// When the task last entered a queue (node or uplink) — feeds the
+    /// queue/uplink stage spans.
+    t_enqueue: f64,
     /// Crop pixels (PJRT mode) — empty in synthetic mode.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     crop: Vec<f32>,
@@ -284,6 +287,25 @@ pub struct SchemeResult {
     pub faults: FaultStats,
 }
 
+impl SchemeResult {
+    /// Collapse into the one stable [`Report`] schema every consumer
+    /// (CLI, benches, integration tests, EXPERIMENTS.md recipes) reads
+    /// metrics through: kind `scheme_run`, named after the scheme.
+    pub fn report(&self) -> Report {
+        let mut r = Report::new("scheme_run", &self.row.scheme);
+        r.push("accuracy_f2", self.row.accuracy);
+        r.push("avg_latency_s", self.row.avg_latency);
+        r.push("p50_latency_s", self.latency.percentile(0.5));
+        r.push("p99_latency_s", self.latency.percentile(0.99));
+        r.push("bandwidth_mb", self.row.bandwidth_mb);
+        r.push("tasks", self.tasks as f64);
+        r.push("uploads", self.uploads as f64);
+        r.push("mean_band_width", self.mean_band_width);
+        self.faults.fill_report(&mut r);
+        r
+    }
+}
+
 /// Fault injection: an edge node goes dark for a time window. Tasks that
 /// would run there must be re-routed (SurveilEdge) or stall until
 /// recovery (schemes without an allocator) — an extension experiment
@@ -311,23 +333,120 @@ pub struct Harness {
     /// Scripted fault plan (crashes, drops, delays, slowdowns) — defaults
     /// to `cfg.faults`; `FaultPlan::none()` leaves the run fault-free.
     pub plan: FaultPlan,
+    /// Observability sink: per-task stage spans + counters/gauges/
+    /// histograms accumulate here when attached (`builder(..).observe(..)`).
+    pub obs: Option<Registry>,
+}
+
+/// Builder for [`Harness`] — replaces the `Harness::new` +
+/// `with_outage`/`with_plan` ad-hoc chaining:
+///
+/// ```ignore
+/// let mut h = Harness::builder(cfg)
+///     .mode(ComputeMode::synthetic_default())
+///     .plan(plan)
+///     .observe(registry)
+///     .build();
+/// ```
+pub struct HarnessBuilder {
+    cfg: Config,
+    times: ServiceTimes,
+    mode: Option<ComputeMode>,
+    outage: Option<EdgeOutage>,
+    plan: Option<FaultPlan>,
+    obs: Option<Registry>,
+}
+
+impl HarnessBuilder {
+    /// Compute source (defaults to [`ComputeMode::synthetic_default`]).
+    pub fn mode(mut self, mode: ComputeMode) -> HarnessBuilder {
+        self.mode = Some(mode);
+        self
+    }
+
+    /// Override the calibrated service-time constants.
+    pub fn times(mut self, times: ServiceTimes) -> HarnessBuilder {
+        self.times = times;
+        self
+    }
+
+    /// Legacy single-window edge outage.
+    pub fn outage(mut self, outage: EdgeOutage) -> HarnessBuilder {
+        self.outage = Some(outage);
+        self
+    }
+
+    /// Override the fault schedule (defaults to the config's `[faults]`).
+    pub fn plan(mut self, plan: FaultPlan) -> HarnessBuilder {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// Attach a metric registry; the run records spans and metrics into it.
+    pub fn observe(mut self, reg: Registry) -> HarnessBuilder {
+        self.obs = Some(reg);
+        self
+    }
+
+    pub fn build(self) -> Harness {
+        let HarnessBuilder { cfg, times, mode, outage, plan, obs } = self;
+        let plan = plan.unwrap_or_else(|| cfg.faults.clone());
+        let mode = mode.unwrap_or_else(ComputeMode::synthetic_default);
+        Harness { cfg, times, mode, outage, plan, obs }
+    }
 }
 
 impl Harness {
-    pub fn new(cfg: Config, mode: ComputeMode) -> Harness {
-        let plan = cfg.faults.clone();
-        Harness { cfg, times: ServiceTimes::default(), mode, outage: None, plan }
+    /// Start building a harness for `cfg` (see [`HarnessBuilder`]).
+    pub fn builder(cfg: Config) -> HarnessBuilder {
+        HarnessBuilder {
+            cfg,
+            times: ServiceTimes::default(),
+            mode: None,
+            outage: None,
+            plan: None,
+            obs: None,
+        }
     }
 
+    #[deprecated(since = "0.7.0", note = "use Harness::builder(cfg).mode(mode).build()")]
+    pub fn new(cfg: Config, mode: ComputeMode) -> Harness {
+        Harness::builder(cfg).mode(mode).build()
+    }
+
+    #[deprecated(since = "0.7.0", note = "use Harness::builder(..).outage(..)")]
     pub fn with_outage(mut self, outage: EdgeOutage) -> Harness {
         self.outage = Some(outage);
         self
     }
 
     /// Override the fault schedule (defaults to the config's `[faults]`).
+    #[deprecated(since = "0.7.0", note = "use Harness::builder(..).plan(..)")]
     pub fn with_plan(mut self, plan: FaultPlan) -> Harness {
         self.plan = plan;
         self
+    }
+
+    /// Record one stage span (no-op without an attached registry): the
+    /// per-scheme/per-stage latency histogram plus the timeline event.
+    fn span(&self, scheme: Scheme, t: f64, task: u64, stage: Stage, node: u32, dur: f64, detail: &str) {
+        if let Some(reg) = &self.obs {
+            let dur = if dur.is_finite() { dur.max(0.0) } else { 0.0 };
+            reg.observe(
+                "surveiledge_stage_seconds",
+                &[("scheme", scheme.name()), ("stage", stage.as_str())],
+                dur,
+            );
+            reg.span(SpanEvent {
+                t,
+                task,
+                stage,
+                node,
+                dur,
+                scheme: scheme.name().to_string(),
+                detail: detail.to_string(),
+            });
+        }
     }
 
     /// Run one scheme over the configured scenario.
@@ -403,6 +522,15 @@ impl Harness {
         // sequence they always had.
         let faulty = !des.fx.plan.is_empty();
         let db = ParamDb::new();
+        if let Some(reg) = &self.obs {
+            // Heartbeat puts flow through the paramdb counter wiring;
+            // the fault plan's shape lands as gauges so an export is
+            // self-describing.
+            db.attach_registry(reg.clone());
+            if faulty {
+                self.plan.export_into(reg, &[("scheme", scheme.name())]);
+            }
+        }
         // Drain horizon: keep serving queued tasks after the last sample.
         let drain_until = cfg.duration + 60.0;
         if faulty {
@@ -492,9 +620,13 @@ impl Harness {
                                 synth_confidence,
                                 attempt: 0,
                                 doubtful: false,
+                                t_enqueue: t,
                             };
                             next_task_id += 1;
                             result.tasks += 1;
+                            // Detection span: frame-diff ran on the middle
+                            // frame; the crop surfaces one interval later.
+                            self.span(scheme, t, task.id, Stage::Detect, task.home_edge, t - task.t_capture, "");
                             // Route (eq. 7 or the scheme's fixed policy).
                             let dest =
                                 self.route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
@@ -511,17 +643,27 @@ impl Harness {
                     let service =
                         service_time(node, &des.nodes[n], &self.times) * des.fx.plan.slowdown(node, t);
                     des.nodes[n].estimator.observe(service);
+                    // Queue wait = time between entering this node's FIFO
+                    // and service start (clamped: the slowdown factor can
+                    // differ between scheduling and completion).
+                    let qwait = (t - service - task.t_enqueue).max(0.0);
+                    self.span(scheme, t - service, task.id, Stage::Queue, node, qwait, "");
+                    let infer_stage = if node == 0 { Stage::CloudInfer } else { Stage::EdgeInfer };
+                    self.span(scheme, t, task.id, infer_stage, node, service, "");
                     if node == 0 {
                         // Cloud verdict: the oracle's answer, by definition.
                         let latency = (t - task.t_capture) + cfg.rtt / 2.0;
                         self.finish(
                             &mut result,
+                            scheme,
+                            task.id,
                             task.oracle_positive,
                             task.oracle_positive,
                             task.truth_positive,
                             latency,
                             t,
                             task.home_edge,
+                            "cloud",
                         );
                     } else {
                         // Edge classify -> band decision.
@@ -558,16 +700,25 @@ impl Harness {
                             }
                             _ => controllers[e].decide(conf),
                         };
+                        let band = match decision {
+                            BandDecision::Positive => "positive",
+                            BandDecision::Negative => "negative",
+                            BandDecision::Doubtful => "doubtful",
+                        };
+                        self.span(scheme, t, task.id, Stage::ThresholdDecide, node, 0.0, band);
                         match decision {
                             BandDecision::Positive | BandDecision::Negative => {
                                 self.finish(
                                     &mut result,
+                                    scheme,
+                                    task.id,
                                     decision == BandDecision::Positive,
                                     task.oracle_positive,
                                     task.truth_positive,
                                     t - task.t_capture,
                                     t,
                                     task.home_edge,
+                                    "edge",
                                 );
                             }
                             BandDecision::Doubtful => {
@@ -576,7 +727,7 @@ impl Harness {
                                     // heartbeat is stale, so answer with
                                     // the edge confidence rather than
                                     // queue into a dead path.
-                                    self.degrade_finish(task, t, &mut des, &mut result)?;
+                                    self.degrade_finish(scheme, task, t, &mut des, &mut result)?;
                                 } else {
                                     result.uploads += 1;
                                     task.doubtful = true;
@@ -602,6 +753,8 @@ impl Harness {
                         des.uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
                     des.uplinks[e].busy = false;
                     des.kick_uplink(e, t);
+                    // Uplink span covers queue wait + the wire transfer.
+                    self.span(scheme, t, task.id, Stage::Uplink, edge + 1, t - task.t_enqueue, "");
                     if des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t) {
                         // Lost in transit, or the cloud is down: no ack
                         // arrives before the timeout.
@@ -648,6 +801,7 @@ impl Harness {
                         }
                         for task in stranded {
                             des.fstats.rerouted += 1;
+                            self.span(scheme, t, task.id, Stage::Reroute, node, 0.0, "");
                             let dest = self
                                 .route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
                             self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
@@ -659,7 +813,7 @@ impl Harness {
                         if !node_alive(&db, 0, t) {
                             // Still no cloud: answer locally instead of
                             // re-uploading into a dead path.
-                            self.degrade_finish(task, t, &mut des, &mut result)?;
+                            self.degrade_finish(scheme, task, t, &mut des, &mut result)?;
                         } else {
                             let e = (task.home_edge - 1) as usize;
                             des.push_uplink(e, task, t);
@@ -684,6 +838,25 @@ impl Harness {
         };
         result.faults = des.fstats;
         result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
+        if let Some(reg) = &self.obs {
+            let sl = [("scheme", scheme.name())];
+            reg.inc("surveiledge_harness_tasks_total", &sl, result.tasks);
+            reg.inc("surveiledge_harness_uploads_total", &sl, result.uploads);
+            reg.inc("surveiledge_harness_uplink_bytes_total", &sl, des.cloud_bytes);
+            reg.gauge_set("surveiledge_harness_accuracy_f2", &sl, result.row.accuracy);
+            reg.gauge_set("surveiledge_harness_avg_latency_seconds", &sl, result.row.avg_latency);
+            reg.gauge_set("surveiledge_harness_bandwidth_mb", &sl, result.row.bandwidth_mb);
+            reg.gauge_set("surveiledge_harness_mean_band_width", &sl, result.mean_band_width);
+            reg.inc("surveiledge_faults_retried_total", &sl, result.faults.retried);
+            reg.inc("surveiledge_faults_rerouted_total", &sl, result.faults.rerouted);
+            reg.inc("surveiledge_faults_degraded_total", &sl, result.faults.degraded);
+            reg.inc("surveiledge_faults_lost_total", &sl, result.faults.lost);
+            reg.gauge_set(
+                "surveiledge_faults_time_to_reroute_seconds",
+                &sl,
+                result.faults.time_to_reroute,
+            );
+        }
         Ok(result)
     }
 
@@ -730,6 +903,7 @@ impl Harness {
         result: &mut SchemeResult,
     ) -> crate::Result<()> {
         des.fstats.retried += 1;
+        self.span(scheme, t, task.id, Stage::Retry, task.home_edge, 0.0, "");
         let attempt = task.attempt;
         task.attempt += 1;
         // Cloud-only has no edge fallback: it keeps retrying (bounded
@@ -740,7 +914,7 @@ impl Harness {
                 if task.doubtful {
                     // §IV-D's latency/accuracy trade at its limit: an
                     // edge verdict now beats a cloud verdict never.
-                    return self.degrade_finish(task, t, des, result);
+                    return self.degrade_finish(scheme, task, t, des, result);
                 }
                 // Unclassified task: fall back to local processing.
                 let home = task.home_edge as usize;
@@ -756,21 +930,26 @@ impl Harness {
     /// degradation when the cloud path is unavailable).
     fn degrade_finish(
         &mut self,
+        scheme: Scheme,
         task: SimTask,
         t: f64,
         des: &mut Des,
         result: &mut SchemeResult,
     ) -> crate::Result<()> {
         des.fstats.degraded += 1;
+        self.span(scheme, t, task.id, Stage::Degrade, task.home_edge, 0.0, "");
         let conf = self.edge_confidence(&task)?;
         self.finish(
             result,
+            scheme,
+            task.id,
             conf >= 0.5,
             task.oracle_positive,
             task.truth_positive,
             t - task.t_capture,
             t,
             task.home_edge,
+            "degraded",
         );
         Ok(())
     }
@@ -816,7 +995,11 @@ impl Harness {
                 if node_alive(db, 0, t) {
                     cands.push(node_load(0, &nodes[0], upload));
                 }
-                allocate(&cands).unwrap_or(NodeId(home))
+                let dest = allocate(&cands).unwrap_or(NodeId(home));
+                if let Some(reg) = &self.obs {
+                    record_allocation(reg, scheme.name(), dest, &cands);
+                }
+                dest
             }
         }
     }
@@ -873,16 +1056,22 @@ impl Harness {
         }
     }
 
+    /// Record a final verdict: metrics, the per-frame trace, the
+    /// end-of-pipeline span (`dur` = end-to-end latency) and the verdict
+    /// counter by site (`edge` / `cloud` / `degraded`).
     #[allow(clippy::too_many_arguments)]
     fn finish(
         &mut self,
         result: &mut SchemeResult,
+        scheme: Scheme,
+        task_id: u64,
         positive: bool,
         oracle: bool,
         truth: Option<bool>,
         latency: f64,
         t: f64,
         home_edge: u32,
+        site: &'static str,
     ) {
         result.vs_oracle.record(positive, oracle);
         if let Some(tr) = truth {
@@ -890,6 +1079,14 @@ impl Harness {
         }
         result.latency.record(latency);
         result.per_frame.push((t, latency, home_edge));
+        self.span(scheme, t, task_id, Stage::Verdict, home_edge, latency, site);
+        if let Some(reg) = &self.obs {
+            reg.inc(
+                "surveiledge_harness_verdicts_total",
+                &[("scheme", scheme.name()), ("site", site)],
+                1,
+            );
+        }
     }
 }
 
@@ -946,7 +1143,8 @@ impl Des {
         id
     }
 
-    fn enqueue_node(&mut self, n: usize, task: SimTask, t: f64) {
+    fn enqueue_node(&mut self, n: usize, mut task: SimTask, t: f64) {
+        task.t_enqueue = t;
         self.nodes[n].queue.push_back(task);
         self.start_if_idle(n, t);
     }
@@ -979,7 +1177,8 @@ impl Des {
 
     /// Queue a task on an edge's uplink toward the cloud (a retry
     /// retransmits, so the bytes count again).
-    fn push_uplink(&mut self, e: usize, task: SimTask, t: f64) {
+    fn push_uplink(&mut self, e: usize, mut task: SimTask, t: f64) {
+        task.t_enqueue = t;
         self.cloud_bytes += task.wire_bytes;
         self.uplinks[e].queued_bytes += task.wire_bytes;
         self.uplinks[e].queue.push_back(task);
@@ -997,8 +1196,72 @@ impl Des {
     }
 }
 
-/// Run all four schemes on one scenario (the paper's table layout).
-pub fn run_all_schemes(
+/// Everything one multi-scheme comparison run needs. Replaces the old
+/// positional `run_all_schemes(cfg, mode_factory)` signature, whose
+/// arguments had drifted apart between the CLI, the benches and
+/// `tests/harness_integration.rs`.
+#[derive(Clone)]
+pub struct RunSpec {
+    pub cfg: Config,
+    /// Schemes to run, in order (defaults to all four).
+    pub schemes: Vec<Scheme>,
+    /// Fault-schedule override; `None` uses `cfg.faults`.
+    pub plan: Option<FaultPlan>,
+    /// Request real PJRT inference (needs `--features pjrt` + artifacts).
+    pub pjrt: bool,
+    /// Shared registry: every scheme run records into it, labelled by
+    /// scheme.
+    pub obs: Option<Registry>,
+}
+
+impl RunSpec {
+    pub fn new(cfg: Config) -> RunSpec {
+        RunSpec { cfg, schemes: Scheme::all().to_vec(), plan: None, pjrt: false, obs: None }
+    }
+
+    pub fn schemes(mut self, schemes: &[Scheme]) -> RunSpec {
+        self.schemes = schemes.to_vec();
+        self
+    }
+
+    pub fn plan(mut self, plan: FaultPlan) -> RunSpec {
+        self.plan = Some(plan);
+        self
+    }
+
+    pub fn pjrt(mut self, pjrt: bool) -> RunSpec {
+        self.pjrt = pjrt;
+        self
+    }
+
+    pub fn observe(mut self, reg: Registry) -> RunSpec {
+        self.obs = Some(reg);
+        self
+    }
+}
+
+/// Run every scheme in the spec on one scenario (the paper's table
+/// layout). Each scheme gets a fresh harness built from the spec.
+pub fn run_all_schemes(spec: &RunSpec) -> crate::Result<Vec<SchemeResult>> {
+    spec.schemes
+        .iter()
+        .map(|&scheme| {
+            let mode = standard_mode(&spec.cfg, spec.pjrt)?;
+            let mut b = Harness::builder(spec.cfg.clone()).mode(mode);
+            if let Some(plan) = &spec.plan {
+                b = b.plan(plan.clone());
+            }
+            if let Some(reg) = &spec.obs {
+                b = b.observe(reg.clone());
+            }
+            b.build().run(scheme)
+        })
+        .collect()
+}
+
+/// Deprecated positional form of [`run_all_schemes`].
+#[deprecated(since = "0.7.0", note = "use run_all_schemes(&RunSpec)")]
+pub fn run_all_schemes_with(
     cfg: &Config,
     mode_factory: &mut dyn FnMut() -> crate::Result<ComputeMode>,
 ) -> crate::Result<Vec<SchemeResult>> {
@@ -1006,8 +1269,7 @@ pub fn run_all_schemes(
         .into_iter()
         .map(|scheme| {
             let mode = mode_factory()?;
-            let mut h = Harness::new(cfg.clone(), mode);
-            h.run(scheme)
+            Harness::builder(cfg.clone()).mode(mode).build().run(scheme)
         })
         .collect()
 }
@@ -1028,7 +1290,7 @@ mod tests {
     fn single_edge_schemes_have_expected_shape() {
         let cfg = small_cfg();
         let run = |scheme| {
-            let mut h = Harness::new(cfg.clone(), synth_mode());
+            let mut h = Harness::builder(cfg.clone()).mode(synth_mode()).build();
             h.run(scheme).unwrap()
         };
         let se = run(Scheme::SurveilEdge);
@@ -1046,8 +1308,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let cfg = small_cfg();
-        let mut h1 = Harness::new(cfg.clone(), synth_mode());
-        let mut h2 = Harness::new(cfg, synth_mode());
+        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+        let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
         let a = h1.run(Scheme::SurveilEdge).unwrap();
         let b = h2.run(Scheme::SurveilEdge).unwrap();
         assert_eq!(a.tasks, b.tasks);
@@ -1058,7 +1320,7 @@ mod tests {
     #[test]
     fn all_tasks_get_verdicts() {
         let cfg = small_cfg();
-        let mut h = Harness::new(cfg, synth_mode());
+        let mut h = Harness::builder(cfg).mode(synth_mode()).build();
         let r = h.run(Scheme::SurveilEdge).unwrap();
         // Every emitted task is eventually answered (drain horizon).
         assert_eq!(r.latency.len() as u64, r.tasks);
@@ -1067,9 +1329,9 @@ mod tests {
     #[test]
     fn heterogeneous_edge_only_slower_than_surveiledge() {
         let cfg = Config { duration: 120.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
-        let mut h1 = Harness::new(cfg.clone(), synth_mode());
+        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
         let eo = h1.run(Scheme::EdgeOnly).unwrap();
-        let mut h2 = Harness::new(cfg, synth_mode());
+        let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
         let se = h2.run(Scheme::SurveilEdge).unwrap();
         assert!(
             se.row.avg_latency < eo.row.avg_latency,
@@ -1082,7 +1344,7 @@ mod tests {
     #[test]
     fn fault_free_run_reports_quiet_fault_stats() {
         let cfg = small_cfg();
-        let mut h = Harness::new(cfg, synth_mode());
+        let mut h = Harness::builder(cfg).mode(synth_mode()).build();
         let r = h.run(Scheme::SurveilEdge).unwrap();
         assert!(!r.faults.any(), "fault-free run must not retry/reroute/degrade");
         assert_eq!(r.faults.lost, 0);
@@ -1091,8 +1353,8 @@ mod tests {
     #[test]
     fn empty_plan_matches_default_run_exactly() {
         let cfg = small_cfg();
-        let mut h1 = Harness::new(cfg.clone(), synth_mode());
-        let mut h2 = Harness::new(cfg, synth_mode()).with_plan(FaultPlan::none());
+        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+        let mut h2 = Harness::builder(cfg).mode(synth_mode()).plan(FaultPlan::none()).build();
         let a = h1.run(Scheme::SurveilEdge).unwrap();
         let b = h2.run(Scheme::SurveilEdge).unwrap();
         assert_eq!(a.tasks, b.tasks);
@@ -1103,13 +1365,13 @@ mod tests {
     #[test]
     fn slow_window_inflates_edge_latency() {
         let cfg = small_cfg();
-        let mut base = Harness::new(cfg.clone(), synth_mode());
+        let mut base = Harness::builder(cfg.clone()).mode(synth_mode()).build();
         let b = base.run(Scheme::EdgeOnly).unwrap();
         let plan = FaultPlan {
             slow: vec![crate::faults::SlowWindow { node: 1, from: 0.0, until: 60.0, factor: 8.0 }],
             ..FaultPlan::none()
         };
-        let mut slowed = Harness::new(cfg, synth_mode()).with_plan(plan);
+        let mut slowed = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
         let s = slowed.run(Scheme::EdgeOnly).unwrap();
         assert!(
             s.row.avg_latency > b.row.avg_latency,
@@ -1128,11 +1390,52 @@ mod tests {
             crashes: vec![crate::faults::CrashWindow { node: 0, from: 5.0, until: 100.0 }],
             ..FaultPlan::none()
         };
-        let mut h = Harness::new(cfg, synth_mode()).with_plan(plan);
+        let mut h = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
         let r = h.run(Scheme::SurveilEdge).unwrap();
         assert_eq!(r.faults.lost, 0, "no task may be stranded by the cloud outage");
         assert_eq!(r.latency.len() as u64, r.tasks);
         assert!(r.faults.degraded > 0, "cloud outage must force edge-local verdicts");
+    }
+
+    #[test]
+    fn builder_defaults_and_report_schema() {
+        let h = Harness::builder(small_cfg()).build();
+        assert!(matches!(h.mode, ComputeMode::Synthetic { .. }));
+        assert!(h.plan.is_empty(), "default plan comes from cfg.faults (empty here)");
+        assert!(h.obs.is_none());
+        let mut h = Harness::builder(small_cfg()).mode(synth_mode()).build();
+        let r = h.run(Scheme::SurveilEdge).unwrap();
+        let rep = r.report();
+        assert_eq!(rep.kind, "scheme_run");
+        assert_eq!(rep.name, r.row.scheme);
+        assert_eq!(rep.get("tasks"), Some(r.tasks as f64));
+        assert_eq!(rep.get("faults_lost"), Some(0.0));
+        assert!(rep.get("p99_latency_s").unwrap() >= rep.get("p50_latency_s").unwrap());
+    }
+
+    #[test]
+    fn observed_run_emits_spans_and_valid_exports() {
+        let reg = Registry::new();
+        let mut h =
+            Harness::builder(small_cfg()).mode(synth_mode()).observe(reg.clone()).build();
+        let r = h.run(Scheme::SurveilEdge).unwrap();
+        assert!(reg.event_count() > 0, "an observed run must record spans");
+        let sl = [("scheme", r.row.scheme.as_str())];
+        assert_eq!(reg.counter("surveiledge_harness_tasks_total", &sl), r.tasks);
+        assert_eq!(reg.counter("surveiledge_harness_uploads_total", &sl), r.uploads);
+        crate::obs::validate_prometheus(&reg.export_prometheus()).unwrap();
+        assert_eq!(
+            crate::obs::validate_jsonl(&reg.export_jsonl()).unwrap(),
+            reg.event_count()
+        );
+    }
+
+    #[test]
+    fn run_spec_drives_selected_schemes() {
+        let spec = RunSpec::new(small_cfg()).schemes(&[Scheme::SurveilEdge, Scheme::EdgeOnly]);
+        let results = run_all_schemes(&spec).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_ne!(results[0].row.scheme, results[1].row.scheme);
     }
 
     #[test]

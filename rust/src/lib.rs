@@ -29,6 +29,7 @@ pub mod faults;
 pub mod harness;
 pub mod metrics;
 pub mod nodes;
+pub mod obs;
 pub mod paramdb;
 pub mod runtime;
 pub mod sched;

@@ -1,11 +1,12 @@
 //! `surveiledge` CLI launcher.
 //!
 //! Subcommands:
-//!   run      — run one scheme on a scenario config, print the table row
-//!   tables   — reproduce the paper's Tables II/III/IV (all 4 schemes)
-//!   offline  — run the offline stage (profiles, clusters, datasets)
-//!   inspect  — print the artifact manifest summary
-//!   help     — usage
+//!   run       — run one scheme on a scenario config, print the table row
+//!   tables    — reproduce the paper's Tables II/III/IV (all 4 schemes)
+//!   offline   — run the offline stage (profiles, clusters, datasets)
+//!   inspect   — print the artifact manifest summary
+//!   obs-check — validate an `--obs-out` export directory
+//!   help      — usage
 //!
 //! (clap is not in the offline vendor set; flags are parsed by hand.)
 
@@ -13,8 +14,10 @@ use std::path::Path;
 
 use surveiledge::config::{Config, Scheme};
 use surveiledge::coordinator::{offline_stage, OfflineConfig};
-use surveiledge::harness::{run_all_schemes, standard_mode, Harness};
+use surveiledge::harness::{run_all_schemes, standard_mode, Harness, RunSpec};
 use surveiledge::metrics::render_table;
+use surveiledge::obs::{self, Registry, Report};
+use surveiledge::runtime::json::Json;
 use surveiledge::runtime::service::InferenceService;
 use surveiledge::runtime::Manifest;
 use surveiledge::video::standard_deployment;
@@ -23,15 +26,19 @@ const USAGE: &str = "\
 surveiledge — real-time cloud-edge video query (SurveilEdge reproduction)
 
 USAGE:
-  surveiledge run     [--config FILE] [--scheme NAME] [--pjrt] [--duration SECS]
-  surveiledge tables  [--setting single|homogeneous|heterogeneous] [--pjrt] [--duration SECS]
-  surveiledge offline [--cameras N] [--duration SECS] [--artifacts DIR]
-  surveiledge inspect [--artifacts DIR]
+  surveiledge run       [--config FILE] [--scheme NAME] [--pjrt] [--duration SECS] [--obs-out DIR]
+  surveiledge tables    [--setting single|homogeneous|heterogeneous] [--pjrt] [--duration SECS] [--obs-out DIR]
+  surveiledge offline   [--cameras N] [--duration SECS] [--artifacts DIR] [--obs-out DIR]
+  surveiledge inspect   [--artifacts DIR]
+  surveiledge obs-check DIR
   surveiledge help
 
 Schemes: SurveilEdge | fixed | edge-only | cloud-only
 --pjrt runs every classification through the PJRT artifacts (needs `make artifacts`);
-without it, calibrated synthetic confidences are used.";
+without it, calibrated synthetic confidences are used.
+--obs-out DIR writes events.jsonl (per-task stage spans), metrics.prom
+(Prometheus text exposition) and report.json (stable result schema) into DIR;
+`obs-check DIR` validates all three.";
 
 fn arg_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
@@ -59,13 +66,32 @@ fn load_config(args: &[String]) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
+/// Write the registry exports plus `report.json` into `--obs-out DIR`.
+fn write_obs(dir: &str, reg: &Registry, reports: &[Report]) -> anyhow::Result<()> {
+    let dir = Path::new(dir);
+    reg.write_exports(dir)?;
+    std::fs::write(dir.join("report.json"), obs::reports_to_json(reports))?;
+    println!(
+        "obs: wrote events.jsonl ({} spans), metrics.prom, report.json to {}",
+        reg.event_count(),
+        dir.display()
+    );
+    Ok(())
+}
+
 fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let scheme = arg_value(args, "--scheme")
         .and_then(|s| Scheme::from_name(&s))
         .unwrap_or(Scheme::SurveilEdge);
     let mode = standard_mode(&cfg, has_flag(args, "--pjrt"))?;
-    let mut h = Harness::new(cfg, mode);
+    let obs_out = arg_value(args, "--obs-out");
+    let reg = Registry::new();
+    let mut builder = Harness::builder(cfg).mode(mode);
+    if obs_out.is_some() {
+        builder = builder.observe(reg.clone());
+    }
+    let mut h = builder.build();
     let r = h.run(scheme)?;
     println!("{}", render_table("result", std::slice::from_ref(&r.row)));
     println!(
@@ -76,12 +102,16 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         r.latency.percentile(0.99),
         r.latency.std()
     );
+    if let Some(dir) = obs_out {
+        write_obs(&dir, &reg, &[r.report()])?;
+    }
     Ok(())
 }
 
 fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let pjrt = has_flag(args, "--pjrt");
+    let obs_out = arg_value(args, "--obs-out");
     let title = match cfg.edges.len() {
         1 => "Table II — single edge and cloud",
         _ if cfg.edges.iter().all(|e| (e.speed - cfg.edges[0].speed).abs() < 1e-9) => {
@@ -89,9 +119,18 @@ fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
         }
         _ => "Table IV — heterogeneous edges and cloud",
     };
-    let results = run_all_schemes(&cfg, &mut || standard_mode(&cfg, pjrt))?;
+    let reg = Registry::new();
+    let mut spec = RunSpec::new(cfg).pjrt(pjrt);
+    if obs_out.is_some() {
+        spec = spec.observe(reg.clone());
+    }
+    let results = run_all_schemes(&spec)?;
     let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
     println!("{}", render_table(title, &rows));
+    if let Some(dir) = obs_out {
+        let reports: Vec<Report> = results.iter().map(|r| r.report()).collect();
+        write_obs(&dir, &reg, &reports)?;
+    }
     Ok(())
 }
 
@@ -119,6 +158,28 @@ fn cmd_offline(args: &[String]) -> anyhow::Result<()> {
     for (i, ds) in stage.datasets.iter().enumerate() {
         println!("cluster {i}: {} labeled crops", ds.crops.len());
     }
+    if let Some(dir) = arg_value(args, "--obs-out") {
+        let reg = Registry::new();
+        reg.gauge_set("surveiledge_offline_cameras", &[], n as f64);
+        reg.gauge_set("surveiledge_offline_clusters", &[], stage.datasets.len() as f64);
+        for (i, ds) in stage.datasets.iter().enumerate() {
+            let cluster = i.to_string();
+            reg.inc(
+                "surveiledge_offline_crops_total",
+                &[("cluster", cluster.as_str())],
+                ds.crops.len() as u64,
+            );
+        }
+        svc.handle.stats()?.export_into(&reg);
+        let mut report = Report::new("offline_stage", "offline");
+        report.push("cameras", n as f64);
+        report.push("clusters", stage.datasets.len() as f64);
+        report.push(
+            "crops",
+            stage.datasets.iter().map(|d| d.crops.len()).sum::<usize>() as f64,
+        );
+        write_obs(&dir, &reg, &[report])?;
+    }
     Ok(())
 }
 
@@ -138,6 +199,39 @@ fn cmd_inspect(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Validate an `--obs-out` directory: metrics.prom against the Prometheus
+/// exposition rules (naming, TYPE declarations, no duplicate series),
+/// events.jsonl line-by-line through `runtime::json`, and report.json
+/// against the [`Report`] schema if present.
+fn cmd_obs_check(args: &[String]) -> anyhow::Result<()> {
+    let dir = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: surveiledge obs-check DIR"))?;
+    let dir = Path::new(&dir);
+    let prom = std::fs::read_to_string(dir.join("metrics.prom"))?;
+    obs::validate_prometheus(&prom)?;
+    println!("metrics.prom: valid exposition ({} lines)", prom.lines().count());
+    let jsonl = std::fs::read_to_string(dir.join("events.jsonl"))?;
+    let spans = obs::validate_jsonl(&jsonl)?;
+    println!("events.jsonl: {spans} span event(s), all parse");
+    let report_path = dir.join("report.json");
+    if report_path.exists() {
+        let text = std::fs::read_to_string(&report_path)?;
+        let j = Json::parse(&text)?;
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("report.json: expected a JSON array"))?;
+        for item in arr {
+            Report::from_json(item)?;
+        }
+        println!("report.json: {} report(s) round-trip", arr.len());
+    }
+    println!("obs-check: OK");
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.first().map(String::as_str) {
@@ -145,6 +239,7 @@ fn main() {
         Some("tables") => cmd_tables(&args[1..]),
         Some("offline") => cmd_offline(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
+        Some("obs-check") => cmd_obs_check(&args[1..]),
         _ => {
             println!("{USAGE}");
             Ok(())

@@ -10,16 +10,44 @@
 
 use std::collections::HashMap;
 
-/// Binary confusion counts for query answers.
+/// Raw confusion counts, read through [`Confusion::counts`] — one
+/// accessor instead of four public fields (and no more `fn_` keyword
+/// workaround in the public surface).
+#[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
+pub struct ConfusionCounts {
+    pub true_positives: u64,
+    pub false_positives: u64,
+    pub true_negatives: u64,
+    pub false_negatives: u64,
+}
+
+/// Binary confusion counts for query answers. Record-only: counts go in
+/// via [`Confusion::record`] (or [`Confusion::from_counts`]) and come
+/// back out via [`Confusion::counts`].
 #[derive(Clone, Copy, Default, Debug, PartialEq, Eq)]
 pub struct Confusion {
-    pub tp: u64,
-    pub fp: u64,
-    pub tn: u64,
-    pub fn_: u64,
+    tp: u64,
+    fp: u64,
+    tn: u64,
+    fn_: u64,
 }
 
 impl Confusion {
+    /// Build from known raw counts (tests, replay from exports).
+    pub fn from_counts(
+        true_positives: u64,
+        false_positives: u64,
+        true_negatives: u64,
+        false_negatives: u64,
+    ) -> Confusion {
+        Confusion {
+            tp: true_positives,
+            fp: false_positives,
+            tn: true_negatives,
+            fn_: false_negatives,
+        }
+    }
+
     pub fn record(&mut self, predicted: bool, actual: bool) {
         match (predicted, actual) {
             (true, true) => self.tp += 1,
@@ -27,6 +55,20 @@ impl Confusion {
             (false, false) => self.tn += 1,
             (false, true) => self.fn_ += 1,
         }
+    }
+
+    /// Snapshot of the raw counts.
+    pub fn counts(&self) -> ConfusionCounts {
+        ConfusionCounts {
+            true_positives: self.tp,
+            false_positives: self.fp,
+            true_negatives: self.tn,
+            false_negatives: self.fn_,
+        }
+    }
+
+    pub fn false_negatives(&self) -> u64 {
+        self.fn_
     }
 
     pub fn total(&self) -> u64 {
@@ -216,6 +258,16 @@ impl FaultStats {
     pub fn any(&self) -> bool {
         self.retried + self.rerouted + self.degraded + self.lost > 0
     }
+
+    /// Contribute the recovery metrics to a [`crate::obs::Report`] (the
+    /// one stable schema every consumer reads results through).
+    pub fn fill_report(&self, r: &mut crate::obs::Report) {
+        r.push("faults_retried", self.retried as f64);
+        r.push("faults_rerouted", self.rerouted as f64);
+        r.push("faults_degraded", self.degraded as f64);
+        r.push("faults_lost", self.lost as f64);
+        r.push("time_to_reroute_s", self.time_to_reroute);
+    }
 }
 
 /// One row of a paper-style results table (Tables II–IV).
@@ -284,7 +336,13 @@ mod tests {
         c.record(true, false);
         c.record(false, true);
         c.record(false, false);
-        assert_eq!((c.tp, c.fp, c.fn_, c.tn), (1, 1, 1, 1));
+        let k = c.counts();
+        assert_eq!(
+            (k.true_positives, k.false_positives, k.false_negatives, k.true_negatives),
+            (1, 1, 1, 1)
+        );
+        assert_eq!(c.false_negatives(), 1);
+        assert_eq!(c, Confusion::from_counts(1, 1, 1, 1));
         assert_eq!(c.total(), 4);
         assert!((c.precision() - 0.5).abs() < 1e-12);
         assert!((c.recall() - 0.5).abs() < 1e-12);
@@ -293,7 +351,7 @@ mod tests {
 
     #[test]
     fn f1_equals_harmonic_mean() {
-        let c = Confusion { tp: 8, fp: 2, tn: 5, fn_: 4 };
+        let c = Confusion::from_counts(8, 2, 5, 4);
         let p = c.precision();
         let r = c.recall();
         let f1 = c.f_score(1.0);
@@ -304,14 +362,14 @@ mod tests {
     fn f2_weights_recall() {
         // High precision / low recall should score worse under F2 than the
         // mirrored case.
-        let high_p = Confusion { tp: 5, fp: 0, tn: 10, fn_: 5 }; // p=1, r=0.5
-        let high_r = Confusion { tp: 10, fp: 10, tn: 0, fn_: 0 }; // p=0.5, r=1
+        let high_p = Confusion::from_counts(5, 0, 10, 5); // p=1, r=0.5
+        let high_r = Confusion::from_counts(10, 10, 0, 0); // p=0.5, r=1
         assert!(high_r.f2() > high_p.f2());
     }
 
     #[test]
     fn perfect_scores() {
-        let c = Confusion { tp: 10, fp: 0, tn: 10, fn_: 0 };
+        let c = Confusion::from_counts(10, 0, 10, 0);
         assert_eq!(c.f2(), 1.0);
         assert_eq!(c.accuracy(), 1.0);
     }
@@ -319,12 +377,12 @@ mod tests {
     #[test]
     fn prop_fscore_bounded() {
         check("fscore_bounded", |rng, _| {
-            let c = Confusion {
-                tp: rng.range_usize(0, 100) as u64,
-                fp: rng.range_usize(0, 100) as u64,
-                tn: rng.range_usize(0, 100) as u64,
-                fn_: rng.range_usize(0, 100) as u64,
-            };
+            let c = Confusion::from_counts(
+                rng.range_usize(0, 100) as u64,
+                rng.range_usize(0, 100) as u64,
+                rng.range_usize(0, 100) as u64,
+                rng.range_usize(0, 100) as u64,
+            );
             for lambda in [0.5, 1.0, 2.0] {
                 let f = c.f_score(lambda);
                 assert!((0.0..=1.0).contains(&f), "F_{lambda} = {f} for {c:?}");

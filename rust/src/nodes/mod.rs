@@ -118,9 +118,18 @@ pub struct RunMetrics {
     /// cloud's heartbeat was stale (graceful degradation: latency over
     /// accuracy, the §IV-D tradeoff taken to its failure-mode limit).
     pub degraded: AtomicU64,
+    /// Optional metric registry mirroring every recorded verdict
+    /// ([`RunMetrics::attach_registry`]).
+    obs: Mutex<Option<crate::obs::Registry>>,
 }
 
 impl RunMetrics {
+    /// Mirror verdicts into a metric registry: a per-site counter plus a
+    /// latency histogram (`site` = `edge` / `cloud`).
+    pub fn attach_registry(&self, reg: crate::obs::Registry) {
+        *self.obs.lock().unwrap() = Some(reg);
+    }
+
     pub fn record_verdict(&self, v: &Verdict) {
         if let Some(oracle) = v.oracle_positive {
             self.vs_oracle.lock().unwrap().record(v.positive, oracle);
@@ -129,13 +138,19 @@ impl RunMetrics {
             self.vs_truth.lock().unwrap().record(v.positive, truth);
         }
         self.latency.lock().unwrap().record(v.latency);
-        match v.decided_at {
+        let site = match v.decided_at {
             Where::Edge(_) => {
                 self.answered_at_edge.fetch_add(1, Ordering::Relaxed);
+                "edge"
             }
             Where::Cloud => {
                 self.uploads.fetch_add(1, Ordering::Relaxed);
+                "cloud"
             }
+        };
+        if let Some(reg) = self.obs.lock().unwrap().as_ref() {
+            reg.inc("surveiledge_node_verdicts_total", &[("site", site)], 1);
+            reg.observe("surveiledge_node_latency_seconds", &[("site", site)], v.latency);
         }
     }
 }

@@ -1,0 +1,863 @@
+//! Observability: metric registry, per-task stage spans, and exporters.
+//!
+//! The paper's headline claims (§V: 5.4× faster query response, 7× less
+//! bandwidth) are *measurements*, so the pipeline exposes first-class
+//! metrics instead of opaque end-to-end aggregates:
+//!
+//! * [`Registry`] — counters, gauges and log-bucketed [`Histogram`]s,
+//!   keyed by metric name + sorted label set. Cheap to clone (all clones
+//!   share state), `Send + Sync`.
+//! * [`SpanEvent`] — one per-task pipeline [`Stage`] (detect →
+//!   edge-infer → threshold-decide → queue → uplink → cloud-infer →
+//!   verdict) or fault event (retry / reroute / degrade), stamped with
+//!   simulated time, so an export reconstructs every task's timeline.
+//! * Exporters — [`Registry::export_jsonl`] (structured event log, one
+//!   JSON object per line, parseable by `runtime::json`) and
+//!   [`Registry::export_prometheus`] (text exposition). Both are
+//!   deterministic: same-seed runs produce byte-identical exports
+//!   (BTreeMap series order, insertion-ordered events, no wall-clock).
+//!
+//! Metric naming scheme (DESIGN.md §9): `surveiledge_<subsystem>_<what>`,
+//! lowercase `[a-z0-9_]`, `_total` suffix on counters, `_seconds` /
+//! `_bytes` unit suffixes. [`validate_prometheus`] and [`validate_jsonl`]
+//! enforce the rules (CI `observability` job, `surveiledge obs-check`).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::json::Json;
+
+/// A pipeline stage or fault event on a task's timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Frame-difference detection produced the crop.
+    Detect,
+    /// Edge CQ-CNN classification.
+    EdgeInfer,
+    /// α/β band decision on the edge confidence.
+    ThresholdDecide,
+    /// Waiting in a node's FIFO before service.
+    Queue,
+    /// Crop transfer on the home edge's uplink (queue + wire time).
+    Uplink,
+    /// Cloud high-accuracy CNN classification.
+    CloudInfer,
+    /// Final answer recorded (dur = end-to-end latency).
+    Verdict,
+    /// Delivery failed; the task backs off and re-dispatches.
+    Retry,
+    /// Failover sweep re-allocated the task off a dead node.
+    Reroute,
+    /// Answered edge-locally because the cloud path was unavailable.
+    Degrade,
+}
+
+impl Stage {
+    /// The seven pipeline stages, in flow order.
+    pub const PIPELINE: [Stage; 7] = [
+        Stage::Detect,
+        Stage::EdgeInfer,
+        Stage::ThresholdDecide,
+        Stage::Queue,
+        Stage::Uplink,
+        Stage::CloudInfer,
+        Stage::Verdict,
+    ];
+
+    /// The fault/recovery events.
+    pub const FAULT_EVENTS: [Stage; 3] = [Stage::Retry, Stage::Reroute, Stage::Degrade];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Detect => "detect",
+            Stage::EdgeInfer => "edge_infer",
+            Stage::ThresholdDecide => "threshold_decide",
+            Stage::Queue => "queue",
+            Stage::Uplink => "uplink",
+            Stage::CloudInfer => "cloud_infer",
+            Stage::Verdict => "verdict",
+            Stage::Retry => "retry",
+            Stage::Reroute => "reroute",
+            Stage::Degrade => "degrade",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        Stage::PIPELINE
+            .into_iter()
+            .chain(Stage::FAULT_EVENTS)
+            .find(|stage| stage.as_str() == s)
+    }
+
+    /// Is this a recovery event rather than a pipeline stage?
+    pub fn is_fault_event(self) -> bool {
+        Stage::FAULT_EVENTS.contains(&self)
+    }
+}
+
+/// One entry on a task's stage timeline.
+///
+/// `dur` is the stage's duration in simulated seconds (`0` for point
+/// events like the band decision or a retry); `t` is when the stage
+/// *ended*, so the stage spans `[t - dur, t]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub t: f64,
+    pub task: u64,
+    pub stage: Stage,
+    /// The node involved (0 = cloud, `k` = edge `k`).
+    pub node: u32,
+    pub dur: f64,
+    pub scheme: String,
+    /// Free-form annotation (band decision, verdict site, ...).
+    pub detail: String,
+}
+
+/// Label for node ids in metric series (`cloud`, `edge1`, ...).
+pub fn node_label(node: u32) -> String {
+    if node == 0 {
+        "cloud".to_string()
+    } else {
+        format!("edge{node}")
+    }
+}
+
+/// A log-bucketed histogram with Prometheus-style cumulative export.
+///
+/// Bucket `i` counts observations in `(bounds[i-1], bounds[i]]`; one
+/// overflow bucket past the last bound (`+Inf`). Merging requires
+/// identical bounds and is associative (property-tested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` entries; the last is the overflow (+Inf) bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], sum: 0.0, count: 0 }
+    }
+
+    /// Geometric bounds `lo, lo·factor, lo·factor², ...` (n bounds).
+    pub fn log_bucketed(lo: f64, factor: f64, n: usize) -> Histogram {
+        assert!(lo > 0.0 && factor > 1.0 && n > 0, "log_bucketed(lo>0, factor>1, n>0)");
+        let mut bounds = Vec::with_capacity(n);
+        let mut b = lo;
+        for _ in 0..n {
+            bounds.push(b);
+            b *= factor;
+        }
+        Histogram::new(bounds)
+    }
+
+    /// Default latency buckets: 1 ms .. ~2.3 h in ×2 steps (24 bounds).
+    pub fn default_latency() -> Histogram {
+        Histogram::log_bucketed(1e-3, 2.0, 24)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Merge another histogram's counts in (same bounds required).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds, "histogram merge requires identical bounds");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.sum += other.sum;
+        self.count += other.count;
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+}
+
+type Labels = Vec<(String, String)>;
+type SeriesKey = (String, Labels);
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<SeriesKey, u64>,
+    gauges: BTreeMap<SeriesKey, f64>,
+    histograms: BTreeMap<SeriesKey, Histogram>,
+    events: Vec<SpanEvent>,
+}
+
+/// The metric registry. Cheap to clone; all clones share state.
+#[derive(Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+        let mut l: Labels =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        l.sort();
+        (name.to_string(), l)
+    }
+
+    /// Increment a counter series by `by` (creates it at 0 first).
+    pub fn inc(&self, name: &str, labels: &[(&str, &str)], by: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.counters.entry(Self::key(name, labels)).or_insert(0) += by;
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn gauge_set(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.gauges.insert(Self::key(name, labels), v);
+    }
+
+    /// Observe `v` into a histogram series (created with the default
+    /// latency buckets on first touch).
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .histograms
+            .entry(Self::key(name, labels))
+            .or_insert_with(Histogram::default_latency)
+            .observe(v);
+    }
+
+    /// Append a span event to the timeline.
+    pub fn span(&self, ev: SpanEvent) {
+        self.inner.lock().unwrap().events.push(ev);
+    }
+
+    /// Current value of a counter series (0 if absent).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        self.inner.lock().unwrap().counters.get(&Self::key(name, labels)).copied().unwrap_or(0)
+    }
+
+    /// Current value of a gauge series.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(&Self::key(name, labels)).copied()
+    }
+
+    /// Snapshot of a histogram series.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Histogram> {
+        self.inner.lock().unwrap().histograms.get(&Self::key(name, labels)).cloned()
+    }
+
+    /// Snapshot of the event timeline (insertion order).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.inner.lock().unwrap().events.clone()
+    }
+
+    pub fn event_count(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    /// Structured JSONL event log: one JSON object per span event, in
+    /// recording order. Deterministic for a deterministic run.
+    pub fn export_jsonl(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for e in &inner.events {
+            let _ = writeln!(
+                out,
+                "{{\"t\":{},\"task\":{},\"stage\":\"{}\",\"node\":{},\"dur\":{},\"scheme\":\"{}\",\"detail\":\"{}\"}}",
+                fmt_num(e.t),
+                e.task,
+                e.stage.as_str(),
+                e.node,
+                fmt_num(e.dur),
+                escape(&e.scheme),
+                escape(&e.detail),
+            );
+        }
+        out
+    }
+
+    /// Prometheus text exposition: counters, then gauges, then histograms,
+    /// each section in (name, labels) order with one `# TYPE` line per
+    /// metric name. Deterministic byte-for-byte.
+    pub fn export_prometheus(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut last: Option<&str> = None;
+        for ((name, labels), v) in &inner.counters {
+            if last != Some(name.as_str()) {
+                let _ = writeln!(out, "# TYPE {name} counter");
+                last = Some(name);
+            }
+            let _ = writeln!(out, "{}{} {}", name, fmt_labels(labels), v);
+        }
+        last = None;
+        for ((name, labels), v) in &inner.gauges {
+            if last != Some(name.as_str()) {
+                let _ = writeln!(out, "# TYPE {name} gauge");
+                last = Some(name);
+            }
+            let _ = writeln!(out, "{}{} {}", name, fmt_labels(labels), fmt_num(*v));
+        }
+        last = None;
+        for ((name, labels), h) in &inner.histograms {
+            if last != Some(name.as_str()) {
+                let _ = writeln!(out, "# TYPE {name} histogram");
+                last = Some(name);
+            }
+            let mut cum = 0u64;
+            for (bound, c) in h.bounds.iter().zip(&h.counts) {
+                cum += c;
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    name,
+                    fmt_labels_le(labels, &fmt_num(*bound)),
+                    cum
+                );
+            }
+            let _ = writeln!(out, "{}_bucket{} {}", name, fmt_labels_le(labels, "+Inf"), h.count);
+            let _ = writeln!(out, "{}_sum{} {}", name, fmt_labels(labels), fmt_num(h.sum));
+            let _ = writeln!(out, "{}_count{} {}", name, fmt_labels(labels), h.count);
+        }
+        out
+    }
+
+    /// Write `events.jsonl` + `metrics.prom` into `dir` (created if
+    /// missing).
+    pub fn write_exports(&self, dir: &Path) -> crate::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join("events.jsonl"), self.export_jsonl())?;
+        std::fs::write(dir.join("metrics.prom"), self.export_prometheus())?;
+        Ok(())
+    }
+}
+
+/// Deterministic number formatting shared by both exporters: Rust's
+/// shortest-roundtrip `Display` (never exponent notation for f64), with
+/// non-finite values clamped to 0 so the JSON stays parseable.
+fn fmt_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(out, "{}=\"{}\"", k, escape(v));
+    }
+    out.push('}');
+    out
+}
+
+/// Labels plus the histogram `le` bound appended last.
+fn fmt_labels_le(labels: &[(String, String)], le: &str) -> String {
+    let mut out = String::from("{");
+    for (k, v) in labels {
+        let _ = write!(out, "{}=\"{}\",", k, escape(v));
+    }
+    let _ = write!(out, "le=\"{le}\"");
+    out.push('}');
+    out
+}
+
+fn is_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && !s.starts_with(|c: char| c.is_ascii_digit())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Parse one Prometheus sample line into a canonical series string and
+/// its value text. Returns `None` on any syntax violation.
+fn parse_series_line(line: &str) -> Option<(String, String, String)> {
+    let chars: Vec<char> = line.chars().collect();
+    let name_ok = |c: char| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_';
+    let mut i = 0usize;
+    let mut name = String::new();
+    while i < chars.len() && name_ok(chars[i]) {
+        name.push(chars[i]);
+        i += 1;
+    }
+    if !is_metric_name(&name) {
+        return None;
+    }
+    let mut series = name.clone();
+    if i < chars.len() && chars[i] == '{' {
+        series.push('{');
+        i += 1;
+        loop {
+            if i < chars.len() && chars[i] == '}' {
+                series.push('}');
+                i += 1;
+                break;
+            }
+            let mut lname = String::new();
+            while i < chars.len() && name_ok(chars[i]) {
+                lname.push(chars[i]);
+                i += 1;
+            }
+            if !is_metric_name(&lname) {
+                return None;
+            }
+            if i >= chars.len() || chars[i] != '=' {
+                return None;
+            }
+            i += 1;
+            if i >= chars.len() || chars[i] != '"' {
+                return None;
+            }
+            i += 1;
+            let mut lval = String::new();
+            while i < chars.len() && chars[i] != '"' {
+                if chars[i] == '\\' {
+                    lval.push(chars[i]);
+                    i += 1;
+                    if i >= chars.len() {
+                        return None;
+                    }
+                }
+                lval.push(chars[i]);
+                i += 1;
+            }
+            if i >= chars.len() {
+                return None; // unterminated label value
+            }
+            i += 1; // closing quote
+            let _ = write!(series, "{lname}=\"{lval}\"");
+            if i < chars.len() && chars[i] == ',' {
+                series.push(',');
+                i += 1;
+            }
+        }
+    }
+    if i >= chars.len() || chars[i] != ' ' {
+        return None;
+    }
+    i += 1;
+    let value: String = chars[i..].iter().collect();
+    if value.is_empty() || value.contains(' ') {
+        return None;
+    }
+    Some((name, series, value))
+}
+
+/// Validate a Prometheus text exposition: naming rules
+/// (`[a-z_][a-z0-9_]*`), well-formed `# TYPE` lines, every sample
+/// declared by a TYPE, numeric values, and **no duplicate series**.
+pub fn validate_prometheus(text: &str) -> crate::Result<()> {
+    use std::collections::HashSet;
+    let mut typed: HashSet<String> = HashSet::new();
+    let mut seen: HashSet<String> = HashSet::new();
+    for (ln, line) in text.lines().enumerate() {
+        let n = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let parts: Vec<&str> = rest.split(' ').collect();
+            if parts.len() != 2 {
+                anyhow::bail!("metrics.prom line {n}: malformed TYPE line");
+            }
+            let (tname, kind) = (parts[0], parts[1]);
+            if !is_metric_name(tname) {
+                anyhow::bail!("metrics.prom line {n}: bad metric name {tname:?}");
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram") {
+                anyhow::bail!("metrics.prom line {n}: unknown metric type {kind:?}");
+            }
+            if !typed.insert(tname.to_string()) {
+                anyhow::bail!("metrics.prom line {n}: duplicate TYPE for {tname}");
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // other comments are legal
+        }
+        let Some((name, series, value)) = parse_series_line(line) else {
+            anyhow::bail!("metrics.prom line {n}: malformed sample line {line:?}");
+        };
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .unwrap_or(&name);
+        if !typed.contains(&name) && !typed.contains(base) {
+            anyhow::bail!("metrics.prom line {n}: sample {name} has no TYPE declaration");
+        }
+        if value.parse::<f64>().is_err() {
+            anyhow::bail!("metrics.prom line {n}: non-numeric value {value:?}");
+        }
+        if !seen.insert(series.clone()) {
+            anyhow::bail!("metrics.prom line {n}: duplicate series {series}");
+        }
+    }
+    Ok(())
+}
+
+/// Validate a JSONL event log: every line parses through
+/// [`crate::runtime::json`] and carries the span schema (t, task, stage,
+/// node, dur, scheme) with a known stage name. Returns the event count.
+pub fn validate_jsonl(text: &str) -> crate::Result<usize> {
+    let mut n = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("events.jsonl line {}: {e}", ln + 1))?;
+        for key in ["t", "task", "stage", "node", "dur", "scheme"] {
+            if j.get(key).is_none() {
+                anyhow::bail!("events.jsonl line {}: missing key {key:?}", ln + 1);
+            }
+        }
+        let stage = j
+            .get("stage")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("events.jsonl line {}: stage is not a string", ln + 1))?;
+        if Stage::parse(stage).is_none() {
+            anyhow::bail!("events.jsonl line {}: unknown stage {stage:?}", ln + 1);
+        }
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// The one result type every consumer reads metrics through: a kind tag
+/// (`scheme_run`, `micro_bench`), a name, and a flat ordered metric map.
+/// JSON schema (stable): `{"kind":..., "name":..., "metrics":{...}}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Report {
+    pub kind: String,
+    pub name: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Report {
+    pub fn new(kind: &str, name: &str) -> Report {
+        Report { kind: kind.to_string(), name: name.to_string(), metrics: Vec::new() }
+    }
+
+    /// Set a metric (replaces an existing key, preserves first-insert
+    /// order otherwise).
+    pub fn push(&mut self, key: &str, v: f64) {
+        if let Some(slot) = self.metrics.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = v;
+        } else {
+            self.metrics.push((key.to_string(), v));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    pub fn metrics(&self) -> &[(String, f64)] {
+        &self.metrics
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut out = format!(
+            "{{\"kind\":\"{}\",\"name\":\"{}\",\"metrics\":{{",
+            escape(&self.kind),
+            escape(&self.name)
+        );
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\":{}", escape(k), fmt_num(*v));
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// Parse back from [`Report::to_json`] output. Metric order is not
+    /// preserved (JSON objects are unordered); keys come back sorted.
+    pub fn from_json(j: &Json) -> crate::Result<Report> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("report: missing \"kind\""))?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("report: missing \"name\""))?;
+        let obj = j
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("report: missing \"metrics\" object"))?;
+        let mut metrics: Vec<(String, f64)> = Vec::with_capacity(obj.len());
+        for (k, v) in obj {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("report: metric {k:?} is not a number"))?;
+            metrics.push((k.clone(), x));
+        }
+        metrics.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(Report { kind: kind.to_string(), name: name.to_string(), metrics })
+    }
+}
+
+/// Render reports as a JSON array, one report per line.
+pub fn reports_to_json(reports: &[Report]) -> String {
+    let mut out = String::from("[\n");
+    for (i, r) in reports.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.to_json());
+        if i + 1 < reports.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    #[test]
+    fn stage_names_round_trip_and_are_unique() {
+        let all: Vec<Stage> =
+            Stage::PIPELINE.into_iter().chain(Stage::FAULT_EVENTS).collect();
+        for s in &all {
+            assert_eq!(Stage::parse(s.as_str()), Some(*s));
+        }
+        let mut names: Vec<&str> = all.iter().map(|s| s.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len());
+        assert_eq!(Stage::parse("nonsense"), None);
+        assert!(Stage::Retry.is_fault_event());
+        assert!(!Stage::Queue.is_fault_event());
+    }
+
+    #[test]
+    fn counter_gauge_accessors() {
+        let reg = Registry::new();
+        reg.inc("surveiledge_x_total", &[("scheme", "SE")], 2);
+        reg.inc("surveiledge_x_total", &[("scheme", "SE")], 3);
+        reg.gauge_set("surveiledge_g", &[], 1.5);
+        assert_eq!(reg.counter("surveiledge_x_total", &[("scheme", "SE")]), 5);
+        assert_eq!(reg.counter("surveiledge_x_total", &[("scheme", "other")]), 0);
+        assert_eq!(reg.gauge("surveiledge_g", &[]), Some(1.5));
+        // Label order must not matter for series identity.
+        reg.inc("surveiledge_y_total", &[("a", "1"), ("b", "2")], 1);
+        reg.inc("surveiledge_y_total", &[("b", "2"), ("a", "1")], 1);
+        assert_eq!(reg.counter("surveiledge_y_total", &[("a", "1"), ("b", "2")]), 2);
+    }
+
+    #[test]
+    fn prometheus_export_exact_for_counters_and_gauges() {
+        let reg = Registry::new();
+        reg.inc("surveiledge_tasks_total", &[("scheme", "SE")], 7);
+        reg.inc("surveiledge_tasks_total", &[("scheme", "edge-only")], 3);
+        reg.gauge_set("surveiledge_accuracy", &[("scheme", "SE")], 0.875);
+        let text = reg.export_prometheus();
+        assert_eq!(
+            text,
+            "# TYPE surveiledge_tasks_total counter\n\
+             surveiledge_tasks_total{scheme=\"SE\"} 7\n\
+             surveiledge_tasks_total{scheme=\"edge-only\"} 3\n\
+             # TYPE surveiledge_accuracy gauge\n\
+             surveiledge_accuracy{scheme=\"SE\"} 0.875\n"
+        );
+        validate_prometheus(&text).unwrap();
+    }
+
+    #[test]
+    fn prometheus_histogram_is_cumulative_and_valid() {
+        let reg = Registry::new();
+        for v in [0.0005, 0.003, 0.003, 10.0] {
+            reg.observe("surveiledge_stage_seconds", &[("stage", "queue")], v);
+        }
+        let text = reg.export_prometheus();
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("# TYPE surveiledge_stage_seconds histogram"));
+        // First bound is 0.001 -> one observation at or below it.
+        assert!(text.contains("surveiledge_stage_seconds_bucket{stage=\"queue\",le=\"0.001\"} 1\n"));
+        assert!(text.contains("surveiledge_stage_seconds_bucket{stage=\"queue\",le=\"+Inf\"} 4\n"));
+        assert!(text.contains("surveiledge_stage_seconds_count{stage=\"queue\"} 4\n"));
+        // Cumulative counts never decrease down the bucket ladder.
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "non-monotone bucket line: {line}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn validator_rejects_bad_names_and_duplicates() {
+        assert!(validate_prometheus("# TYPE Bad_Name counter\n").is_err());
+        assert!(validate_prometheus("# TYPE x counter\nx 1\nx 2\n").is_err());
+        assert!(validate_prometheus("x 1\n").is_err(), "sample without TYPE");
+        assert!(validate_prometheus("# TYPE x counter\nx{a=\"1\"} 1\nx{a=\"2\"} 2\n").is_ok());
+        assert!(
+            validate_prometheus("# TYPE x counter\nx{a=\"1\"} 1\nx{a=\"1\"} 2\n").is_err(),
+            "duplicate labelled series"
+        );
+        assert!(validate_prometheus("# TYPE x counter\nx notanumber\n").is_err());
+        assert!(validate_prometheus("# TYPE x wibble\n").is_err());
+    }
+
+    #[test]
+    fn jsonl_export_round_trips_through_runtime_json() {
+        let reg = Registry::new();
+        reg.span(SpanEvent {
+            t: 1.5,
+            task: 3,
+            stage: Stage::EdgeInfer,
+            node: 1,
+            dur: 0.28,
+            scheme: "SurveilEdge".to_string(),
+            detail: String::new(),
+        });
+        reg.span(SpanEvent {
+            t: 2.0,
+            task: 3,
+            stage: Stage::ThresholdDecide,
+            node: 1,
+            dur: 0.0,
+            scheme: "SurveilEdge".to_string(),
+            detail: "doubtful".to_string(),
+        });
+        let text = reg.export_jsonl();
+        assert_eq!(validate_jsonl(&text).unwrap(), 2);
+        let first = text.lines().next().unwrap();
+        let j = Json::parse(first).unwrap();
+        assert_eq!(j.get("task").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("stage").and_then(Json::as_str), Some("edge_infer"));
+        assert_eq!(j.get("dur").and_then(Json::as_f64), Some(0.28));
+        assert!(validate_jsonl("{\"t\":1}\n").is_err(), "span schema enforced");
+        assert!(validate_jsonl("").unwrap() == 0);
+    }
+
+    #[test]
+    fn prop_histogram_counts_match_brute_force_oracle() {
+        check("hist_count_oracle", |rng, _| {
+            let mut h = Histogram::log_bucketed(1e-3, 2.0, 12);
+            let n = rng.range_usize(0, 200);
+            let mut vals = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = rng.lognormal3(-1.0, 1.0, 0.0);
+                vals.push(v);
+                h.observe(v);
+            }
+            assert_eq!(h.count(), n as u64);
+            assert_eq!(h.bucket_counts().iter().sum::<u64>(), n as u64, "count preserved");
+            // Brute-force oracle: count each (lower, upper] range directly.
+            let bounds = h.bounds();
+            for (i, &ub) in bounds.iter().enumerate() {
+                let expect = vals
+                    .iter()
+                    .filter(|&&v| v <= ub && (i == 0 || v > bounds[i - 1]))
+                    .count() as u64;
+                assert_eq!(h.bucket_counts()[i], expect, "bucket {i}");
+            }
+            let overflow =
+                vals.iter().filter(|&&v| v > bounds[bounds.len() - 1]).count() as u64;
+            assert_eq!(h.bucket_counts()[bounds.len()], overflow, "overflow bucket");
+        });
+    }
+
+    #[test]
+    fn prop_histogram_merge_is_associative() {
+        check("hist_merge_assoc", |rng, _| {
+            let mut mk = |rng: &mut Rng| {
+                let mut h = Histogram::log_bucketed(1e-3, 2.0, 10);
+                for _ in 0..rng.range_usize(0, 50) {
+                    h.observe(rng.lognormal3(-1.0, 0.8, 0.0));
+                }
+                h
+            };
+            let a = mk(rng);
+            let b = mk(rng);
+            let c = mk(rng);
+            let mut ab_c = a.clone();
+            ab_c.merge(&b);
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c.bucket_counts(), a_bc.bucket_counts());
+            assert_eq!(ab_c.count(), a_bc.count());
+            assert_eq!(ab_c.count(), a.count() + b.count() + c.count());
+            assert!((ab_c.sum() - a_bc.sum()).abs() <= 1e-9 * (1.0 + ab_c.sum().abs()));
+        });
+    }
+
+    #[test]
+    fn report_json_round_trip() {
+        let mut r = Report::new("scheme_run", "SurveilEdge");
+        r.push("accuracy_f2", 0.875);
+        r.push("tasks", 120.0);
+        r.push("accuracy_f2", 0.9); // replaces, keeps order
+        let j = Json::parse(&r.to_json()).unwrap();
+        let back = Report::from_json(&j).unwrap();
+        assert_eq!(back.kind, "scheme_run");
+        assert_eq!(back.name, "SurveilEdge");
+        assert_eq!(back.get("accuracy_f2"), Some(0.9));
+        assert_eq!(back.get("tasks"), Some(120.0));
+        assert_eq!(back.metrics().len(), r.metrics().len());
+        // Array form parses too.
+        let arr = reports_to_json(&[r.clone(), r]);
+        let j = Json::parse(&arr).unwrap();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn node_labels() {
+        assert_eq!(node_label(0), "cloud");
+        assert_eq!(node_label(2), "edge2");
+    }
+}

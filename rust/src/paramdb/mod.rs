@@ -138,6 +138,18 @@ impl ParamDb {
         self.inner.watchers.lock().unwrap().push(Box::new(f));
     }
 
+    /// Mirror DB activity into a metric registry: every put counts, and
+    /// heartbeat keys (`hb/<node>`) additionally count per node — the
+    /// liveness signal behind allocator failover.
+    pub fn attach_registry(&self, reg: crate::obs::Registry) {
+        self.watch(move |u| {
+            reg.inc("surveiledge_paramdb_puts_total", &[], 1);
+            if let Some(node) = u.key.strip_prefix("hb/") {
+                reg.inc("surveiledge_paramdb_heartbeats_total", &[("node", node)], 1);
+            }
+        });
+    }
+
     /// Merge + fire watchers (used by the replication listener).
     pub fn merge_notify(&self, update: &Update) -> bool {
         let applied = self.merge(update);

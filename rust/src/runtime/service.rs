@@ -71,6 +71,26 @@ pub struct ServiceSnapshot {
     pub framediff: ServiceStats,
 }
 
+impl ServiceSnapshot {
+    /// Export the snapshot into a metric registry, one `op` label per
+    /// service operation. A snapshot is a point-in-time total, so export
+    /// it once per run (counters would double on a second export).
+    pub fn export_into(&self, reg: &crate::obs::Registry) {
+        let ops: [(&str, &ServiceStats); 4] = [
+            ("edge_infer", &self.edge_infer),
+            ("cloud_infer", &self.cloud_infer),
+            ("train", &self.train),
+            ("framediff", &self.framediff),
+        ];
+        for (op, s) in ops {
+            let l = [("op", op)];
+            reg.inc("surveiledge_service_calls_total", &l, s.calls);
+            reg.gauge_set("surveiledge_service_mean_seconds", &l, s.mean());
+            reg.gauge_set("surveiledge_service_max_seconds", &l, s.max_secs);
+        }
+    }
+}
+
 /// Cloneable, Send handle to the service thread.
 #[derive(Clone)]
 pub struct ServiceHandle {

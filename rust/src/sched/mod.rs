@@ -7,6 +7,7 @@
 //!   When the system falls behind, the band narrows (fewer uploads); when
 //!   it has headroom, the band widens (more cloud re-checks ⇒ accuracy).
 
+use crate::obs::{node_label, Registry};
 use crate::types::NodeId;
 
 /// A routing-table snapshot for one candidate node.
@@ -51,6 +52,25 @@ pub fn allocate(candidates: &[NodeLoad]) -> Option<NodeId> {
         }
     }
     best.map(|(_, b)| b.node)
+}
+
+/// Record one eq. 7 allocation decision into a metric registry: a counter
+/// per chosen destination and a queue-depth gauge per candidate node.
+pub fn record_allocation(reg: &Registry, scheme: &str, dest: NodeId, candidates: &[NodeLoad]) {
+    let dest_label = node_label(dest.0);
+    reg.inc(
+        "surveiledge_sched_alloc_total",
+        &[("scheme", scheme), ("dest", dest_label.as_str())],
+        1,
+    );
+    for c in candidates {
+        let nl = node_label(c.node.0);
+        reg.gauge_set(
+            "surveiledge_sched_queue_depth",
+            &[("scheme", scheme), ("node", nl.as_str())],
+            c.queue as f64,
+        );
+    }
 }
 
 /// Configuration for the eq. 8–9 controller.

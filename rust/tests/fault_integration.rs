@@ -17,7 +17,7 @@ fn chaos_cfg() -> Config {
 }
 
 fn run(cfg: &Config, scheme: Scheme) -> SchemeResult {
-    Harness::new(cfg.clone(), synth()).run(scheme).expect("run")
+    Harness::builder(cfg.clone()).mode(synth()).build().run(scheme).expect("run")
 }
 
 #[test]

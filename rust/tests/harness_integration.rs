@@ -10,7 +10,7 @@ fn synth() -> ComputeMode {
 }
 
 fn run(cfg: &Config, scheme: Scheme) -> SchemeResult {
-    let mut h = Harness::new(cfg.clone(), synth());
+    let mut h = Harness::builder(cfg.clone()).mode(synth()).build();
     h.run(scheme).expect("run")
 }
 
@@ -106,8 +106,18 @@ fn edge_outage_rerouting() {
     let cfg = Config { duration: 240.0, ..Config::homogeneous() };
     let outage = EdgeOutage { edge: 1, from: 60.0, until: 120.0 };
 
-    let se = Harness::new(cfg.clone(), synth()).with_outage(outage).run(Scheme::SurveilEdge).unwrap();
-    let eo = Harness::new(cfg.clone(), synth()).with_outage(outage).run(Scheme::EdgeOnly).unwrap();
+    let se = Harness::builder(cfg.clone())
+        .mode(synth())
+        .outage(outage)
+        .build()
+        .run(Scheme::SurveilEdge)
+        .unwrap();
+    let eo = Harness::builder(cfg.clone())
+        .mode(synth())
+        .outage(outage)
+        .build()
+        .run(Scheme::EdgeOnly)
+        .unwrap();
 
     let edge1_mean = |r: &SchemeResult| {
         let xs: Vec<f64> = r.per_frame.iter().filter(|(_, _, e)| *e == 1).map(|(_, l, _)| *l).collect();
@@ -138,7 +148,7 @@ fn shipped_config_presets_load_and_run() {
         let mut cfg = Config::from_file(std::path::Path::new(&path))
             .unwrap_or_else(|e| panic!("{preset}: {e}"));
         cfg.duration = 30.0; // shrink for the test
-        let r = Harness::new(cfg, synth()).run(Scheme::SurveilEdge).unwrap();
+        let r = Harness::builder(cfg).mode(synth()).build().run(Scheme::SurveilEdge).unwrap();
         assert!(r.tasks > 0, "{preset} produced no tasks");
     }
 }

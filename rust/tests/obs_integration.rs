@@ -1,0 +1,148 @@
+//! Observability integration: a fully observed harness run must emit a
+//! complete per-task stage timeline, both exporters must validate, and —
+//! the determinism contract — same-seed runs must export byte-identical
+//! files. The chaos scenario additionally has to surface its recovery
+//! activity (retry/reroute/degrade spans matching the fault counters).
+
+use std::collections::{HashMap, HashSet};
+
+use surveiledge::config::{Config, Scheme};
+use surveiledge::harness::{run_all_schemes, ComputeMode, Harness, RunSpec, SchemeResult};
+use surveiledge::obs::{self, Registry, Report, Stage};
+use surveiledge::runtime::json::Json;
+
+fn synth() -> ComputeMode {
+    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+}
+
+fn chaos_cfg() -> Config {
+    let path = format!("{}/configs/chaos.toml", env!("CARGO_MANIFEST_DIR"));
+    Config::from_file(std::path::Path::new(&path)).expect("chaos preset")
+}
+
+fn observed_run(cfg: &Config, scheme: Scheme) -> (SchemeResult, Registry) {
+    let reg = Registry::new();
+    let r = Harness::builder(cfg.clone())
+        .mode(synth())
+        .observe(reg.clone())
+        .build()
+        .run(scheme)
+        .expect("run");
+    (r, reg)
+}
+
+#[test]
+fn same_seed_exports_are_byte_identical() {
+    let cfg = chaos_cfg();
+    let (_, a) = observed_run(&cfg, Scheme::SurveilEdge);
+    let (_, b) = observed_run(&cfg, Scheme::SurveilEdge);
+    assert_eq!(a.export_jsonl(), b.export_jsonl(), "JSONL export must be seed-reproducible");
+    assert_eq!(
+        a.export_prometheus(),
+        b.export_prometheus(),
+        "Prometheus export must be seed-reproducible"
+    );
+}
+
+#[test]
+fn some_task_traverses_all_seven_pipeline_stages() {
+    // An uploaded (doubtful-band) SurveilEdge task touches every pipeline
+    // stage: detect → queue → edge_infer → threshold_decide → uplink →
+    // queue (cloud) → cloud_infer → verdict.
+    let cfg = Config { duration: 120.0, ..Config::single_edge() };
+    let (r, reg) = observed_run(&cfg, Scheme::SurveilEdge);
+    assert!(r.uploads > 0, "need at least one doubtful-band upload");
+
+    let mut per_task: HashMap<u64, HashSet<Stage>> = HashMap::new();
+    for ev in reg.events() {
+        per_task.entry(ev.task).or_default().insert(ev.stage);
+    }
+    let full = per_task
+        .values()
+        .filter(|stages| Stage::PIPELINE.iter().all(|s| stages.contains(s)))
+        .count();
+    assert!(
+        full > 0,
+        "no task covered all {} pipeline stages (of {} tasks with spans)",
+        Stage::PIPELINE.len(),
+        per_task.len()
+    );
+}
+
+#[test]
+fn exported_metrics_match_scheme_result() {
+    let cfg = Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::homogeneous() };
+    let (r, reg) = observed_run(&cfg, Scheme::SurveilEdge);
+    let sl = [("scheme", "SurveilEdge")];
+    assert_eq!(reg.counter("surveiledge_harness_tasks_total", &sl), r.tasks);
+    assert_eq!(reg.counter("surveiledge_harness_uploads_total", &sl), r.uploads);
+    let hist = reg
+        .histogram("surveiledge_stage_seconds", &[("scheme", "SurveilEdge"), ("stage", "verdict")])
+        .expect("verdict stage histogram");
+    assert_eq!(hist.count(), r.tasks, "one verdict span per task");
+}
+
+#[test]
+fn chaos_run_fault_spans_match_fault_counters() {
+    let cfg = chaos_cfg();
+    let (r, reg) = observed_run(&cfg, Scheme::SurveilEdge);
+    let mut by_stage: HashMap<Stage, u64> = HashMap::new();
+    for ev in reg.events() {
+        if ev.stage.is_fault_event() {
+            *by_stage.entry(ev.stage).or_default() += 1;
+        }
+    }
+    let retries = by_stage.get(&Stage::Retry).copied().unwrap_or(0);
+    let reroutes = by_stage.get(&Stage::Reroute).copied().unwrap_or(0);
+    let degrades = by_stage.get(&Stage::Degrade).copied().unwrap_or(0);
+    assert_eq!(retries, r.faults.retried, "retry spans vs counter");
+    assert_eq!(reroutes, r.faults.rerouted, "reroute spans vs counter");
+    assert_eq!(degrades, r.faults.degraded, "degrade spans vs counter");
+    assert!(retries + reroutes + degrades > 0, "chaos run produced no recovery spans");
+    // The fault plan itself is exported for provenance.
+    assert_eq!(reg.gauge("surveiledge_fault_plan_seed", &[("scheme", "SurveilEdge")]), Some(42.0));
+}
+
+#[test]
+fn exports_pass_their_own_validators() {
+    let cfg = chaos_cfg();
+    let (_, reg) = observed_run(&cfg, Scheme::SurveilEdge);
+    obs::validate_prometheus(&reg.export_prometheus()).expect("prometheus export validates");
+    let n = obs::validate_jsonl(&reg.export_jsonl()).expect("jsonl export validates");
+    assert_eq!(n, reg.event_count(), "every span round-trips through runtime::json");
+    assert!(n > 0);
+}
+
+#[test]
+fn run_spec_shares_one_registry_across_schemes() {
+    let cfg = Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() };
+    let reg = Registry::new();
+    let spec = RunSpec::new(cfg)
+        .schemes(&[Scheme::SurveilEdge, Scheme::CloudOnly])
+        .observe(reg.clone());
+    let results = run_all_schemes(&spec).expect("run_all_schemes");
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        let sl = [("scheme", r.row.scheme.as_str())];
+        assert_eq!(
+            reg.counter("surveiledge_harness_tasks_total", &sl),
+            r.tasks,
+            "per-scheme task counter for {}",
+            r.row.scheme
+        );
+    }
+
+    // The converged report schema round-trips through runtime::json.
+    let reports: Vec<Report> = results.iter().map(|r| r.report()).collect();
+    let text = obs::reports_to_json(&reports);
+    let parsed = Json::parse(&text).expect("report.json parses");
+    let arr = parsed.as_arr().expect("array of reports");
+    assert_eq!(arr.len(), reports.len());
+    for (j, orig) in arr.iter().zip(&reports) {
+        let back = Report::from_json(j).expect("report round-trips");
+        assert_eq!(back.kind, orig.kind);
+        assert_eq!(back.name, orig.name);
+        assert_eq!(back.get("tasks"), orig.get("tasks"));
+        assert_eq!(back.get("accuracy_f2"), orig.get("accuracy_f2"));
+    }
+}

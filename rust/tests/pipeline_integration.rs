@@ -122,7 +122,7 @@ fn harness_pjrt_mode_single_edge() {
         ..Config::single_edge()
     };
     let ctx = PjrtCtx::prepare(&cfg, 10).expect("pjrt ctx");
-    let mut h = Harness::new(cfg, ComputeMode::Pjrt(Box::new(ctx)));
+    let mut h = Harness::builder(cfg).mode(ComputeMode::Pjrt(Box::new(ctx))).build();
     let r = h.run(Scheme::SurveilEdge).expect("run");
     assert!(r.tasks > 5, "PJRT harness produced only {} tasks", r.tasks);
     assert_eq!(r.latency.len() as u64, r.tasks);
@@ -142,7 +142,7 @@ fn harness_pjrt_cloud_only_is_oracle() {
         ..Config::single_edge()
     };
     let ctx = PjrtCtx::prepare(&cfg, 0).expect("pjrt ctx");
-    let mut h = Harness::new(cfg, ComputeMode::Pjrt(Box::new(ctx)));
+    let mut h = Harness::builder(cfg).mode(ComputeMode::Pjrt(Box::new(ctx))).build();
     let r = h.run(Scheme::CloudOnly).expect("run");
     // Accuracy vs the oracle is 1.0 by construction in cloud-only.
     assert!((r.row.accuracy - 1.0).abs() < 1e-9);
