@@ -21,7 +21,7 @@ fn duration() -> f64 {
 }
 
 fn synth() -> ComputeMode {
-    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+    ComputeMode::synthetic_default()
 }
 
 /// Ablation 1: adaptive vs fixed thresholds under varying uplink capacity

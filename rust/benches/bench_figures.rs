@@ -8,21 +8,12 @@
 //! Env knobs: BENCH_DURATION (default 240), FIG_CSV_DIR (write CSVs there
 //! in addition to stdout summaries).
 
-use surveiledge::config::{Config, Scheme};
-use surveiledge::harness::{ComputeMode, Harness, SchemeResult};
+use surveiledge::config::Config;
+use surveiledge::harness::{run_all_schemes, RunSpec};
 use surveiledge::metrics::render_csv;
 
 fn duration() -> f64 {
     std::env::var("BENCH_DURATION").ok().and_then(|v| v.parse().ok()).unwrap_or(240.0)
-}
-
-fn synth() -> ComputeMode {
-    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
-}
-
-fn run(cfg: &Config, scheme: Scheme) -> anyhow::Result<SchemeResult> {
-    let mut h = Harness::builder(cfg.clone()).mode(synth()).build();
-    h.run(scheme)
 }
 
 fn dump(name: &str, csv: &str) {
@@ -35,8 +26,8 @@ fn dump(name: &str, csv: &str) {
 
 fn figure(fig: &str, cfg: Config, edges: &[u32]) -> anyhow::Result<()> {
     println!("## Fig. {fig} — latency PDFs + per-frame series\n");
-    for scheme in Scheme::all() {
-        let r = run(&cfg, scheme)?;
+    // All four schemes run concurrently; results come back in spec order.
+    for r in run_all_schemes(&RunSpec::new(cfg))? {
         // (a): PDF of per-frame latency.
         let (centres, dens) = r.latency.pdf(40);
         let csv = render_csv(&["latency_s", "density"], &[&centres, &dens]);

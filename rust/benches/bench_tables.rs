@@ -4,10 +4,13 @@
 //!     cargo bench --bench bench_tables
 //!
 //! Env knobs: BENCH_DURATION (stream seconds, default 240),
-//! BENCH_PJRT=1 to route classifications through the AOT artifacts.
+//! BENCH_PJRT=1 to route classifications through the AOT artifacts,
+//! BENCH_SEQUENTIAL=1 to run the schemes one at a time instead of on
+//! scoped threads (the A/B used to record the wall-clock delta in
+//! EXPERIMENTS.md §Perf).
 
-use surveiledge::config::Config;
-use surveiledge::harness::{run_all_schemes, RunSpec};
+use surveiledge::config::{Config, Scheme};
+use surveiledge::harness::{run_all_schemes, standard_mode, Harness, RunSpec, SchemeResult};
 use surveiledge::metrics::render_table;
 
 fn duration() -> f64 {
@@ -18,11 +21,32 @@ fn use_pjrt() -> bool {
     std::env::var("BENCH_PJRT").map(|v| v == "1").unwrap_or(false)
 }
 
+fn sequential() -> bool {
+    std::env::var("BENCH_SEQUENTIAL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The pre-refactor behavior: one scheme at a time on the calling
+/// thread. Kept behind BENCH_SEQUENTIAL=1 so the parallel speedup is
+/// measurable with the same binary.
+fn run_sequential(cfg: &Config, pjrt: bool) -> anyhow::Result<Vec<SchemeResult>> {
+    Scheme::all()
+        .into_iter()
+        .map(|scheme| {
+            let mode = standard_mode(cfg, pjrt)?;
+            Harness::builder(cfg.clone()).mode(mode).build().run(scheme)
+        })
+        .collect()
+}
+
 fn run_setting(title: &str, mut cfg: Config) -> anyhow::Result<()> {
     cfg.duration = duration();
     let pjrt = use_pjrt();
     let t0 = std::time::Instant::now();
-    let results = run_all_schemes(&RunSpec::new(cfg).pjrt(pjrt))?;
+    let results = if sequential() {
+        run_sequential(&cfg, pjrt)?
+    } else {
+        run_all_schemes(&RunSpec::new(cfg).pjrt(pjrt))?
+    };
     let rows: Vec<_> = results.iter().map(|r| r.row.clone()).collect();
     println!("{}", render_table(title, &rows));
     for r in &results {
@@ -49,8 +73,9 @@ fn run_setting(title: &str, mut cfg: Config) -> anyhow::Result<()> {
         (se.accuracy - eo.accuracy) * 100.0
     );
     println!(
-        "  ({} compute, {:.1}s wall)\n",
+        "  ({} compute, {} schemes, {:.1}s wall)\n",
         if pjrt { "PJRT" } else { "synthetic" },
+        if sequential() { "sequential" } else { "parallel" },
         t0.elapsed().as_secs_f64()
     );
     Ok(())

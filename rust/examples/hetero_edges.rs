@@ -5,8 +5,8 @@
 //!
 //!     cargo run --release --example hetero_edges [--pjrt]
 
-use surveiledge::config::{Config, Scheme};
-use surveiledge::harness::{standard_mode, Harness};
+use surveiledge::config::Config;
+use surveiledge::harness::{run_all_schemes, RunSpec};
 use surveiledge::metrics::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -18,14 +18,12 @@ fn main() -> anyhow::Result<()> {
         cfg.query
     );
 
+    // All four schemes run concurrently on scoped threads.
+    let results = run_all_schemes(&RunSpec::new(cfg.clone()).pjrt(pjrt))?;
     let mut rows = Vec::new();
-    for scheme in Scheme::all() {
-        let mode = standard_mode(&cfg, pjrt)?;
-        let mut harness = Harness::builder(cfg.clone()).mode(mode).build();
-        let r = harness.run(scheme)?;
-
+    for r in results {
         // Per-edge latency summary (Fig. 8 (b)-(d) data).
-        println!("{}:", scheme.name());
+        println!("{}:", r.row.scheme);
         for edge in 1..=3u32 {
             let xs: Vec<f64> = r
                 .per_frame

@@ -7,8 +7,8 @@
 //! bundle; pass `--pjrt` after `make artifacts` to route every
 //! classification through the real AOT-compiled CNNs.
 
-use surveiledge::config::{Config, Scheme};
-use surveiledge::harness::{standard_mode, Harness};
+use surveiledge::config::Config;
+use surveiledge::harness::{run_all_schemes, RunSpec};
 use surveiledge::metrics::render_table;
 
 fn main() -> anyhow::Result<()> {
@@ -23,14 +23,13 @@ fn main() -> anyhow::Result<()> {
         cfg.duration
     );
 
+    // One call runs all four schemes on scoped threads; results arrive in
+    // spec order, each identical to a standalone sequential run.
     let mut rows = Vec::new();
-    for scheme in Scheme::all() {
-        let mode = standard_mode(&cfg, pjrt)?;
-        let mut harness = Harness::builder(cfg.clone()).mode(mode).build();
-        let result = harness.run(scheme)?;
+    for result in run_all_schemes(&RunSpec::new(cfg).pjrt(pjrt))? {
         println!(
             "{:20} {:4} tasks, {:4} uploads, p99 latency {:.2}s",
-            scheme.name(),
+            result.row.scheme,
             result.tasks,
             result.uploads,
             result.latency.percentile(0.99)

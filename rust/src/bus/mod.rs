@@ -181,7 +181,7 @@ impl Broker {
         let seq = self.inner.pub_seq.fetch_add(1, Ordering::Relaxed);
         let faulted = {
             let fault = self.inner.fault.lock().unwrap();
-            fault.as_ref().map_or(false, |f| f.drop_publish(&msg.topic, seq))
+            fault.as_ref().is_some_and(|f| f.drop_publish(&msg.topic, seq))
         };
         if faulted {
             {

@@ -1,0 +1,876 @@
+//! Pure DES mechanics: the event heap, node/uplink queue state, fault and
+//! heartbeat scheduling, the drain horizon — and the event loop that
+//! drives one scheme run.
+//!
+//! The engine knows nothing about the four schemes. Every point where
+//! they diverge (controller construction, routing, band decision, retry
+//! fallback, the failover sweep) goes through the
+//! [`SchemePolicy`](super::scheme::SchemePolicy) it is handed, and the
+//! per-task classify logic is the shared stage layer in
+//! [`pipeline`](super::pipeline) — the same code `nodes::EdgeWorker`
+//! runs on the live substrate.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::estimator::LatencyEstimator;
+use crate::faults::{backoff, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
+use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
+use crate::nodes::node_alive;
+use crate::obs::Stage;
+use crate::paramdb::{ParamDb, Value};
+use crate::sched::{NodeLoad, ThresholdController};
+use crate::testkit::Rng;
+use crate::types::{Image, NodeId};
+use crate::video::standard_deployment;
+
+use crate::detect::DetectConfig;
+
+use super::pipeline::{self, ComputeMode, EdgeAction, PipelineCtx};
+use super::scheme::{RouteCtx, SchemePolicy};
+use super::{EdgeOutage, Harness, SchemeResult, ServiceTimes, HD_SCALE};
+
+/// One task flowing through the DES.
+#[derive(Clone)]
+pub(crate) struct SimTask {
+    pub(crate) id: u64,
+    pub(crate) t_capture: f64,
+    pub(crate) home_edge: u32,
+    /// When the task last entered a queue (node or uplink) — feeds the
+    /// queue/uplink stage spans.
+    pub(crate) t_enqueue: f64,
+    /// Crop pixels (PJRT mode) — empty in synthetic mode.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    pub(crate) crop: Vec<f32>,
+    pub(crate) wire_bytes: u64,
+    pub(crate) truth_positive: Option<bool>,
+    /// Precomputed oracle answer (what the cloud CNN says).
+    pub(crate) oracle_positive: bool,
+    /// Precomputed edge confidence (synthetic mode) or None (PJRT).
+    pub(crate) synth_confidence: Option<f32>,
+    /// Delivery attempts so far (fault runs: drop / no-ack retries).
+    pub(crate) attempt: u32,
+    /// Set once an edge classified it doubtful — from then on its
+    /// destination is pinned to the cloud re-check path.
+    pub(crate) doubtful: bool,
+}
+
+/// DES events.
+pub(crate) enum Event {
+    /// Sample all cameras of all edges at this tick.
+    Sample,
+    /// A node finished its current classification.
+    NodeFinish { node: u32 },
+    /// An uplink finished its current transfer.
+    UplinkFinish { edge: u32 },
+    /// A failed edge comes back and resumes its queue.
+    NodeResume { node: u32 },
+    /// Heartbeat tick: every live node publishes `hb/<id>` (fault runs
+    /// only — fault-free runs never schedule this).
+    Heartbeat,
+    /// Scripted fault-plan transitions.
+    FaultCrash { node: u32 },
+    FaultRecover { node: u32 },
+    /// Stale-heartbeat detection point after a crash: sweep the dead
+    /// node's stranded queue back through the allocator.
+    Failover { node: u32, crash_from: f64 },
+    /// Ack-timeout backoff expired: re-dispatch a task whose delivery
+    /// failed.
+    Redispatch { task: SimTask },
+}
+
+/// Min-heap key: event time, then scheduling sequence number.
+///
+/// The hand-rolled `Ord`/`Eq` give f64 times a total order. Event times
+/// are finite by construction — [`Des::schedule`] asserts it — so the
+/// `partial_cmp(..).unwrap_or(Equal)` NaN fallback is never exercised,
+/// and the `seq` tie-break keeps same-time events in scheduling order.
+pub(crate) struct HeapKey(pub(crate) f64, pub(crate) u64);
+
+impl PartialEq for HeapKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0 && self.1 == other.1
+    }
+}
+impl Eq for HeapKey {}
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+/// Per-node (edge or cloud) queue state.
+pub struct NodeSim {
+    pub(crate) queue: VecDeque<SimTask>,
+    pub(crate) busy: bool,
+    pub(crate) estimator: LatencyEstimator,
+    pub(crate) speed: f64,
+    /// Pending NodeFinish event id — cancelled when the node crashes.
+    pub(crate) finish_ev: Option<u64>,
+}
+
+impl NodeSim {
+    /// The allocator's view of this node (eq. 7 candidate).
+    pub fn load(&self, id: u32, penalty: f64) -> NodeLoad {
+        NodeLoad {
+            node: NodeId(id),
+            queue: self.queue.len() + self.busy as usize,
+            t_infer: self.estimator.estimate(),
+            penalty,
+        }
+    }
+}
+
+/// Per-edge uplink state.
+pub struct Uplink {
+    pub(crate) queue: VecDeque<SimTask>,
+    pub(crate) busy: bool,
+    /// Bytes waiting (including the in-flight transfer) — feeds the
+    /// controller's congestion signal and the allocator's cloud penalty.
+    pub(crate) queued_bytes: u64,
+}
+
+impl Uplink {
+    /// Bytes waiting on this link (including the in-flight transfer).
+    pub fn queued_bytes(&self) -> u64 {
+        self.queued_bytes
+    }
+}
+
+pub(crate) fn service_time(node: u32, sim: &NodeSim, times: &ServiceTimes) -> f64 {
+    if node == 0 {
+        times.cloud_infer / sim.speed
+    } else {
+        times.edge_infer / sim.speed
+    }
+}
+
+type EventHeap = BinaryHeap<Reverse<(HeapKey, u8)>>;
+type EventMap = HashMap<u64, Event>;
+
+/// Immutable fault context for one scheme run.
+pub(crate) struct FaultCtx {
+    pub(crate) plan: FaultPlan,
+    pub(crate) outage: Option<EdgeOutage>,
+}
+
+/// Mutable discrete-event state for one scheme run, bundled so the
+/// dispatch / retry / failover paths share one signature.
+pub(crate) struct Des {
+    pub(crate) nodes: Vec<NodeSim>,
+    pub(crate) uplinks: Vec<Uplink>,
+    pub(crate) heap: EventHeap,
+    pub(crate) events: EventMap,
+    pub(crate) seq: u64,
+    /// Bytes shipped over any uplink (bandwidth accounting).
+    pub(crate) cloud_bytes: u64,
+    pub(crate) fstats: FaultStats,
+    pub(crate) times: ServiceTimes,
+    pub(crate) uplink_bps: f64,
+    pub(crate) fx: FaultCtx,
+}
+
+impl Des {
+    /// Schedule `ev` at time `t`; the returned id cancels it via
+    /// `events.remove` (the heap entry then no-ops). Finite times are an
+    /// invariant here — a NaN key would silently corrupt the heap order.
+    pub(crate) fn schedule(&mut self, t: f64, ev: Event) -> u64 {
+        assert!(t.is_finite(), "event time must be finite, got {t}");
+        let id = self.seq;
+        self.events.insert(id, ev);
+        self.heap.push(Reverse((HeapKey(t, id), 0)));
+        self.seq += 1;
+        id
+    }
+
+    pub(crate) fn enqueue_node(&mut self, n: usize, mut task: SimTask, t: f64) {
+        task.t_enqueue = t;
+        self.nodes[n].queue.push_back(task);
+        self.start_if_idle(n, t);
+    }
+
+    pub(crate) fn start_if_idle(&mut self, n: usize, t: f64) {
+        if self.nodes[n].busy || self.nodes[n].queue.is_empty() {
+            return;
+        }
+        // Legacy outage: a dead edge holds its queue until recovery
+        // (cloud never fails on this path).
+        if let Some(o) = self.fx.outage {
+            if n > 0 && o.covers(t, n as u32) {
+                self.nodes[n].busy = true; // freeze; resume event at recovery
+                self.schedule(o.until, Event::NodeResume { node: n as u32 });
+                return;
+            }
+        }
+        // Fault-plan crash: the queue is frozen but the node is not
+        // marked busy — FaultRecover (or the failover sweep) picks the
+        // tasks back up.
+        if self.fx.plan.is_down(n as u32, t) {
+            return;
+        }
+        self.nodes[n].busy = true;
+        let service =
+            service_time(n as u32, &self.nodes[n], &self.times) * self.fx.plan.slowdown(n as u32, t);
+        let id = self.schedule(t + service, Event::NodeFinish { node: n as u32 });
+        self.nodes[n].finish_ev = Some(id);
+    }
+
+    /// Queue a task on an edge's uplink toward the cloud (a retry
+    /// retransmits, so the bytes count again).
+    pub(crate) fn push_uplink(&mut self, e: usize, mut task: SimTask, t: f64) {
+        task.t_enqueue = t;
+        self.cloud_bytes += task.wire_bytes;
+        self.uplinks[e].queued_bytes += task.wire_bytes;
+        self.uplinks[e].queue.push_back(task);
+        self.kick_uplink(e, t);
+    }
+
+    pub(crate) fn kick_uplink(&mut self, e: usize, t: f64) {
+        if !self.uplinks[e].busy {
+            if let Some(front) = self.uplinks[e].queue.front() {
+                self.uplinks[e].busy = true;
+                let transfer = front.wire_bytes as f64 / self.uplink_bps.max(1.0);
+                self.schedule(t + transfer, Event::UplinkFinish { edge: e as u32 });
+            }
+        }
+    }
+}
+
+/// The DES's view of the shared classify stage, captured at the moment an
+/// edge finishes inference.
+struct DesCtx {
+    /// eq. 8 signal: uplink backlog drain + cloud queue + rtt.
+    signal: f64,
+    cloud_alive: bool,
+}
+
+impl PipelineCtx for DesCtx {
+    fn congestion_signal(&self) -> f64 {
+        self.signal
+    }
+    fn cloud_alive(&self) -> bool {
+        self.cloud_alive
+    }
+}
+
+fn confidence_of(h: &mut Harness, task: &SimTask) -> crate::Result<f32> {
+    h.mode.edge_confidence(&task.crop, task.synth_confidence)
+}
+
+fn route_task(
+    h: &Harness,
+    policy: &dyn SchemePolicy,
+    home: u32,
+    t: f64,
+    des: &Des,
+    db: &ParamDb,
+) -> NodeId {
+    policy.route(&RouteCtx {
+        home,
+        t,
+        cfg: &h.cfg,
+        nodes: &des.nodes,
+        uplinks: &des.uplinks,
+        db,
+        outage: h.outage,
+        obs: h.obs.as_ref(),
+    })
+}
+
+/// Send `task` toward `dest` (as chosen by the policy's route). Under a
+/// fault plan a remote hop can fail — a dropped message or a dead
+/// destination goes to the retry path instead of a queue.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    h: &mut Harness,
+    policy: &dyn SchemePolicy,
+    task: SimTask,
+    dest: NodeId,
+    t: f64,
+    des: &mut Des,
+    db: &ParamDb,
+    result: &mut SchemeResult,
+) -> crate::Result<()> {
+    let home = task.home_edge;
+    if dest.is_cloud() {
+        // Uplink transfer; transit faults apply at delivery time.
+        des.push_uplink((home - 1) as usize, task, t);
+    } else if dest.0 != home
+        && (des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(dest.0, t))
+    {
+        // Edge-to-edge hop lost (or the peer just died): no ack.
+        retry_or_degrade(h, policy, task, t, des, db, result)?;
+    } else {
+        let delay = if dest.0 != home { des.fx.plan.delay_of(task.id) } else { 0.0 };
+        des.enqueue_node(dest.0 as usize, task, t + delay);
+    }
+    Ok(())
+}
+
+/// A delivery failed: count the retry, back off exponentially, and
+/// re-dispatch — or give up gracefully once the attempt budget is spent
+/// or the cloud is known dead.
+fn retry_or_degrade(
+    h: &mut Harness,
+    policy: &dyn SchemePolicy,
+    mut task: SimTask,
+    t: f64,
+    des: &mut Des,
+    db: &ParamDb,
+    result: &mut SchemeResult,
+) -> crate::Result<()> {
+    des.fstats.retried += 1;
+    h.span(policy.name(), t, task.id, Stage::Retry, task.home_edge, 0.0, "");
+    let attempt = task.attempt;
+    task.attempt += 1;
+    // Cloud-only has no edge fallback: it keeps retrying (bounded
+    // backoff) until the cloud answers.
+    if policy.falls_back_to_edge() {
+        let cloud_dead = task.doubtful && !node_alive(db, 0, t);
+        if cloud_dead || task.attempt >= MAX_DISPATCH_ATTEMPTS {
+            if task.doubtful {
+                // §IV-D's latency/accuracy trade at its limit: an edge
+                // verdict now beats a cloud verdict never.
+                return degrade_finish(h, policy, task, t, des, result);
+            }
+            // Unclassified task: fall back to local processing.
+            let home = task.home_edge as usize;
+            des.enqueue_node(home, task, t);
+            return Ok(());
+        }
+    }
+    des.schedule(t + backoff(attempt), Event::Redispatch { task });
+    Ok(())
+}
+
+/// Edge-local verdict without the cloud re-check (graceful degradation
+/// when the cloud path is unavailable).
+fn degrade_finish(
+    h: &mut Harness,
+    policy: &dyn SchemePolicy,
+    task: SimTask,
+    t: f64,
+    des: &mut Des,
+    result: &mut SchemeResult,
+) -> crate::Result<()> {
+    des.fstats.degraded += 1;
+    h.span(policy.name(), t, task.id, Stage::Degrade, task.home_edge, 0.0, "");
+    let conf = confidence_of(h, &task)?;
+    finish(
+        h,
+        result,
+        policy.name(),
+        task.id,
+        conf >= pipeline::EDGE_SPLIT,
+        task.oracle_positive,
+        task.truth_positive,
+        t - task.t_capture,
+        t,
+        task.home_edge,
+        "degraded",
+    );
+    Ok(())
+}
+
+/// Record a final verdict: metrics, the per-frame trace, the
+/// end-of-pipeline span (`dur` = end-to-end latency) and the verdict
+/// counter by site (`edge` / `cloud` / `degraded`).
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    h: &Harness,
+    result: &mut SchemeResult,
+    name: &str,
+    task_id: u64,
+    positive: bool,
+    oracle: bool,
+    truth: Option<bool>,
+    latency: f64,
+    t: f64,
+    home_edge: u32,
+    site: &'static str,
+) {
+    result.vs_oracle.record(positive, oracle);
+    if let Some(tr) = truth {
+        result.vs_truth.record(positive, tr);
+    }
+    result.latency.record(latency);
+    result.per_frame.push((t, latency, home_edge));
+    h.span(name, t, task_id, Stage::Verdict, home_edge, latency, site);
+    if let Some(reg) = &h.obs {
+        reg.inc("surveiledge_harness_verdicts_total", &[("scheme", name), ("site", site)], 1);
+    }
+}
+
+/// Run one scheme over the configured scenario — the DES event loop.
+pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::Result<SchemeResult> {
+    let cfg = h.cfg.clone();
+    let name = policy.name();
+    let n_edges = cfg.edges.len() as u32;
+    let (frame_h, frame_w) = match &h.mode {
+        #[cfg(feature = "pjrt")]
+        ComputeMode::Pjrt(ctx) => (ctx.engine.manifest.frame_h, ctx.engine.manifest.frame_w),
+        ComputeMode::Synthetic { .. } => (cfg.frame_h, cfg.frame_w),
+    };
+
+    // Cameras, assigned to edges in blocks.
+    let mut cameras = standard_deployment(cfg.total_cameras() as usize, frame_h, frame_w, cfg.seed);
+    let mut cam_edge: Vec<u32> = Vec::new();
+    for (ei, e) in cfg.edges.iter().enumerate() {
+        for _ in 0..e.cameras {
+            cam_edge.push(ei as u32 + 1);
+        }
+    }
+
+    // Node 0 = cloud; 1..=n = edges.
+    let mut nodes: Vec<NodeSim> = Vec::new();
+    nodes.push(NodeSim {
+        queue: VecDeque::new(),
+        busy: false,
+        estimator: LatencyEstimator::new(h.times.cloud_infer),
+        speed: cfg.cloud_speed,
+        finish_ev: None,
+    });
+    for e in &cfg.edges {
+        nodes.push(NodeSim {
+            queue: VecDeque::new(),
+            busy: false,
+            estimator: LatencyEstimator::new(h.times.edge_infer / e.speed),
+            speed: e.speed,
+            finish_ev: None,
+        });
+    }
+    let uplinks: Vec<Uplink> = (0..n_edges)
+        .map(|_| Uplink { queue: VecDeque::new(), busy: false, queued_bytes: 0 })
+        .collect();
+    let mut controllers: Vec<ThresholdController> = (0..n_edges)
+        .map(|_| policy.controller(cfg.gamma1, cfg.gamma2, cfg.interval))
+        .collect();
+
+    // Detection state per camera: previous two sampled frames.
+    let mut prev_frames: Vec<Option<(Image, Image)>> = vec![None; cameras.len()];
+    let detect_cfg = DetectConfig::default();
+    let uplink_bps = cfg.uplink_mbps * 1_000_000.0 / 8.0;
+
+    let mut des = Des {
+        nodes,
+        uplinks,
+        heap: BinaryHeap::new(),
+        events: HashMap::new(),
+        seq: 0,
+        cloud_bytes: 0,
+        fstats: FaultStats::default(),
+        times: h.times,
+        uplink_bps,
+        fx: FaultCtx { plan: h.plan.clone(), outage: h.outage },
+    };
+    des.schedule(cfg.interval, Event::Sample);
+    // Heartbeats + scripted crash transitions only exist under a
+    // non-empty plan, so fault-free runs replay the exact event sequence
+    // they always had.
+    let faulty = !des.fx.plan.is_empty();
+    let db = ParamDb::new();
+    if let Some(reg) = &h.obs {
+        // Heartbeat puts flow through the paramdb counter wiring; the
+        // fault plan's shape lands as gauges so an export is
+        // self-describing.
+        db.attach_registry(reg.clone());
+        if faulty {
+            h.plan.export_into(reg, &[("scheme", name)]);
+        }
+    }
+    // Drain horizon: keep serving queued tasks after the last sample.
+    let drain_until = cfg.duration + 60.0;
+    if faulty {
+        des.schedule(0.0, Event::Heartbeat);
+        for c in des.fx.plan.crashes.clone() {
+            if c.until > c.from {
+                des.schedule(c.from, Event::FaultCrash { node: c.node });
+                des.schedule(c.until, Event::FaultRecover { node: c.node });
+                if policy.schedules_failover_sweep() {
+                    des.schedule(
+                        c.from + HB_STALE_AFTER,
+                        Event::Failover { node: c.node, crash_from: c.from },
+                    );
+                }
+            }
+        }
+    }
+
+    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
+    let mut next_task_id = 0u64;
+    let mut result = SchemeResult {
+        row: SchemeRow {
+            scheme: name.to_string(),
+            accuracy: 0.0,
+            avg_latency: 0.0,
+            bandwidth_mb: 0.0,
+        },
+        latency: LatencyRecorder::new(),
+        per_frame: Vec::new(),
+        vs_oracle: Confusion::default(),
+        vs_truth: Confusion::default(),
+        uploads: 0,
+        tasks: 0,
+        mean_band_width: 0.0,
+        faults: FaultStats::default(),
+    };
+    let mut band_width_acc = 0.0f64;
+    let mut band_width_n = 0u64;
+
+    while let Some(Reverse((HeapKey(t, id), _))) = des.heap.pop() {
+        if t > drain_until {
+            break;
+        }
+        // A missing slot is a cancelled event (a crash cancels the
+        // victim's in-flight completion).
+        let Some(ev) = des.events.remove(&id) else { continue };
+        match ev {
+            Event::Sample => {
+                if t + cfg.interval <= cfg.duration {
+                    des.schedule(t + cfg.interval, Event::Sample);
+                }
+                // Detect on every camera at this tick (the shared detect
+                // stage, pipeline::detect_crops).
+                for ci in 0..cameras.len() {
+                    let frame = cameras[ci].frame_at(t);
+                    let truth = cameras[ci].truth_at(t);
+                    let Some((f_prev2, f_prev)) = prev_frames[ci].take() else {
+                        prev_frames[ci] = Some((frame.image.clone(), frame.image));
+                        continue;
+                    };
+                    for det in
+                        pipeline::detect_crops(&f_prev2, &f_prev, &frame.image, &truth, &detect_cfg)
+                    {
+                        let (oracle_positive, synth_confidence) =
+                            h.mode.judge(cfg.query, &det.crop, det.truth_cls, &mut rng)?;
+                        let task = SimTask {
+                            id: next_task_id,
+                            t_capture: t - cfg.interval, // crop comes from the middle frame
+                            home_edge: cam_edge[ci],
+                            wire_bytes: (det.expanded.area() as u64) * 3 * HD_SCALE,
+                            truth_positive: det.truth_cls.map(|c| c == cfg.query),
+                            crop: match &h.mode {
+                                #[cfg(feature = "pjrt")]
+                                ComputeMode::Pjrt(_) => det.crop.data,
+                                ComputeMode::Synthetic { .. } => Vec::new(),
+                            },
+                            oracle_positive,
+                            synth_confidence,
+                            attempt: 0,
+                            doubtful: false,
+                            t_enqueue: t,
+                        };
+                        next_task_id += 1;
+                        result.tasks += 1;
+                        // Detection span: frame-diff ran on the middle
+                        // frame; the crop surfaces one interval later.
+                        h.span(name, t, task.id, Stage::Detect, task.home_edge, t - task.t_capture, "");
+                        // Route (eq. 7 or the scheme's fixed policy).
+                        let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                        dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
+                    }
+                    prev_frames[ci] = Some((f_prev, frame.image));
+                }
+            }
+            Event::NodeFinish { node } => {
+                let n = node as usize;
+                des.nodes[n].finish_ev = None;
+                let mut task = des.nodes[n].queue.pop_front().expect("finish without task");
+                des.nodes[n].busy = false;
+                let service =
+                    service_time(node, &des.nodes[n], &h.times) * des.fx.plan.slowdown(node, t);
+                des.nodes[n].estimator.observe(service);
+                // Queue wait = time between entering this node's FIFO and
+                // service start (clamped: the slowdown factor can differ
+                // between scheduling and completion).
+                let qwait = (t - service - task.t_enqueue).max(0.0);
+                h.span(name, t - service, task.id, Stage::Queue, node, qwait, "");
+                let infer_stage = if node == 0 { Stage::CloudInfer } else { Stage::EdgeInfer };
+                h.span(name, t, task.id, infer_stage, node, service, "");
+                if node == 0 {
+                    // Cloud verdict: the oracle's answer, by definition.
+                    let latency = (t - task.t_capture) + cfg.rtt / 2.0;
+                    finish(
+                        h,
+                        &mut result,
+                        name,
+                        task.id,
+                        task.oracle_positive,
+                        task.oracle_positive,
+                        task.truth_positive,
+                        latency,
+                        t,
+                        task.home_edge,
+                        "cloud",
+                    );
+                } else {
+                    // Edge classify -> the shared band-decision stage.
+                    let conf = confidence_of(h, &task)?;
+                    let e = (node - 1) as usize;
+                    // Controller signal (eq. 8's l_d·t_d): the expected
+                    // latency of the *re-classification path* a doubtful
+                    // image would take — uplink backlog + cloud queue —
+                    // plus the rtt. When uploads congest the uplink, the
+                    // band narrows; with headroom it widens. Band width
+                    // only changes the *upload* volume, so the eq. 8
+                    // signal tracks the doubtful path. (Edge queueing is
+                    // the allocator's job, eq. 7.)
+                    let ctx = DesCtx {
+                        signal: des.uplinks[e].queued_bytes as f64 / uplink_bps
+                            + (des.nodes[0].queue.len() + des.nodes[0].busy as usize) as f64
+                                * des.nodes[0].estimator.estimate()
+                            + cfg.rtt,
+                        // Graceful degradation only exists under a fault
+                        // plan (fault-free runs never schedule
+                        // heartbeats).
+                        cloud_alive: !faulty || node_alive(&db, 0, t),
+                    };
+                    let outcome = pipeline::classify_stage(&ctx, policy, &mut controllers[e], conf);
+                    band_width_acc += controllers[e].band_width();
+                    band_width_n += 1;
+                    h.span(name, t, task.id, Stage::ThresholdDecide, node, 0.0, outcome.band());
+                    match outcome.action {
+                        EdgeAction::Verdict { positive } => {
+                            finish(
+                                h,
+                                &mut result,
+                                name,
+                                task.id,
+                                positive,
+                                task.oracle_positive,
+                                task.truth_positive,
+                                t - task.t_capture,
+                                t,
+                                task.home_edge,
+                                "edge",
+                            );
+                        }
+                        EdgeAction::Degrade { .. } => {
+                            // The cloud's heartbeat is stale: answer with
+                            // the edge confidence rather than queue into a
+                            // dead path.
+                            degrade_finish(h, policy, task, t, &mut des, &mut result)?;
+                        }
+                        EdgeAction::Upload => {
+                            result.uploads += 1;
+                            task.doubtful = true;
+                            let e = (task.home_edge - 1) as usize;
+                            des.push_uplink(e, task, t);
+                        }
+                    }
+                }
+                // Start the next queued task, if any.
+                des.start_if_idle(n, t);
+            }
+            Event::NodeResume { node } => {
+                let n = node as usize;
+                des.nodes[n].busy = false;
+                des.start_if_idle(n, t);
+            }
+            Event::UplinkFinish { edge } => {
+                let e = edge as usize;
+                let task = des.uplinks[e].queue.pop_front().expect("uplink finish without task");
+                des.uplinks[e].queued_bytes =
+                    des.uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
+                des.uplinks[e].busy = false;
+                des.kick_uplink(e, t);
+                // Uplink span covers queue wait + the wire transfer.
+                h.span(name, t, task.id, Stage::Uplink, edge + 1, t - task.t_enqueue, "");
+                if des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t) {
+                    // Lost in transit, or the cloud is down: no ack
+                    // arrives before the timeout.
+                    retry_or_degrade(h, policy, task, t, &mut des, &db, &mut result)?;
+                } else {
+                    // Deliver to the cloud queue after half an RTT (+ any
+                    // injected one-way delay).
+                    let arrival = t + cfg.rtt / 2.0 + des.fx.plan.delay_of(task.id);
+                    des.enqueue_node(0, task, arrival);
+                }
+            }
+            Event::Heartbeat => {
+                for n in 0..des.nodes.len() as u32 {
+                    if !des.fx.plan.is_down(n, t) {
+                        db.put(&ParamDb::key_hb(n), Value::F64(t));
+                    }
+                }
+                if t + HB_INTERVAL <= drain_until {
+                    des.schedule(t + HB_INTERVAL, Event::Heartbeat);
+                }
+            }
+            Event::FaultCrash { node } => {
+                // The in-flight task (if any) is lost mid-service: cancel
+                // its completion. The task itself stays at the queue
+                // front for the failover sweep / restart.
+                let n = node as usize;
+                if let Some(ev_id) = des.nodes[n].finish_ev.take() {
+                    des.events.remove(&ev_id);
+                    des.nodes[n].busy = false;
+                }
+            }
+            Event::FaultRecover { node } => {
+                des.start_if_idle(node as usize, t);
+            }
+            Event::Failover { node, crash_from } => {
+                // Stale-heartbeat detection point: if the node is still
+                // down, re-queue its stranded tasks through the allocator
+                // (which now excludes it).
+                if des.fx.plan.is_down(node, t) {
+                    let stranded: Vec<SimTask> = des.nodes[node as usize].queue.drain(..).collect();
+                    if !stranded.is_empty() && des.fstats.time_to_reroute == 0.0 {
+                        des.fstats.time_to_reroute = t - crash_from;
+                    }
+                    for task in stranded {
+                        des.fstats.rerouted += 1;
+                        h.span(name, t, task.id, Stage::Reroute, node, 0.0, "");
+                        let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                        dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
+                    }
+                }
+            }
+            Event::Redispatch { task } => {
+                if task.doubtful {
+                    if !node_alive(&db, 0, t) {
+                        // Still no cloud: answer locally instead of
+                        // re-uploading into a dead path.
+                        degrade_finish(h, policy, task, t, &mut des, &mut result)?;
+                    } else {
+                        let e = (task.home_edge - 1) as usize;
+                        des.push_uplink(e, task, t);
+                    }
+                } else {
+                    let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                    dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
+                }
+            }
+        }
+    }
+
+    let f2 = result.vs_oracle.f2();
+    result.row.accuracy = f2;
+    result.row.avg_latency = result.latency.mean();
+    result.row.bandwidth_mb = des.cloud_bytes as f64 / (1024.0 * 1024.0);
+    result.mean_band_width =
+        if band_width_n > 0 { band_width_acc / band_width_n as f64 } else { 0.0 };
+    result.faults = des.fstats;
+    result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
+    if let Some(reg) = &h.obs {
+        let sl = [("scheme", name)];
+        reg.inc("surveiledge_harness_tasks_total", &sl, result.tasks);
+        reg.inc("surveiledge_harness_uploads_total", &sl, result.uploads);
+        reg.inc("surveiledge_harness_uplink_bytes_total", &sl, des.cloud_bytes);
+        reg.gauge_set("surveiledge_harness_accuracy_f2", &sl, result.row.accuracy);
+        reg.gauge_set("surveiledge_harness_avg_latency_seconds", &sl, result.row.avg_latency);
+        reg.gauge_set("surveiledge_harness_bandwidth_mb", &sl, result.row.bandwidth_mb);
+        reg.gauge_set("surveiledge_harness_mean_band_width", &sl, result.mean_band_width);
+        reg.inc("surveiledge_faults_retried_total", &sl, result.faults.retried);
+        reg.inc("surveiledge_faults_rerouted_total", &sl, result.faults.rerouted);
+        reg.inc("surveiledge_faults_degraded_total", &sl, result.faults.degraded);
+        reg.inc("surveiledge_faults_lost_total", &sl, result.faults.lost);
+        reg.gauge_set("surveiledge_faults_time_to_reroute_seconds", &sl, result.faults.time_to_reroute);
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+    use std::cmp::Ordering;
+
+    #[test]
+    fn heap_key_orders_by_time_then_seq() {
+        assert!(HeapKey(1.0, 9) < HeapKey(2.0, 0), "earlier time wins regardless of seq");
+        assert!(HeapKey(1.0, 0) < HeapKey(1.0, 1), "same time: scheduling order breaks the tie");
+        assert_eq!(HeapKey(1.5, 3).cmp(&HeapKey(1.5, 3)), Ordering::Equal);
+        assert_eq!(HeapKey(1.5, 3), HeapKey(1.5, 3));
+        assert_ne!(HeapKey(1.5, 3), HeapKey(1.5, 4), "Eq must agree with the seq tie-break");
+        assert_ne!(HeapKey(1.5, 3), HeapKey(2.5, 3));
+        // -0.0 == 0.0 in IEEE 754; the seq field still separates the keys.
+        assert_eq!(HeapKey(-0.0, 1).cmp(&HeapKey(0.0, 1)), Ordering::Equal);
+        assert!(HeapKey(-0.0, 0) < HeapKey(0.0, 1));
+    }
+
+    #[test]
+    fn prop_heap_key_is_a_total_order_over_finite_times() {
+        check("heap_key_total_order", |rng, _case| {
+            // Draw times from a small pool so same-time pairs (the
+            // tie-break path) actually occur.
+            let pool: Vec<f64> = (0..4).map(|_| rng.range_f64(0.0, 1e6)).collect();
+            let key = |rng: &mut crate::testkit::Rng| {
+                HeapKey(pool[rng.range_usize(0, pool.len())], rng.next_u64() % 8)
+            };
+            let (a, b, c) = (key(rng), key(rng), key(rng));
+            // Antisymmetry and Eq-consistency.
+            assert_eq!(a.cmp(&b), b.cmp(&a).reverse());
+            assert_eq!(a.cmp(&b) == Ordering::Equal, a == b);
+            assert_eq!(a.cmp(&a), Ordering::Equal);
+            // Transitivity.
+            if a.cmp(&b) != Ordering::Greater && b.cmp(&c) != Ordering::Greater {
+                assert_ne!(a.cmp(&c), Ordering::Greater, "transitivity violated");
+            }
+            // The tie-break is exactly the seq order.
+            if a.0 == b.0 {
+                assert_eq!(a.cmp(&b), a.1.cmp(&b.1));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_heap_pops_in_nondecreasing_time_order() {
+        check("heap_key_pop_order", |rng, _case| {
+            let mut des = Des {
+                nodes: Vec::new(),
+                uplinks: Vec::new(),
+                heap: BinaryHeap::new(),
+                events: HashMap::new(),
+                seq: 0,
+                cloud_bytes: 0,
+                fstats: FaultStats::default(),
+                times: ServiceTimes::default(),
+                uplink_bps: 1.0,
+                fx: FaultCtx { plan: FaultPlan::none(), outage: None },
+            };
+            for _ in 0..32 {
+                // Repeated times exercise the seq tie-break.
+                let t = (rng.range_f64(0.0, 8.0) * 4.0).floor() / 4.0;
+                des.schedule(t, Event::Heartbeat);
+            }
+            let mut last = f64::NEG_INFINITY;
+            let mut last_seq = 0u64;
+            while let Some(Reverse((HeapKey(t, id), _))) = des.heap.pop() {
+                assert!(t >= last, "heap popped {t} after {last}");
+                if t == last {
+                    assert!(id > last_seq, "same-time events must pop in scheduling order");
+                }
+                last = t;
+                last_seq = id;
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn scheduling_a_nan_time_is_rejected() {
+        let mut des = Des {
+            nodes: Vec::new(),
+            uplinks: Vec::new(),
+            heap: BinaryHeap::new(),
+            events: HashMap::new(),
+            seq: 0,
+            cloud_bytes: 0,
+            fstats: FaultStats::default(),
+            times: ServiceTimes::default(),
+            uplink_bps: 1.0,
+            fx: FaultCtx { plan: FaultPlan::none(), outage: None },
+        };
+        des.schedule(f64::NAN, Event::Heartbeat);
+    }
+}

@@ -6,7 +6,19 @@
 //! queueing dynamics — service times are calibrated to the paper's
 //! hardware (edge CPU MobileNet, cloud P4 ResNet-152, shared uplink) — so
 //! the experiments run the paper's multi-hour regime in seconds on this
-//! one-core host. Compute itself has two modes:
+//! one-core host.
+//!
+//! The module is three layers plus this facade:
+//!
+//! * [`engine`] — pure DES mechanics: the event heap, node/uplink queues,
+//!   fault and heartbeat scheduling, the drain horizon. Scheme-agnostic.
+//! * [`scheme`] — the [`SchemePolicy`] trait and the four built-in
+//!   policies; every per-scheme behavioral difference lives here.
+//! * [`pipeline`] — per-task stage logic (detect → classify → band
+//!   decision) shared *verbatim* with the live `nodes::EdgeWorker`
+//!   substrate, plus the [`ComputeMode`] compute backends.
+//!
+//! Compute itself has two modes:
 //!
 //! * `ComputeMode::Pjrt` (requires `--features pjrt`) — every
 //!   classification is a *real* PJRT call on the AOT artifacts (real CNN
@@ -21,24 +33,28 @@
 //! DESIGN.md §3), which is what makes cloud-only bandwidth-bound, as in
 //! the paper.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+pub mod engine;
+pub mod pipeline;
+pub mod scheme;
+
+#[cfg(test)]
+mod tests;
 
 use crate::config::{Config, Scheme};
-use crate::detect::{detect, DetectConfig};
-use crate::estimator::LatencyEstimator;
-use crate::faults::{backoff, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
+use crate::faults::FaultPlan;
 use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
-use crate::nodes::node_alive;
 use crate::obs::{Registry, Report, SpanEvent, Stage};
-use crate::paramdb::{ParamDb, Value};
+
+pub use pipeline::{
+    classify_stage, detect_crops, finetune_corpus, standard_mode, ComputeMode, DetectedCrop,
+    EdgeAction, EdgeOutcome, PipelineCtx, EDGE_SPLIT,
+};
 #[cfg(feature = "pjrt")]
-use crate::runtime::{Engine, ModelRunner, MomentumSgd};
-use crate::sched::{allocate, record_allocation, BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
-use crate::testkit::Rng;
-use crate::trace::synth_confidence;
-use crate::types::{ClassId, Image, NodeId};
-use crate::video::standard_deployment;
+pub use pipeline::PjrtCtx;
+pub use scheme::{
+    policy_for, CloudOnlyPolicy, EdgeOnlyPolicy, RouteCtx, SchemePolicy, SurveilEdgeFixedPolicy,
+    SurveilEdgePolicy,
+};
 
 /// Area factor mapping our synthetic frame resolution to the 1080p the
 /// paper transmits (linear scale ~15x => area ~225x).
@@ -57,218 +73,6 @@ impl Default for ServiceTimes {
     fn default() -> ServiceTimes {
         ServiceTimes { edge_infer: 0.28, cloud_infer: 0.12 }
     }
-}
-
-/// Compute source for classifications.
-pub enum ComputeMode {
-    /// Real PJRT inference through the AOT bundle (`--features pjrt`).
-    #[cfg(feature = "pjrt")]
-    Pjrt(Box<PjrtCtx>),
-    /// Calibrated synthetic confidences (no artifacts required).
-    Synthetic {
-        /// Edge CNN separability (higher = better CQ-CNN).
-        sharpness: f64,
-        /// Probability the edge CNN is *confidently wrong* (drawn as if
-        /// the object were the other class) — models the calibration gap
-        /// that gives the paper's edge-only its ~69% F2.
-        edge_flip: f64,
-        /// Probability the cloud oracle agrees with ground truth.
-        oracle_acc: f64,
-    },
-}
-
-impl ComputeMode {
-    /// The calibrated synthetic mode every CLI/bench defaults to (matches
-    /// the paper-era confidence calibration, DESIGN.md §3).
-    pub fn synthetic_default() -> ComputeMode {
-        ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
-    }
-}
-
-/// Standard mode selection shared by the binary, benches and examples:
-/// PJRT when requested (requires the `pjrt` feature and artifacts, with 30
-/// fine-tune steps), the calibrated synthetic mode otherwise.
-pub fn standard_mode(cfg: &Config, pjrt: bool) -> crate::Result<ComputeMode> {
-    let _ = cfg; // only consulted on the PJRT path
-    if pjrt {
-        #[cfg(feature = "pjrt")]
-        return Ok(ComputeMode::Pjrt(Box::new(PjrtCtx::prepare(cfg, 30)?)));
-        #[cfg(not(feature = "pjrt"))]
-        anyhow::bail!(
-            "--pjrt / BENCH_PJRT=1 needs a build with the runtime bridge: \
-             cargo build --release --features pjrt (and `make artifacts`)"
-        );
-    }
-    Ok(ComputeMode::synthetic_default())
-}
-
-/// PJRT context: engine + fine-tuned edge model + cloud model.
-#[cfg(feature = "pjrt")]
-pub struct PjrtCtx {
-    pub engine: Engine,
-    pub edge_model: ModelRunner,
-    pub cloud_model: ModelRunner,
-}
-
-#[cfg(feature = "pjrt")]
-impl PjrtCtx {
-    /// Build the context: load the bundle and run the online fine-tuning
-    /// stage (head-group momentum-SGD on a renderer-generated
-    /// context dataset) so the deployed edge model is the CQ-specific CNN.
-    pub fn prepare(cfg: &Config, finetune_steps: usize) -> crate::Result<PjrtCtx> {
-        let engine = Engine::new(std::path::Path::new(&cfg.artifacts))?;
-        let mut params = engine.edge_pretrained()?;
-        if finetune_steps > 0 {
-            let trainer = engine.trainer()?;
-            let n = params.len();
-            let mask = MomentumSgd::head_only_mask(n, engine.manifest.edge_head_group);
-            let mut opt = MomentumSgd::new(&engine.manifest.edge_params, 0.005, mask);
-            let (pixels, labels) = finetune_corpus(cfg.query, 256, cfg.seed ^ 0xF1);
-            let batch = trainer.batch;
-            let px = trainer.img * trainer.img * 3;
-            let mut rng = Rng::new(cfg.seed ^ 0x7A);
-            let mut bpix = vec![0.0f32; batch * px];
-            let mut blab = vec![0i32; batch];
-            for _ in 0..finetune_steps {
-                for j in 0..batch {
-                    let k = rng.range_usize(0, labels.len());
-                    bpix[j * px..(j + 1) * px].copy_from_slice(&pixels[k * px..(k + 1) * px]);
-                    blab[j] = labels[k];
-                }
-                let out = trainer.grad_step(&params, &bpix, &blab)?;
-                opt.step(&mut params, &out.grads);
-            }
-        }
-        let edge_model = engine.edge_model(1, &params)?;
-        let cloud_model = engine.cloud_model(1, &engine.cloud_trained()?)?;
-        Ok(PjrtCtx { engine, edge_model, cloud_model })
-    }
-}
-
-/// Renderer-generated binary fine-tune corpus (query vs rest), balanced.
-pub fn finetune_corpus(query: ClassId, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
-    use crate::video::sprite::{render_sprite, SpriteParams};
-    let mut rng = Rng::new(seed);
-    let mut pixels = Vec::with_capacity(n * 32 * 32 * 3);
-    let mut labels = Vec::with_capacity(n);
-    for i in 0..n {
-        let positive = i % 2 == 0;
-        let cls = if positive {
-            query
-        } else {
-            loop {
-                let c = ClassId::from_index(rng.range_usize(0, 8)).unwrap();
-                if c != query {
-                    break c;
-                }
-            }
-        };
-        let sprite = render_sprite(&SpriteParams {
-            cls,
-            size: rng.range_usize(14, 31),
-            base: [rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95)],
-            accent: [rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95), rng.range_f32(0.15, 0.95)],
-            bg: [0.42 + rng.range_f32(-0.08, 0.08), 0.45 + rng.range_f32(-0.08, 0.08), 0.42 + rng.range_f32(-0.08, 0.08)],
-            rot: rng.range_f32(-0.35, 0.35),
-            jx: rng.range_f32(-0.12, 0.12),
-            jy: rng.range_f32(-0.12, 0.12),
-            noise: rng.range_f32(0.02, 0.14),
-            seed: rng.next_u32(),
-        });
-        pixels.extend_from_slice(&sprite.resize(32, 32).data);
-        labels.push(positive as i32);
-    }
-    (pixels, labels)
-}
-
-/// One task flowing through the DES.
-#[derive(Clone)]
-struct SimTask {
-    id: u64,
-    t_capture: f64,
-    home_edge: u32,
-    /// When the task last entered a queue (node or uplink) — feeds the
-    /// queue/uplink stage spans.
-    t_enqueue: f64,
-    /// Crop pixels (PJRT mode) — empty in synthetic mode.
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
-    crop: Vec<f32>,
-    wire_bytes: u64,
-    truth_positive: Option<bool>,
-    /// Precomputed oracle answer (what the cloud CNN says).
-    oracle_positive: bool,
-    /// Precomputed edge confidence (synthetic mode) or None (PJRT).
-    synth_confidence: Option<f32>,
-    /// Delivery attempts so far (fault runs: drop / no-ack retries).
-    attempt: u32,
-    /// Set once an edge classified it doubtful — from then on its
-    /// destination is pinned to the cloud re-check path.
-    doubtful: bool,
-}
-
-/// DES events.
-enum Event {
-    /// Sample all cameras of all edges at this tick.
-    Sample,
-    /// A node finished its current classification.
-    NodeFinish { node: u32 },
-    /// An uplink finished its current transfer.
-    UplinkFinish { edge: u32 },
-    /// A failed edge comes back and resumes its queue.
-    NodeResume { node: u32 },
-    /// Heartbeat tick: every live node publishes `hb/<id>` (fault runs
-    /// only — fault-free runs never schedule this).
-    Heartbeat,
-    /// Scripted fault-plan transitions.
-    FaultCrash { node: u32 },
-    FaultRecover { node: u32 },
-    /// Stale-heartbeat detection point after a crash: sweep the dead
-    /// node's stranded queue back through the allocator.
-    Failover { node: u32, crash_from: f64 },
-    /// Ack-timeout backoff expired: re-dispatch a task whose delivery
-    /// failed.
-    Redispatch { task: SimTask },
-}
-
-struct HeapKey(f64, u64);
-
-impl PartialEq for HeapKey {
-    fn eq(&self, other: &Self) -> bool {
-        self.0 == other.0 && self.1 == other.1
-    }
-}
-impl Eq for HeapKey {}
-impl PartialOrd for HeapKey {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for HeapKey {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0
-            .partial_cmp(&other.0)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(self.1.cmp(&other.1))
-    }
-}
-
-/// Per-node (edge or cloud) queue state.
-struct NodeSim {
-    queue: VecDeque<SimTask>,
-    busy: bool,
-    estimator: LatencyEstimator,
-    speed: f64,
-    /// Pending NodeFinish event id — cancelled when the node crashes.
-    finish_ev: Option<u64>,
-}
-
-/// Per-edge uplink state.
-struct Uplink {
-    queue: VecDeque<SimTask>,
-    busy: bool,
-    /// Bytes waiting (including the in-flight transfer) — feeds the
-    /// controller's congestion signal and the allocator's cloud penalty.
-    queued_bytes: u64,
 }
 
 /// Result of one scheme run.
@@ -338,8 +142,7 @@ pub struct Harness {
     pub obs: Option<Registry>,
 }
 
-/// Builder for [`Harness`] — replaces the `Harness::new` +
-/// `with_outage`/`with_plan` ad-hoc chaining:
+/// Builder for [`Harness`]:
 ///
 /// ```ignore
 /// let mut h = Harness::builder(cfg)
@@ -409,32 +212,15 @@ impl Harness {
         }
     }
 
-    #[deprecated(since = "0.7.0", note = "use Harness::builder(cfg).mode(mode).build()")]
-    pub fn new(cfg: Config, mode: ComputeMode) -> Harness {
-        Harness::builder(cfg).mode(mode).build()
-    }
-
-    #[deprecated(since = "0.7.0", note = "use Harness::builder(..).outage(..)")]
-    pub fn with_outage(mut self, outage: EdgeOutage) -> Harness {
-        self.outage = Some(outage);
-        self
-    }
-
-    /// Override the fault schedule (defaults to the config's `[faults]`).
-    #[deprecated(since = "0.7.0", note = "use Harness::builder(..).plan(..)")]
-    pub fn with_plan(mut self, plan: FaultPlan) -> Harness {
-        self.plan = plan;
-        self
-    }
-
     /// Record one stage span (no-op without an attached registry): the
     /// per-scheme/per-stage latency histogram plus the timeline event.
-    fn span(&self, scheme: Scheme, t: f64, task: u64, stage: Stage, node: u32, dur: f64, detail: &str) {
+    /// `scheme` is the policy's name (a custom policy labels its own runs).
+    fn span(&self, scheme: &str, t: f64, task: u64, stage: Stage, node: u32, dur: f64, detail: &str) {
         if let Some(reg) = &self.obs {
             let dur = if dur.is_finite() { dur.max(0.0) } else { 0.0 };
             reg.observe(
                 "surveiledge_stage_seconds",
-                &[("scheme", scheme.name()), ("stage", stage.as_str())],
+                &[("scheme", scheme), ("stage", stage.as_str())],
                 dur,
             );
             reg.span(SpanEvent {
@@ -443,756 +229,21 @@ impl Harness {
                 stage,
                 node,
                 dur,
-                scheme: scheme.name().to_string(),
+                scheme: scheme.to_string(),
                 detail: detail.to_string(),
             });
         }
     }
 
-    /// Run one scheme over the configured scenario.
+    /// Run one built-in scheme over the configured scenario.
     pub fn run(&mut self, scheme: Scheme) -> crate::Result<SchemeResult> {
-        let cfg = self.cfg.clone();
-        let n_edges = cfg.edges.len() as u32;
-        let (frame_h, frame_w) = match &self.mode {
-            #[cfg(feature = "pjrt")]
-            ComputeMode::Pjrt(ctx) => (ctx.engine.manifest.frame_h, ctx.engine.manifest.frame_w),
-            ComputeMode::Synthetic { .. } => (cfg.frame_h, cfg.frame_w),
-        };
-
-        // Cameras, assigned to edges in blocks.
-        let mut cameras = standard_deployment(cfg.total_cameras() as usize, frame_h, frame_w, cfg.seed);
-        let mut cam_edge: Vec<u32> = Vec::new();
-        for (ei, e) in cfg.edges.iter().enumerate() {
-            for _ in 0..e.cameras {
-                cam_edge.push(ei as u32 + 1);
-            }
-        }
-
-        // Node 0 = cloud; 1..=n = edges.
-        let mut nodes: Vec<NodeSim> = Vec::new();
-        nodes.push(NodeSim {
-            queue: VecDeque::new(),
-            busy: false,
-            estimator: LatencyEstimator::new(self.times.cloud_infer),
-            speed: cfg.cloud_speed,
-            finish_ev: None,
-        });
-        for e in &cfg.edges {
-            nodes.push(NodeSim {
-                queue: VecDeque::new(),
-                busy: false,
-                estimator: LatencyEstimator::new(self.times.edge_infer / e.speed),
-                speed: e.speed,
-                finish_ev: None,
-            });
-        }
-        let uplinks: Vec<Uplink> = (0..n_edges)
-            .map(|_| Uplink { queue: VecDeque::new(), busy: false, queued_bytes: 0 })
-            .collect();
-        let mut controllers: Vec<ThresholdController> = (0..n_edges)
-            .map(|_| match scheme {
-                Scheme::SurveilEdgeFixed => ThresholdController::fixed(),
-                _ => ThresholdController::new(
-                    0.8,
-                    ThresholdConfig { gamma1: cfg.gamma1, gamma2: cfg.gamma2, interval: cfg.interval },
-                ),
-            })
-            .collect();
-
-        // Detection state per camera: previous two sampled frames.
-        let mut prev_frames: Vec<Option<(Image, Image)>> = vec![None; cameras.len()];
-        let detect_cfg = DetectConfig::default();
-        let uplink_bps = cfg.uplink_mbps * 1_000_000.0 / 8.0;
-
-        let mut des = Des {
-            nodes,
-            uplinks,
-            heap: BinaryHeap::new(),
-            events: std::collections::HashMap::new(),
-            seq: 0,
-            cloud_bytes: 0,
-            fstats: FaultStats::default(),
-            times: self.times,
-            uplink_bps,
-            fx: FaultCtx { plan: self.plan.clone(), outage: self.outage },
-        };
-        des.schedule(cfg.interval, Event::Sample);
-        // Heartbeats + scripted crash transitions only exist under a
-        // non-empty plan, so fault-free runs replay the exact event
-        // sequence they always had.
-        let faulty = !des.fx.plan.is_empty();
-        let db = ParamDb::new();
-        if let Some(reg) = &self.obs {
-            // Heartbeat puts flow through the paramdb counter wiring;
-            // the fault plan's shape lands as gauges so an export is
-            // self-describing.
-            db.attach_registry(reg.clone());
-            if faulty {
-                self.plan.export_into(reg, &[("scheme", scheme.name())]);
-            }
-        }
-        // Drain horizon: keep serving queued tasks after the last sample.
-        let drain_until = cfg.duration + 60.0;
-        if faulty {
-            des.schedule(0.0, Event::Heartbeat);
-            for c in des.fx.plan.crashes.clone() {
-                if c.until > c.from {
-                    des.schedule(c.from, Event::FaultCrash { node: c.node });
-                    des.schedule(c.until, Event::FaultRecover { node: c.node });
-                    if scheme == Scheme::SurveilEdge {
-                        des.schedule(
-                            c.from + HB_STALE_AFTER,
-                            Event::Failover { node: c.node, crash_from: c.from },
-                        );
-                    }
-                }
-            }
-        }
-
-        let mut rng = Rng::new(cfg.seed ^ 0x5EED);
-        let mut next_task_id = 0u64;
-        let mut result = SchemeResult {
-            row: SchemeRow {
-                scheme: scheme.name().to_string(),
-                accuracy: 0.0,
-                avg_latency: 0.0,
-                bandwidth_mb: 0.0,
-            },
-            latency: LatencyRecorder::new(),
-            per_frame: Vec::new(),
-            vs_oracle: Confusion::default(),
-            vs_truth: Confusion::default(),
-            uploads: 0,
-            tasks: 0,
-            mean_band_width: 0.0,
-            faults: FaultStats::default(),
-        };
-        let mut band_width_acc = 0.0f64;
-        let mut band_width_n = 0u64;
-
-        while let Some(Reverse((HeapKey(t, id), _))) = des.heap.pop() {
-            if t > drain_until {
-                break;
-            }
-            // A missing slot is a cancelled event (a crash cancels the
-            // victim's in-flight completion).
-            let Some(ev) = des.events.remove(&id) else { continue };
-            match ev {
-                Event::Sample => {
-                    if t + cfg.interval <= cfg.duration {
-                        des.schedule(t + cfg.interval, Event::Sample);
-                    }
-                    // Detect on every camera at this tick.
-                    for ci in 0..cameras.len() {
-                        let frame = cameras[ci].frame_at(t);
-                        let truth = cameras[ci].truth_at(t);
-                        let Some((f_prev2, f_prev)) = prev_frames[ci].take() else {
-                            prev_frames[ci] = Some((frame.image.clone(), frame.image));
-                            continue;
-                        };
-                        let dets = detect(&f_prev2, &f_prev, &frame.image, &detect_cfg);
-                        for det in dets {
-                            let bb = det.bbox.expand(detect_cfg.margin, frame_h, frame_w);
-                            let crop = f_prev
-                                .crop(bb.y0, bb.x0, bb.y1, bb.x1)
-                                .resize(detect_cfg.crop_size, detect_cfg.crop_size);
-                            // Ground truth by best-IoU match.
-                            let truth_cls = truth
-                                .iter()
-                                .map(|(c, tb)| (*c, det.bbox.iou(tb)))
-                                .filter(|(_, iou)| *iou > 0.2)
-                                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                                .map(|(c, _)| c);
-                            let (oracle_positive, synth_confidence) =
-                                self.judge(&crop, truth_cls, &mut rng)?;
-                            let task = SimTask {
-                                id: next_task_id,
-                                t_capture: t - cfg.interval, // crop comes from the middle frame
-                                home_edge: cam_edge[ci],
-                                crop: match &self.mode {
-                                    #[cfg(feature = "pjrt")]
-                                    ComputeMode::Pjrt(_) => crop.data,
-                                    ComputeMode::Synthetic { .. } => Vec::new(),
-                                },
-                                wire_bytes: (bb.area() as u64) * 3 * HD_SCALE,
-                                truth_positive: truth_cls.map(|c| c == cfg.query),
-                                oracle_positive,
-                                synth_confidence,
-                                attempt: 0,
-                                doubtful: false,
-                                t_enqueue: t,
-                            };
-                            next_task_id += 1;
-                            result.tasks += 1;
-                            // Detection span: frame-diff ran on the middle
-                            // frame; the crop surfaces one interval later.
-                            self.span(scheme, t, task.id, Stage::Detect, task.home_edge, t - task.t_capture, "");
-                            // Route (eq. 7 or the scheme's fixed policy).
-                            let dest =
-                                self.route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
-                            self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
-                        }
-                        prev_frames[ci] = Some((f_prev, frame.image));
-                    }
-                }
-                Event::NodeFinish { node } => {
-                    let n = node as usize;
-                    des.nodes[n].finish_ev = None;
-                    let mut task = des.nodes[n].queue.pop_front().expect("finish without task");
-                    des.nodes[n].busy = false;
-                    let service =
-                        service_time(node, &des.nodes[n], &self.times) * des.fx.plan.slowdown(node, t);
-                    des.nodes[n].estimator.observe(service);
-                    // Queue wait = time between entering this node's FIFO
-                    // and service start (clamped: the slowdown factor can
-                    // differ between scheduling and completion).
-                    let qwait = (t - service - task.t_enqueue).max(0.0);
-                    self.span(scheme, t - service, task.id, Stage::Queue, node, qwait, "");
-                    let infer_stage = if node == 0 { Stage::CloudInfer } else { Stage::EdgeInfer };
-                    self.span(scheme, t, task.id, infer_stage, node, service, "");
-                    if node == 0 {
-                        // Cloud verdict: the oracle's answer, by definition.
-                        let latency = (t - task.t_capture) + cfg.rtt / 2.0;
-                        self.finish(
-                            &mut result,
-                            scheme,
-                            task.id,
-                            task.oracle_positive,
-                            task.oracle_positive,
-                            task.truth_positive,
-                            latency,
-                            t,
-                            task.home_edge,
-                            "cloud",
-                        );
-                    } else {
-                        // Edge classify -> band decision.
-                        let conf = self.edge_confidence(&task)?;
-                        let e = (node - 1) as usize;
-                        {
-                            // Controller signal (eq. 8's l_d·t_d): the
-                            // expected latency of the *re-classification
-                            // path* a doubtful image would take — uplink
-                            // backlog + cloud queue — plus the local edge
-                            // wait. When uploads congest the uplink, the
-                            // band narrows; with headroom it widens.
-                            // Band width only changes the *upload* volume,
-                            // so the eq. 8 signal tracks the doubtful path:
-                            // uplink backlog + cloud queue + rtt. (Edge
-                            // queueing is the allocator's job, eq. 7.)
-                            let signal = des.uplinks[e].queued_bytes as f64 / uplink_bps
-                                + (des.nodes[0].queue.len() + des.nodes[0].busy as usize) as f64
-                                    * des.nodes[0].estimator.estimate()
-                                + cfg.rtt;
-                            // update() multiplies queue*t; feed the signal
-                            // as (1, signal) to keep the eq. 8 form.
-                            controllers[e].update(1, signal);
-                            band_width_acc += controllers[e].band_width();
-                            band_width_n += 1;
-                        }
-                        let decision = match scheme {
-                            Scheme::EdgeOnly => {
-                                if conf >= 0.5 {
-                                    BandDecision::Positive
-                                } else {
-                                    BandDecision::Negative
-                                }
-                            }
-                            _ => controllers[e].decide(conf),
-                        };
-                        let band = match decision {
-                            BandDecision::Positive => "positive",
-                            BandDecision::Negative => "negative",
-                            BandDecision::Doubtful => "doubtful",
-                        };
-                        self.span(scheme, t, task.id, Stage::ThresholdDecide, node, 0.0, band);
-                        match decision {
-                            BandDecision::Positive | BandDecision::Negative => {
-                                self.finish(
-                                    &mut result,
-                                    scheme,
-                                    task.id,
-                                    decision == BandDecision::Positive,
-                                    task.oracle_positive,
-                                    task.truth_positive,
-                                    t - task.t_capture,
-                                    t,
-                                    task.home_edge,
-                                    "edge",
-                                );
-                            }
-                            BandDecision::Doubtful => {
-                                if faulty && !node_alive(&db, 0, t) {
-                                    // Graceful degradation: the cloud's
-                                    // heartbeat is stale, so answer with
-                                    // the edge confidence rather than
-                                    // queue into a dead path.
-                                    self.degrade_finish(scheme, task, t, &mut des, &mut result)?;
-                                } else {
-                                    result.uploads += 1;
-                                    task.doubtful = true;
-                                    let e = (task.home_edge - 1) as usize;
-                                    des.push_uplink(e, task, t);
-                                }
-                            }
-                        }
-                    }
-                    // Start the next queued task, if any.
-                    des.start_if_idle(n, t);
-                }
-                Event::NodeResume { node } => {
-                    let n = node as usize;
-                    des.nodes[n].busy = false;
-                    des.start_if_idle(n, t);
-                }
-                Event::UplinkFinish { edge } => {
-                    let e = edge as usize;
-                    let task =
-                        des.uplinks[e].queue.pop_front().expect("uplink finish without task");
-                    des.uplinks[e].queued_bytes =
-                        des.uplinks[e].queued_bytes.saturating_sub(task.wire_bytes);
-                    des.uplinks[e].busy = false;
-                    des.kick_uplink(e, t);
-                    // Uplink span covers queue wait + the wire transfer.
-                    self.span(scheme, t, task.id, Stage::Uplink, edge + 1, t - task.t_enqueue, "");
-                    if des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t) {
-                        // Lost in transit, or the cloud is down: no ack
-                        // arrives before the timeout.
-                        self.retry_or_degrade(scheme, task, t, &mut des, &db, &mut result)?;
-                    } else {
-                        // Deliver to the cloud queue after half an RTT
-                        // (+ any injected one-way delay).
-                        let arrival = t + cfg.rtt / 2.0 + des.fx.plan.delay_of(task.id);
-                        des.enqueue_node(0, task, arrival);
-                    }
-                }
-                Event::Heartbeat => {
-                    for n in 0..des.nodes.len() as u32 {
-                        if !des.fx.plan.is_down(n, t) {
-                            db.put(&ParamDb::key_hb(n), Value::F64(t));
-                        }
-                    }
-                    if t + HB_INTERVAL <= drain_until {
-                        des.schedule(t + HB_INTERVAL, Event::Heartbeat);
-                    }
-                }
-                Event::FaultCrash { node } => {
-                    // The in-flight task (if any) is lost mid-service:
-                    // cancel its completion. The task itself stays at the
-                    // queue front for the failover sweep / restart.
-                    let n = node as usize;
-                    if let Some(ev_id) = des.nodes[n].finish_ev.take() {
-                        des.events.remove(&ev_id);
-                        des.nodes[n].busy = false;
-                    }
-                }
-                Event::FaultRecover { node } => {
-                    des.start_if_idle(node as usize, t);
-                }
-                Event::Failover { node, crash_from } => {
-                    // Stale-heartbeat detection point: if the node is
-                    // still down, re-queue its stranded tasks through the
-                    // allocator (which now excludes it).
-                    if des.fx.plan.is_down(node, t) {
-                        let stranded: Vec<SimTask> =
-                            des.nodes[node as usize].queue.drain(..).collect();
-                        if !stranded.is_empty() && des.fstats.time_to_reroute == 0.0 {
-                            des.fstats.time_to_reroute = t - crash_from;
-                        }
-                        for task in stranded {
-                            des.fstats.rerouted += 1;
-                            self.span(scheme, t, task.id, Stage::Reroute, node, 0.0, "");
-                            let dest = self
-                                .route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
-                            self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
-                        }
-                    }
-                }
-                Event::Redispatch { task } => {
-                    if task.doubtful {
-                        if !node_alive(&db, 0, t) {
-                            // Still no cloud: answer locally instead of
-                            // re-uploading into a dead path.
-                            self.degrade_finish(scheme, task, t, &mut des, &mut result)?;
-                        } else {
-                            let e = (task.home_edge - 1) as usize;
-                            des.push_uplink(e, task, t);
-                        }
-                    } else {
-                        let dest =
-                            self.route(scheme, task.home_edge, &des.nodes, &des.uplinks, &cfg, t, &db);
-                        self.dispatch(scheme, task, dest, t, &mut des, &db, &mut result)?;
-                    }
-                }
-            }
-        }
-
-        let f2 = result.vs_oracle.f2();
-        result.row.accuracy = f2;
-        result.row.avg_latency = result.latency.mean();
-        result.row.bandwidth_mb = des.cloud_bytes as f64 / (1024.0 * 1024.0);
-        result.mean_band_width = if band_width_n > 0 {
-            band_width_acc / band_width_n as f64
-        } else {
-            0.0
-        };
-        result.faults = des.fstats;
-        result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
-        if let Some(reg) = &self.obs {
-            let sl = [("scheme", scheme.name())];
-            reg.inc("surveiledge_harness_tasks_total", &sl, result.tasks);
-            reg.inc("surveiledge_harness_uploads_total", &sl, result.uploads);
-            reg.inc("surveiledge_harness_uplink_bytes_total", &sl, des.cloud_bytes);
-            reg.gauge_set("surveiledge_harness_accuracy_f2", &sl, result.row.accuracy);
-            reg.gauge_set("surveiledge_harness_avg_latency_seconds", &sl, result.row.avg_latency);
-            reg.gauge_set("surveiledge_harness_bandwidth_mb", &sl, result.row.bandwidth_mb);
-            reg.gauge_set("surveiledge_harness_mean_band_width", &sl, result.mean_band_width);
-            reg.inc("surveiledge_faults_retried_total", &sl, result.faults.retried);
-            reg.inc("surveiledge_faults_rerouted_total", &sl, result.faults.rerouted);
-            reg.inc("surveiledge_faults_degraded_total", &sl, result.faults.degraded);
-            reg.inc("surveiledge_faults_lost_total", &sl, result.faults.lost);
-            reg.gauge_set(
-                "surveiledge_faults_time_to_reroute_seconds",
-                &sl,
-                result.faults.time_to_reroute,
-            );
-        }
-        Ok(result)
+        self.run_policy(policy_for(scheme))
     }
 
-    /// Send `task` toward `dest` (as chosen by [`Harness::route`]). Under
-    /// a fault plan a remote hop can fail — a dropped message or a dead
-    /// destination goes to the retry path instead of a queue.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch(
-        &mut self,
-        scheme: Scheme,
-        task: SimTask,
-        dest: NodeId,
-        t: f64,
-        des: &mut Des,
-        db: &ParamDb,
-        result: &mut SchemeResult,
-    ) -> crate::Result<()> {
-        let home = task.home_edge;
-        if dest.is_cloud() {
-            // Uplink transfer; transit faults apply at delivery time.
-            des.push_uplink((home - 1) as usize, task, t);
-        } else if dest.0 != home
-            && (des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(dest.0, t))
-        {
-            // Edge-to-edge hop lost (or the peer just died): no ack.
-            self.retry_or_degrade(scheme, task, t, des, db, result)?;
-        } else {
-            let delay = if dest.0 != home { des.fx.plan.delay_of(task.id) } else { 0.0 };
-            des.enqueue_node(dest.0 as usize, task, t + delay);
-        }
-        Ok(())
-    }
-
-    /// A delivery failed: count the retry, back off exponentially, and
-    /// re-dispatch — or give up gracefully once the attempt budget is
-    /// spent or the cloud is known dead.
-    fn retry_or_degrade(
-        &mut self,
-        scheme: Scheme,
-        mut task: SimTask,
-        t: f64,
-        des: &mut Des,
-        db: &ParamDb,
-        result: &mut SchemeResult,
-    ) -> crate::Result<()> {
-        des.fstats.retried += 1;
-        self.span(scheme, t, task.id, Stage::Retry, task.home_edge, 0.0, "");
-        let attempt = task.attempt;
-        task.attempt += 1;
-        // Cloud-only has no edge fallback: it keeps retrying (bounded
-        // backoff) until the cloud answers.
-        if scheme != Scheme::CloudOnly {
-            let cloud_dead = task.doubtful && !node_alive(db, 0, t);
-            if cloud_dead || task.attempt >= MAX_DISPATCH_ATTEMPTS {
-                if task.doubtful {
-                    // §IV-D's latency/accuracy trade at its limit: an
-                    // edge verdict now beats a cloud verdict never.
-                    return self.degrade_finish(scheme, task, t, des, result);
-                }
-                // Unclassified task: fall back to local processing.
-                let home = task.home_edge as usize;
-                des.enqueue_node(home, task, t);
-                return Ok(());
-            }
-        }
-        des.schedule(t + backoff(attempt), Event::Redispatch { task });
-        Ok(())
-    }
-
-    /// Edge-local verdict without the cloud re-check (graceful
-    /// degradation when the cloud path is unavailable).
-    fn degrade_finish(
-        &mut self,
-        scheme: Scheme,
-        task: SimTask,
-        t: f64,
-        des: &mut Des,
-        result: &mut SchemeResult,
-    ) -> crate::Result<()> {
-        des.fstats.degraded += 1;
-        self.span(scheme, t, task.id, Stage::Degrade, task.home_edge, 0.0, "");
-        let conf = self.edge_confidence(&task)?;
-        self.finish(
-            result,
-            scheme,
-            task.id,
-            conf >= 0.5,
-            task.oracle_positive,
-            task.truth_positive,
-            t - task.t_capture,
-            t,
-            task.home_edge,
-            "degraded",
-        );
-        Ok(())
-    }
-
-    /// Routing policy per scheme.
-    #[allow(clippy::too_many_arguments)]
-    fn route(
-        &self,
-        scheme: Scheme,
-        home: u32,
-        nodes: &[NodeSim],
-        uplinks: &[Uplink],
-        cfg: &Config,
-        t: f64,
-        db: &ParamDb,
-    ) -> NodeId {
-        match scheme {
-            Scheme::CloudOnly => NodeId::CLOUD,
-            Scheme::EdgeOnly | Scheme::SurveilEdgeFixed => NodeId(home),
-            Scheme::SurveilEdge => {
-                // eq. 7 over {home edge first, other edges, cloud}; edges
-                // under an injected outage or with a stale heartbeat are
-                // not candidates (failover). Without heartbeats (fault-free
-                // runs) `node_alive` is vacuously true.
-                let dead = |e: u32| {
-                    self.outage.map_or(false, |o| o.covers(t, e)) || !node_alive(db, e, t)
-                };
-                let mut cands: Vec<NodeLoad> = Vec::with_capacity(nodes.len());
-                if !dead(home) {
-                    cands.push(node_load(home, &nodes[home as usize], 0.0));
-                }
-                for i in 1..nodes.len() as u32 {
-                    if i != home && !dead(i) {
-                        cands.push(node_load(i, &nodes[i as usize], 0.0));
-                    }
-                }
-                // Cloud penalty: rtt + typical crop transfer + current
-                // uplink backlog on this edge's link.
-                let backlog = uplinks[(home - 1) as usize].queued_bytes as f64;
-                let upload = cfg.rtt
-                    + (backlog + 24.0 * 24.0 * 3.0 * HD_SCALE as f64)
-                        / (cfg.uplink_mbps * 125_000.0);
-                if node_alive(db, 0, t) {
-                    cands.push(node_load(0, &nodes[0], upload));
-                }
-                let dest = allocate(&cands).unwrap_or(NodeId(home));
-                if let Some(reg) = &self.obs {
-                    record_allocation(reg, scheme.name(), dest, &cands);
-                }
-                dest
-            }
-        }
-    }
-
-    /// Oracle answer + synthetic confidence for a new task.
-    fn judge(
-        &mut self,
-        crop: &Image,
-        truth: Option<ClassId>,
-        rng: &mut Rng,
-    ) -> crate::Result<(bool, Option<f32>)> {
-        let query = self.cfg.query;
-        let _ = crop; // only the PJRT arm consumes pixels
-        match &mut self.mode {
-            #[cfg(feature = "pjrt")]
-            ComputeMode::Pjrt(ctx) => {
-                let probs = ctx.cloud_model.infer(&crop.data)?;
-                let best = probs[0]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(usize::MAX);
-                Ok((best == query.index(), None))
-            }
-            ComputeMode::Synthetic { sharpness, edge_flip, oracle_acc } => {
-                let truth_pos = truth.map(|c| c == query).unwrap_or(false);
-                let oracle = if rng.bool(*oracle_acc) { truth_pos } else { !truth_pos };
-                // Hard examples ("flips") are seen as the wrong class but
-                // with diluted confidence — most land in the doubtful band
-                // (where the cloud can rescue them), some are confidently
-                // wrong (the edge-only accuracy ceiling), matching the
-                // calibration profile of the paper's CQ-CNN.
-                let (seen_as, sharp) = if rng.bool(*edge_flip) {
-                    (!truth_pos, (*sharpness / 3.0).max(1.0))
-                } else {
-                    (truth_pos, *sharpness)
-                };
-                let conf = synth_confidence(rng, seen_as, sharp);
-                Ok((oracle, Some(conf)))
-            }
-        }
-    }
-
-    /// Edge CNN confidence for a task at classify time.
-    fn edge_confidence(&mut self, task: &SimTask) -> crate::Result<f32> {
-        match &mut self.mode {
-            #[cfg(feature = "pjrt")]
-            ComputeMode::Pjrt(ctx) => {
-                let probs = ctx.edge_model.infer(&task.crop)?;
-                Ok(probs[0].get(1).copied().unwrap_or(0.0))
-            }
-            ComputeMode::Synthetic { .. } => Ok(task.synth_confidence.unwrap_or(0.0)),
-        }
-    }
-
-    /// Record a final verdict: metrics, the per-frame trace, the
-    /// end-of-pipeline span (`dur` = end-to-end latency) and the verdict
-    /// counter by site (`edge` / `cloud` / `degraded`).
-    #[allow(clippy::too_many_arguments)]
-    fn finish(
-        &mut self,
-        result: &mut SchemeResult,
-        scheme: Scheme,
-        task_id: u64,
-        positive: bool,
-        oracle: bool,
-        truth: Option<bool>,
-        latency: f64,
-        t: f64,
-        home_edge: u32,
-        site: &'static str,
-    ) {
-        result.vs_oracle.record(positive, oracle);
-        if let Some(tr) = truth {
-            result.vs_truth.record(positive, tr);
-        }
-        result.latency.record(latency);
-        result.per_frame.push((t, latency, home_edge));
-        self.span(scheme, t, task_id, Stage::Verdict, home_edge, latency, site);
-        if let Some(reg) = &self.obs {
-            reg.inc(
-                "surveiledge_harness_verdicts_total",
-                &[("scheme", scheme.name()), ("site", site)],
-                1,
-            );
-        }
-    }
-}
-
-fn node_load(id: u32, sim: &NodeSim, penalty: f64) -> NodeLoad {
-    NodeLoad {
-        node: NodeId(id),
-        queue: sim.queue.len() + sim.busy as usize,
-        t_infer: sim.estimator.estimate(),
-        penalty,
-    }
-}
-
-fn service_time(node: u32, sim: &NodeSim, times: &ServiceTimes) -> f64 {
-    if node == 0 {
-        times.cloud_infer / sim.speed
-    } else {
-        times.edge_infer / sim.speed
-    }
-}
-
-type EventHeap = BinaryHeap<Reverse<(HeapKey, u8)>>;
-type EventMap = std::collections::HashMap<u64, Event>;
-
-/// Immutable fault context for one scheme run.
-struct FaultCtx {
-    plan: FaultPlan,
-    outage: Option<EdgeOutage>,
-}
-
-/// Mutable discrete-event state for one scheme run, bundled so the
-/// dispatch / retry / failover paths share one signature.
-struct Des {
-    nodes: Vec<NodeSim>,
-    uplinks: Vec<Uplink>,
-    heap: EventHeap,
-    events: EventMap,
-    seq: u64,
-    /// Bytes shipped over any uplink (bandwidth accounting).
-    cloud_bytes: u64,
-    fstats: FaultStats,
-    times: ServiceTimes,
-    uplink_bps: f64,
-    fx: FaultCtx,
-}
-
-impl Des {
-    /// Schedule `ev` at time `t`; the returned id cancels it via
-    /// `events.remove` (the heap entry then no-ops).
-    fn schedule(&mut self, t: f64, ev: Event) -> u64 {
-        let id = self.seq;
-        self.events.insert(id, ev);
-        self.heap.push(Reverse((HeapKey(t, id), 0)));
-        self.seq += 1;
-        id
-    }
-
-    fn enqueue_node(&mut self, n: usize, mut task: SimTask, t: f64) {
-        task.t_enqueue = t;
-        self.nodes[n].queue.push_back(task);
-        self.start_if_idle(n, t);
-    }
-
-    fn start_if_idle(&mut self, n: usize, t: f64) {
-        if self.nodes[n].busy || self.nodes[n].queue.is_empty() {
-            return;
-        }
-        // Legacy outage: a dead edge holds its queue until recovery
-        // (cloud never fails on this path).
-        if let Some(o) = self.fx.outage {
-            if n > 0 && o.covers(t, n as u32) {
-                self.nodes[n].busy = true; // freeze; resume event at recovery
-                self.schedule(o.until, Event::NodeResume { node: n as u32 });
-                return;
-            }
-        }
-        // Fault-plan crash: the queue is frozen but the node is not
-        // marked busy — FaultRecover (or the failover sweep) picks the
-        // tasks back up.
-        if self.fx.plan.is_down(n as u32, t) {
-            return;
-        }
-        self.nodes[n].busy = true;
-        let service =
-            service_time(n as u32, &self.nodes[n], &self.times) * self.fx.plan.slowdown(n as u32, t);
-        let id = self.schedule(t + service, Event::NodeFinish { node: n as u32 });
-        self.nodes[n].finish_ev = Some(id);
-    }
-
-    /// Queue a task on an edge's uplink toward the cloud (a retry
-    /// retransmits, so the bytes count again).
-    fn push_uplink(&mut self, e: usize, mut task: SimTask, t: f64) {
-        task.t_enqueue = t;
-        self.cloud_bytes += task.wire_bytes;
-        self.uplinks[e].queued_bytes += task.wire_bytes;
-        self.uplinks[e].queue.push_back(task);
-        self.kick_uplink(e, t);
-    }
-
-    fn kick_uplink(&mut self, e: usize, t: f64) {
-        if !self.uplinks[e].busy {
-            if let Some(front) = self.uplinks[e].queue.front() {
-                self.uplinks[e].busy = true;
-                let transfer = front.wire_bytes as f64 / self.uplink_bps.max(1.0);
-                self.schedule(t + transfer, Event::UplinkFinish { edge: e as u32 });
-            }
-        }
+    /// Run an arbitrary [`SchemePolicy`] — the extension point the four
+    /// built-in schemes themselves go through.
+    pub fn run_policy(&mut self, policy: &dyn SchemePolicy) -> crate::Result<SchemeResult> {
+        engine::run_scheme(self, policy)
     }
 }
 
@@ -1241,208 +292,51 @@ impl RunSpec {
 }
 
 /// Run every scheme in the spec on one scenario (the paper's table
-/// layout). Each scheme gets a fresh harness built from the spec.
+/// layout), one OS thread per scheme.
+///
+/// Each scheme gets a fresh harness built from the spec, so the runs
+/// share no mutable state and each result is *byte-identical* to what a
+/// sequential loop at the same seed produces (the DES is deterministic
+/// per scheme). With an attached registry, every scheme records into a
+/// private child registry which is folded into the shared one in spec
+/// order after the join — reproducing the sequential export layout
+/// exactly (all per-scheme series are scheme-labelled; unlabelled series
+/// merge in the same order a sequential loop wrote them).
+///
+/// The `ComputeMode` is built *inside* each thread: the PJRT context is
+/// deliberately not `Send` (it owns a thread-local client handle).
 pub fn run_all_schemes(spec: &RunSpec) -> crate::Result<Vec<SchemeResult>> {
-    spec.schemes
-        .iter()
-        .map(|&scheme| {
-            let mode = standard_mode(&spec.cfg, spec.pjrt)?;
-            let mut b = Harness::builder(spec.cfg.clone()).mode(mode);
-            if let Some(plan) = &spec.plan {
-                b = b.plan(plan.clone());
-            }
-            if let Some(reg) = &spec.obs {
-                b = b.observe(reg.clone());
-            }
-            b.build().run(scheme)
-        })
-        .collect()
-}
-
-/// Deprecated positional form of [`run_all_schemes`].
-#[deprecated(since = "0.7.0", note = "use run_all_schemes(&RunSpec)")]
-pub fn run_all_schemes_with(
-    cfg: &Config,
-    mode_factory: &mut dyn FnMut() -> crate::Result<ComputeMode>,
-) -> crate::Result<Vec<SchemeResult>> {
-    Scheme::all()
-        .into_iter()
-        .map(|scheme| {
-            let mode = mode_factory()?;
-            Harness::builder(cfg.clone()).mode(mode).build().run(scheme)
-        })
-        .collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn synth_mode() -> ComputeMode {
-        ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+    let n = spec.schemes.len();
+    let mut slots: Vec<Option<crate::Result<SchemeResult>>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    let child_regs: Vec<Option<Registry>> =
+        spec.schemes.iter().map(|_| spec.obs.as_ref().map(|_| Registry::new())).collect();
+    std::thread::scope(|scope| {
+        for ((&scheme, slot), child) in
+            spec.schemes.iter().zip(slots.iter_mut()).zip(child_regs.iter())
+        {
+            let cfg = &spec.cfg;
+            let plan = &spec.plan;
+            let pjrt = spec.pjrt;
+            scope.spawn(move || {
+                *slot = Some((|| {
+                    let mode = standard_mode(cfg, pjrt)?;
+                    let mut b = Harness::builder(cfg.clone()).mode(mode);
+                    if let Some(plan) = plan {
+                        b = b.plan(plan.clone());
+                    }
+                    if let Some(reg) = child {
+                        b = b.observe(reg.clone());
+                    }
+                    b.build().run(scheme)
+                })());
+            });
+        }
+    });
+    if let Some(shared) = &spec.obs {
+        for child in child_regs.iter().flatten() {
+            shared.merge_from(child);
+        }
     }
-
-    fn small_cfg() -> Config {
-        Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() }
-    }
-
-    #[test]
-    fn single_edge_schemes_have_expected_shape() {
-        let cfg = small_cfg();
-        let run = |scheme| {
-            let mut h = Harness::builder(cfg.clone()).mode(synth_mode()).build();
-            h.run(scheme).unwrap()
-        };
-        let se = run(Scheme::SurveilEdge);
-        let eo = run(Scheme::EdgeOnly);
-        let co = run(Scheme::CloudOnly);
-        assert!(se.tasks > 10, "too few tasks: {}", se.tasks);
-        // Cloud-only: accuracy 1.0 (oracle == verdict), max bandwidth.
-        assert!((co.row.accuracy - 1.0).abs() < 1e-9, "cloud-only F2 {}", co.row.accuracy);
-        assert!(co.row.bandwidth_mb > se.row.bandwidth_mb, "cloud-only must use most bandwidth");
-        // Edge-only: zero bandwidth, lowest accuracy.
-        assert_eq!(eo.row.bandwidth_mb, 0.0);
-        assert!(eo.row.accuracy <= se.row.accuracy + 0.05, "edge-only {} vs SE {}", eo.row.accuracy, se.row.accuracy);
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let cfg = small_cfg();
-        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
-        let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
-        let a = h1.run(Scheme::SurveilEdge).unwrap();
-        let b = h2.run(Scheme::SurveilEdge).unwrap();
-        assert_eq!(a.tasks, b.tasks);
-        assert_eq!(a.latency.len(), b.latency.len());
-        assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
-    }
-
-    #[test]
-    fn all_tasks_get_verdicts() {
-        let cfg = small_cfg();
-        let mut h = Harness::builder(cfg).mode(synth_mode()).build();
-        let r = h.run(Scheme::SurveilEdge).unwrap();
-        // Every emitted task is eventually answered (drain horizon).
-        assert_eq!(r.latency.len() as u64, r.tasks);
-    }
-
-    #[test]
-    fn heterogeneous_edge_only_slower_than_surveiledge() {
-        let cfg = Config { duration: 120.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
-        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
-        let eo = h1.run(Scheme::EdgeOnly).unwrap();
-        let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
-        let se = h2.run(Scheme::SurveilEdge).unwrap();
-        assert!(
-            se.row.avg_latency < eo.row.avg_latency,
-            "SurveilEdge {} should beat edge-only {}",
-            se.row.avg_latency,
-            eo.row.avg_latency
-        );
-    }
-
-    #[test]
-    fn fault_free_run_reports_quiet_fault_stats() {
-        let cfg = small_cfg();
-        let mut h = Harness::builder(cfg).mode(synth_mode()).build();
-        let r = h.run(Scheme::SurveilEdge).unwrap();
-        assert!(!r.faults.any(), "fault-free run must not retry/reroute/degrade");
-        assert_eq!(r.faults.lost, 0);
-    }
-
-    #[test]
-    fn empty_plan_matches_default_run_exactly() {
-        let cfg = small_cfg();
-        let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
-        let mut h2 = Harness::builder(cfg).mode(synth_mode()).plan(FaultPlan::none()).build();
-        let a = h1.run(Scheme::SurveilEdge).unwrap();
-        let b = h2.run(Scheme::SurveilEdge).unwrap();
-        assert_eq!(a.tasks, b.tasks);
-        assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
-        assert!((a.row.bandwidth_mb - b.row.bandwidth_mb).abs() < 1e-12);
-    }
-
-    #[test]
-    fn slow_window_inflates_edge_latency() {
-        let cfg = small_cfg();
-        let mut base = Harness::builder(cfg.clone()).mode(synth_mode()).build();
-        let b = base.run(Scheme::EdgeOnly).unwrap();
-        let plan = FaultPlan {
-            slow: vec![crate::faults::SlowWindow { node: 1, from: 0.0, until: 60.0, factor: 8.0 }],
-            ..FaultPlan::none()
-        };
-        let mut slowed = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
-        let s = slowed.run(Scheme::EdgeOnly).unwrap();
-        assert!(
-            s.row.avg_latency > b.row.avg_latency,
-            "slowdown {} should exceed base {}",
-            s.row.avg_latency,
-            b.row.avg_latency
-        );
-        assert_eq!(s.faults.lost, 0, "slow tasks still drain");
-        assert_eq!(s.latency.len() as u64, s.tasks);
-    }
-
-    #[test]
-    fn cloud_crash_degrades_doubtfuls_instead_of_stranding() {
-        let cfg = small_cfg();
-        let plan = FaultPlan {
-            crashes: vec![crate::faults::CrashWindow { node: 0, from: 5.0, until: 100.0 }],
-            ..FaultPlan::none()
-        };
-        let mut h = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
-        let r = h.run(Scheme::SurveilEdge).unwrap();
-        assert_eq!(r.faults.lost, 0, "no task may be stranded by the cloud outage");
-        assert_eq!(r.latency.len() as u64, r.tasks);
-        assert!(r.faults.degraded > 0, "cloud outage must force edge-local verdicts");
-    }
-
-    #[test]
-    fn builder_defaults_and_report_schema() {
-        let h = Harness::builder(small_cfg()).build();
-        assert!(matches!(h.mode, ComputeMode::Synthetic { .. }));
-        assert!(h.plan.is_empty(), "default plan comes from cfg.faults (empty here)");
-        assert!(h.obs.is_none());
-        let mut h = Harness::builder(small_cfg()).mode(synth_mode()).build();
-        let r = h.run(Scheme::SurveilEdge).unwrap();
-        let rep = r.report();
-        assert_eq!(rep.kind, "scheme_run");
-        assert_eq!(rep.name, r.row.scheme);
-        assert_eq!(rep.get("tasks"), Some(r.tasks as f64));
-        assert_eq!(rep.get("faults_lost"), Some(0.0));
-        assert!(rep.get("p99_latency_s").unwrap() >= rep.get("p50_latency_s").unwrap());
-    }
-
-    #[test]
-    fn observed_run_emits_spans_and_valid_exports() {
-        let reg = Registry::new();
-        let mut h =
-            Harness::builder(small_cfg()).mode(synth_mode()).observe(reg.clone()).build();
-        let r = h.run(Scheme::SurveilEdge).unwrap();
-        assert!(reg.event_count() > 0, "an observed run must record spans");
-        let sl = [("scheme", r.row.scheme.as_str())];
-        assert_eq!(reg.counter("surveiledge_harness_tasks_total", &sl), r.tasks);
-        assert_eq!(reg.counter("surveiledge_harness_uploads_total", &sl), r.uploads);
-        crate::obs::validate_prometheus(&reg.export_prometheus()).unwrap();
-        assert_eq!(
-            crate::obs::validate_jsonl(&reg.export_jsonl()).unwrap(),
-            reg.event_count()
-        );
-    }
-
-    #[test]
-    fn run_spec_drives_selected_schemes() {
-        let spec = RunSpec::new(small_cfg()).schemes(&[Scheme::SurveilEdge, Scheme::EdgeOnly]);
-        let results = run_all_schemes(&spec).unwrap();
-        assert_eq!(results.len(), 2);
-        assert_ne!(results[0].row.scheme, results[1].row.scheme);
-    }
-
-    #[test]
-    fn finetune_corpus_shapes() {
-        let (px, lb) = finetune_corpus(ClassId::Moped, 64, 3);
-        assert_eq!(px.len(), 64 * 32 * 32 * 3);
-        assert_eq!(lb.len(), 64);
-        assert_eq!(lb.iter().filter(|&&l| l == 1).count(), 32);
-    }
+    slots.into_iter().map(|s| s.expect("scheme thread completed")).collect()
 }

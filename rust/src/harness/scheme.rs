@@ -1,0 +1,253 @@
+//! Scheme policies: every per-scheme behavioral difference, behind one
+//! trait.
+//!
+//! The DES engine (`harness::engine`) and the live workers
+//! (`nodes::EdgeWorker`) are scheme-agnostic; they call into a
+//! [`SchemePolicy`] at the four points where the paper's schemes diverge:
+//!
+//! * **controller** — adaptive eqs. 8–9 band vs the fixed α=0.8/β=0.1
+//!   baseline,
+//! * **route** — the eq. 7 allocator vs pinned-to-home vs pinned-to-cloud,
+//! * **decide** — band decision vs edge-only's hard 0.5 split,
+//! * **failure handling** — whether a scheme runs the stale-heartbeat
+//!   failover sweep, and whether a failed remote delivery may fall back
+//!   to the home edge.
+//!
+//! Adding a scheme means adding an impl here — the event loop and the
+//! live workers never change.
+
+use crate::config::{Config, Scheme};
+use crate::nodes::node_alive;
+use crate::obs::Registry;
+use crate::paramdb::ParamDb;
+use crate::sched::{
+    allocate, record_allocation, BandDecision, NodeLoad, ThresholdConfig, ThresholdController,
+};
+use crate::types::NodeId;
+
+use super::engine::{NodeSim, Uplink};
+use super::pipeline::EDGE_SPLIT;
+use super::{EdgeOutage, HD_SCALE};
+
+/// Everything a routing decision may consult: the task's home edge, the
+/// current (simulated) time, and read-only views of the cluster state.
+pub struct RouteCtx<'a> {
+    /// Home edge of the task being routed (node index, 1-based).
+    pub home: u32,
+    /// Current simulated time.
+    pub t: f64,
+    pub cfg: &'a Config,
+    /// Node 0 = cloud; 1..=n = edges.
+    pub nodes: &'a [NodeSim],
+    /// Per-edge uplink state (index 0 = edge 1).
+    pub uplinks: &'a [Uplink],
+    /// Parameter DB — heartbeat keys drive liveness filtering.
+    pub db: &'a ParamDb,
+    /// Legacy single-window outage, if any.
+    pub outage: Option<EdgeOutage>,
+    /// Attached registry (allocation decisions are recorded into it).
+    pub obs: Option<&'a Registry>,
+}
+
+/// One scheme's behavior. Default methods encode the common case; each
+/// impl overrides only where its scheme actually diverges.
+pub trait SchemePolicy: Sync {
+    /// The built-in scheme this policy reports as (used for labels and
+    /// result rows; custom policies may still override [`Self::name`]).
+    fn scheme(&self) -> Scheme;
+
+    /// Human-readable name — the `Report` / table / span label key.
+    fn name(&self) -> &'static str {
+        self.scheme().name()
+    }
+
+    /// Per-edge threshold controller. Default: the adaptive eqs. 8–9
+    /// band starting at α₀ = 0.8.
+    fn controller(&self, gamma1: f64, gamma2: f64, interval: f64) -> ThresholdController {
+        ThresholdController::new(0.8, ThresholdConfig { gamma1, gamma2, interval })
+    }
+
+    /// Destination for a new (or re-routed) task.
+    fn route(&self, ctx: &RouteCtx<'_>) -> NodeId;
+
+    /// Band decision on an edge confidence. Default: the controller's
+    /// [β, α] band.
+    fn decide(&self, controller: &ThresholdController, confidence: f32) -> BandDecision {
+        controller.decide(confidence)
+    }
+
+    /// Does this scheme schedule the stale-heartbeat failover sweep that
+    /// re-queues a crashed node's stranded tasks through the allocator?
+    fn schedules_failover_sweep(&self) -> bool {
+        false
+    }
+
+    /// May a failed remote delivery fall back to the home edge once the
+    /// cloud is dead or the attempt budget is spent? Cloud-only answers
+    /// `false`: it has no edge fallback and keeps retrying.
+    fn falls_back_to_edge(&self) -> bool {
+        true
+    }
+}
+
+/// The paper's full scheme: eq. 7 allocation + adaptive thresholds +
+/// heartbeat-driven failover.
+pub struct SurveilEdgePolicy;
+
+impl SchemePolicy for SurveilEdgePolicy {
+    fn scheme(&self) -> Scheme {
+        Scheme::SurveilEdge
+    }
+
+    fn route(&self, ctx: &RouteCtx<'_>) -> NodeId {
+        // eq. 7 over {home edge first, other edges, cloud}; edges under an
+        // injected outage or with a stale heartbeat are not candidates
+        // (failover). Without heartbeats (fault-free runs) `node_alive` is
+        // vacuously true.
+        let dead = |e: u32| {
+            ctx.outage.is_some_and(|o| o.covers(ctx.t, e)) || !node_alive(ctx.db, e, ctx.t)
+        };
+        let mut cands: Vec<NodeLoad> = Vec::with_capacity(ctx.nodes.len());
+        if !dead(ctx.home) {
+            cands.push(ctx.nodes[ctx.home as usize].load(ctx.home, 0.0));
+        }
+        for i in 1..ctx.nodes.len() as u32 {
+            if i != ctx.home && !dead(i) {
+                cands.push(ctx.nodes[i as usize].load(i, 0.0));
+            }
+        }
+        // Cloud penalty: rtt + typical crop transfer + current uplink
+        // backlog on this edge's link.
+        let backlog = ctx.uplinks[(ctx.home - 1) as usize].queued_bytes() as f64;
+        let upload = ctx.cfg.rtt
+            + (backlog + 24.0 * 24.0 * 3.0 * HD_SCALE as f64) / (ctx.cfg.uplink_mbps * 125_000.0);
+        if node_alive(ctx.db, 0, ctx.t) {
+            cands.push(ctx.nodes[0].load(0, upload));
+        }
+        let dest = allocate(&cands).unwrap_or(NodeId(ctx.home));
+        if let Some(reg) = ctx.obs {
+            record_allocation(reg, self.name(), dest, &cands);
+        }
+        dest
+    }
+
+    fn schedules_failover_sweep(&self) -> bool {
+        true
+    }
+}
+
+/// Fixed-threshold baseline: home-pinned, α=0.8 / β=0.1 forever.
+pub struct SurveilEdgeFixedPolicy;
+
+impl SchemePolicy for SurveilEdgeFixedPolicy {
+    fn scheme(&self) -> Scheme {
+        Scheme::SurveilEdgeFixed
+    }
+
+    fn controller(&self, _gamma1: f64, _gamma2: f64, _interval: f64) -> ThresholdController {
+        ThresholdController::fixed()
+    }
+
+    fn route(&self, ctx: &RouteCtx<'_>) -> NodeId {
+        NodeId(ctx.home)
+    }
+}
+
+/// Edge-only baseline: no cloud path at all — hard 0.5 split at the edge.
+pub struct EdgeOnlyPolicy;
+
+impl SchemePolicy for EdgeOnlyPolicy {
+    fn scheme(&self) -> Scheme {
+        Scheme::EdgeOnly
+    }
+
+    fn route(&self, ctx: &RouteCtx<'_>) -> NodeId {
+        NodeId(ctx.home)
+    }
+
+    fn decide(&self, _controller: &ThresholdController, confidence: f32) -> BandDecision {
+        if confidence >= EDGE_SPLIT {
+            BandDecision::Positive
+        } else {
+            BandDecision::Negative
+        }
+    }
+}
+
+/// Cloud-only baseline: every crop ships over the uplink.
+pub struct CloudOnlyPolicy;
+
+impl SchemePolicy for CloudOnlyPolicy {
+    fn scheme(&self) -> Scheme {
+        Scheme::CloudOnly
+    }
+
+    fn route(&self, _ctx: &RouteCtx<'_>) -> NodeId {
+        NodeId::CLOUD
+    }
+
+    fn falls_back_to_edge(&self) -> bool {
+        false
+    }
+}
+
+/// The built-in policy for a [`Scheme`] (unit structs, so `'static`).
+pub fn policy_for(scheme: Scheme) -> &'static dyn SchemePolicy {
+    match scheme {
+        Scheme::SurveilEdge => &SurveilEdgePolicy,
+        Scheme::SurveilEdgeFixed => &SurveilEdgeFixedPolicy,
+        Scheme::EdgeOnly => &EdgeOnlyPolicy,
+        Scheme::CloudOnly => &CloudOnlyPolicy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_match_scheme_names() {
+        for scheme in Scheme::all() {
+            let p = policy_for(scheme);
+            assert_eq!(p.scheme(), scheme);
+            assert_eq!(p.name(), scheme.name());
+        }
+    }
+
+    #[test]
+    fn controllers_match_their_schemes() {
+        let fixed = policy_for(Scheme::SurveilEdgeFixed).controller(0.1, 0.25, 1.0);
+        assert!((fixed.alpha - 0.8).abs() < 1e-12);
+        assert!((fixed.beta - 0.1).abs() < 1e-12);
+        let mut adaptive = policy_for(Scheme::SurveilEdge).controller(0.1, 0.25, 1.0);
+        let a0 = adaptive.alpha;
+        adaptive.update(10, 1.0); // overload: the band must narrow
+        assert!(adaptive.alpha < a0);
+    }
+
+    #[test]
+    fn edge_only_decides_on_a_hard_split() {
+        let ctl = policy_for(Scheme::EdgeOnly).controller(0.1, 0.25, 1.0);
+        let p = policy_for(Scheme::EdgeOnly);
+        assert_eq!(p.decide(&ctl, 0.51), BandDecision::Positive);
+        assert_eq!(p.decide(&ctl, 0.49), BandDecision::Negative);
+        // Never doubtful, even where the adaptive band would be.
+        assert_eq!(policy_for(Scheme::SurveilEdge).decide(&ctl, 0.5), BandDecision::Doubtful);
+    }
+
+    #[test]
+    fn only_surveiledge_runs_the_failover_sweep() {
+        for scheme in Scheme::all() {
+            let sweep = policy_for(scheme).schedules_failover_sweep();
+            assert_eq!(sweep, scheme == Scheme::SurveilEdge, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn only_cloud_only_never_falls_back_to_edge() {
+        for scheme in Scheme::all() {
+            let falls_back = policy_for(scheme).falls_back_to_edge();
+            assert_eq!(falls_back, scheme != Scheme::CloudOnly, "{scheme:?}");
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Harness-level tests: scheme shapes, determinism, fault handling, the
+//! builder/report schema, and the parallel `run_all_schemes` equivalence
+//! contract. Engine-internal invariants (HeapKey ordering) live in
+//! `engine.rs`; the stage layer's tests live in `pipeline.rs`.
+
+use super::*;
+use crate::types::ClassId;
+
+fn synth_mode() -> ComputeMode {
+    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+}
+
+fn small_cfg() -> Config {
+    Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() }
+}
+
+#[test]
+fn single_edge_schemes_have_expected_shape() {
+    let cfg = small_cfg();
+    let run = |scheme| {
+        let mut h = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+        h.run(scheme).unwrap()
+    };
+    let se = run(Scheme::SurveilEdge);
+    let eo = run(Scheme::EdgeOnly);
+    let co = run(Scheme::CloudOnly);
+    assert!(se.tasks > 10, "too few tasks: {}", se.tasks);
+    // Cloud-only: accuracy 1.0 (oracle == verdict), max bandwidth.
+    assert!((co.row.accuracy - 1.0).abs() < 1e-9, "cloud-only F2 {}", co.row.accuracy);
+    assert!(co.row.bandwidth_mb > se.row.bandwidth_mb, "cloud-only must use most bandwidth");
+    // Edge-only: zero bandwidth, lowest accuracy.
+    assert_eq!(eo.row.bandwidth_mb, 0.0);
+    assert!(eo.row.accuracy <= se.row.accuracy + 0.05, "edge-only {} vs SE {}", eo.row.accuracy, se.row.accuracy);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let cfg = small_cfg();
+    let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+    let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
+    let a = h1.run(Scheme::SurveilEdge).unwrap();
+    let b = h2.run(Scheme::SurveilEdge).unwrap();
+    assert_eq!(a.tasks, b.tasks);
+    assert_eq!(a.latency.len(), b.latency.len());
+    assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
+}
+
+#[test]
+fn all_tasks_get_verdicts() {
+    let cfg = small_cfg();
+    let mut h = Harness::builder(cfg).mode(synth_mode()).build();
+    let r = h.run(Scheme::SurveilEdge).unwrap();
+    // Every emitted task is eventually answered (drain horizon).
+    assert_eq!(r.latency.len() as u64, r.tasks);
+}
+
+#[test]
+fn heterogeneous_edge_only_slower_than_surveiledge() {
+    let cfg = Config { duration: 120.0, frame_h: 48, frame_w: 64, ..Config::heterogeneous() };
+    let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+    let eo = h1.run(Scheme::EdgeOnly).unwrap();
+    let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
+    let se = h2.run(Scheme::SurveilEdge).unwrap();
+    assert!(
+        se.row.avg_latency < eo.row.avg_latency,
+        "SurveilEdge {} should beat edge-only {}",
+        se.row.avg_latency,
+        eo.row.avg_latency
+    );
+}
+
+#[test]
+fn fault_free_run_reports_quiet_fault_stats() {
+    let cfg = small_cfg();
+    let mut h = Harness::builder(cfg).mode(synth_mode()).build();
+    let r = h.run(Scheme::SurveilEdge).unwrap();
+    assert!(!r.faults.any(), "fault-free run must not retry/reroute/degrade");
+    assert_eq!(r.faults.lost, 0);
+}
+
+#[test]
+fn empty_plan_matches_default_run_exactly() {
+    let cfg = small_cfg();
+    let mut h1 = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+    let mut h2 = Harness::builder(cfg).mode(synth_mode()).plan(FaultPlan::none()).build();
+    let a = h1.run(Scheme::SurveilEdge).unwrap();
+    let b = h2.run(Scheme::SurveilEdge).unwrap();
+    assert_eq!(a.tasks, b.tasks);
+    assert!((a.row.avg_latency - b.row.avg_latency).abs() < 1e-12);
+    assert!((a.row.bandwidth_mb - b.row.bandwidth_mb).abs() < 1e-12);
+}
+
+#[test]
+fn slow_window_inflates_edge_latency() {
+    let cfg = small_cfg();
+    let mut base = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+    let b = base.run(Scheme::EdgeOnly).unwrap();
+    let plan = FaultPlan {
+        slow: vec![crate::faults::SlowWindow { node: 1, from: 0.0, until: 60.0, factor: 8.0 }],
+        ..FaultPlan::none()
+    };
+    let mut slowed = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
+    let s = slowed.run(Scheme::EdgeOnly).unwrap();
+    assert!(
+        s.row.avg_latency > b.row.avg_latency,
+        "slowdown {} should exceed base {}",
+        s.row.avg_latency,
+        b.row.avg_latency
+    );
+    assert_eq!(s.faults.lost, 0, "slow tasks still drain");
+    assert_eq!(s.latency.len() as u64, s.tasks);
+}
+
+#[test]
+fn cloud_crash_degrades_doubtfuls_instead_of_stranding() {
+    let cfg = small_cfg();
+    let plan = FaultPlan {
+        crashes: vec![crate::faults::CrashWindow { node: 0, from: 5.0, until: 100.0 }],
+        ..FaultPlan::none()
+    };
+    let mut h = Harness::builder(cfg).mode(synth_mode()).plan(plan).build();
+    let r = h.run(Scheme::SurveilEdge).unwrap();
+    assert_eq!(r.faults.lost, 0, "no task may be stranded by the cloud outage");
+    assert_eq!(r.latency.len() as u64, r.tasks);
+    assert!(r.faults.degraded > 0, "cloud outage must force edge-local verdicts");
+}
+
+#[test]
+fn builder_defaults_and_report_schema() {
+    let h = Harness::builder(small_cfg()).build();
+    assert!(matches!(h.mode, ComputeMode::Synthetic { .. }));
+    assert!(h.plan.is_empty(), "default plan comes from cfg.faults (empty here)");
+    assert!(h.obs.is_none());
+    let mut h = Harness::builder(small_cfg()).mode(synth_mode()).build();
+    let r = h.run(Scheme::SurveilEdge).unwrap();
+    let rep = r.report();
+    assert_eq!(rep.kind, "scheme_run");
+    assert_eq!(rep.name, r.row.scheme);
+    assert_eq!(rep.get("tasks"), Some(r.tasks as f64));
+    assert_eq!(rep.get("faults_lost"), Some(0.0));
+    assert!(rep.get("p99_latency_s").unwrap() >= rep.get("p50_latency_s").unwrap());
+}
+
+#[test]
+fn observed_run_emits_spans_and_valid_exports() {
+    let reg = Registry::new();
+    let mut h =
+        Harness::builder(small_cfg()).mode(synth_mode()).observe(reg.clone()).build();
+    let r = h.run(Scheme::SurveilEdge).unwrap();
+    assert!(reg.event_count() > 0, "an observed run must record spans");
+    let sl = [("scheme", r.row.scheme.as_str())];
+    assert_eq!(reg.counter("surveiledge_harness_tasks_total", &sl), r.tasks);
+    assert_eq!(reg.counter("surveiledge_harness_uploads_total", &sl), r.uploads);
+    crate::obs::validate_prometheus(&reg.export_prometheus()).unwrap();
+    assert_eq!(
+        crate::obs::validate_jsonl(&reg.export_jsonl()).unwrap(),
+        reg.event_count()
+    );
+}
+
+#[test]
+fn run_spec_drives_selected_schemes() {
+    let spec = RunSpec::new(small_cfg()).schemes(&[Scheme::SurveilEdge, Scheme::EdgeOnly]);
+    let results = run_all_schemes(&spec).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_ne!(results[0].row.scheme, results[1].row.scheme);
+}
+
+#[test]
+fn finetune_corpus_shapes() {
+    let (px, lb) = finetune_corpus(ClassId::Moped, 64, 3);
+    assert_eq!(px.len(), 64 * 32 * 32 * 3);
+    assert_eq!(lb.len(), 64);
+    assert_eq!(lb.iter().filter(|&&l| l == 1).count(), 32);
+}
+
+/// ISSUE acceptance: the threaded `run_all_schemes` must reproduce a
+/// plain sequential loop byte-for-byte at the same seed — the DES is
+/// deterministic per scheme and the runs share no mutable state.
+#[test]
+fn parallel_run_matches_sequential_reports_byte_for_byte() {
+    let cfg = small_cfg();
+    let parallel = run_all_schemes(&RunSpec::new(cfg.clone())).unwrap();
+    let sequential: Vec<SchemeResult> = Scheme::all()
+        .into_iter()
+        .map(|scheme| {
+            Harness::builder(cfg.clone()).mode(synth_mode()).build().run(scheme).unwrap()
+        })
+        .collect();
+    assert_eq!(parallel.len(), sequential.len());
+    for (p, s) in parallel.iter().zip(&sequential) {
+        assert_eq!(p.row.scheme, s.row.scheme, "spec order must be preserved");
+        assert_eq!(
+            p.report().to_json(),
+            s.report().to_json(),
+            "parallel vs sequential diverged for {}",
+            p.row.scheme
+        );
+        assert_eq!(p.per_frame, s.per_frame, "per-frame traces must match for {}", p.row.scheme);
+    }
+}
+
+/// Custom policies are first-class: a policy outside the four built-ins
+/// runs through the same engine via `run_policy`.
+#[test]
+fn custom_policy_runs_through_the_engine() {
+    struct AlwaysCloud;
+    impl SchemePolicy for AlwaysCloud {
+        fn scheme(&self) -> Scheme {
+            Scheme::CloudOnly
+        }
+        fn name(&self) -> &'static str {
+            "always-cloud"
+        }
+        fn route(&self, _ctx: &RouteCtx<'_>) -> crate::types::NodeId {
+            crate::types::NodeId::CLOUD
+        }
+        fn falls_back_to_edge(&self) -> bool {
+            false
+        }
+    }
+    let cfg = small_cfg();
+    let mut h = Harness::builder(cfg.clone()).mode(synth_mode()).build();
+    let custom = h.run_policy(&AlwaysCloud).unwrap();
+    assert_eq!(custom.row.scheme, "always-cloud");
+    // Identical behavior to the built-in cloud-only, under its own label.
+    let mut h2 = Harness::builder(cfg).mode(synth_mode()).build();
+    let builtin = h2.run(Scheme::CloudOnly).unwrap();
+    assert_eq!(custom.tasks, builtin.tasks);
+    assert!((custom.row.accuracy - builtin.row.accuracy).abs() < 1e-12);
+    assert!((custom.row.avg_latency - builtin.row.avg_latency).abs() < 1e-12);
+}

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   run       — run one scheme on a scenario config, print the table row
-//!   tables    — reproduce the paper's Tables II/III/IV (all 4 schemes)
+//!   tables    — reproduce the paper's Tables II/III/IV (all 4 schemes,
+//!               run concurrently on scoped threads; results are
+//!               byte-identical to a sequential run at the same seed)
 //!   offline   — run the offline stage (profiles, clusters, datasets)
 //!   inspect   — print the artifact manifest summary
 //!   obs-check — validate an `--obs-out` export directory
@@ -34,6 +36,8 @@ USAGE:
   surveiledge help
 
 Schemes: SurveilEdge | fixed | edge-only | cloud-only
+`tables` runs all four schemes in parallel (one thread per scheme); per-scheme
+results and exports are identical to running them one at a time.
 --pjrt runs every classification through the PJRT artifacts (needs `make artifacts`);
 without it, calibrated synthetic confidences are used.
 --obs-out DIR writes events.jsonl (per-task stage spans), metrics.prom

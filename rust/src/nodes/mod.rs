@@ -7,9 +7,12 @@
 //! high-accuracy CNN. Both publish verdicts on `verdict/#` and replicate
 //! scheduler state (α, β, tᵢ, Qᵢ) through the [`crate::paramdb`].
 //!
-//! The experiment harness (`crate::harness`) drives the same decision code
-//! in discrete-event time for the paper's tables; these workers are what
-//! `examples/e2e_query.rs` runs live with real threads.
+//! The experiment harness (`crate::harness`) drives the *same* per-task
+//! stage code in discrete-event time for the paper's tables: both
+//! substrates call `harness::pipeline::classify_stage` with a scheme
+//! policy, and differ only in how they answer the stage's questions
+//! (simulated queues vs atomics + wall-clock heartbeats). These workers
+//! are what `examples/e2e_query.rs` runs live with real threads.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -17,10 +20,11 @@ use std::sync::{Arc, Mutex};
 use crate::bus::{Broker, Message, QoS};
 use crate::config::Scheme;
 use crate::estimator::LatencyEstimator;
+use crate::harness::{classify_stage, policy_for, EdgeAction, PipelineCtx};
 use crate::metrics::{BandwidthMeter, Confusion, LatencyRecorder};
 use crate::paramdb::{ParamDb, Value};
 use crate::runtime::service::ServiceHandle;
-use crate::sched::{BandDecision, NodeLoad, ThresholdConfig, ThresholdController};
+use crate::sched::{NodeLoad, ThresholdController};
 use crate::types::{ClassId, NodeId, Task, Verdict, Where};
 
 /// Shared, thread-safe view of one node's scheduler state.
@@ -74,7 +78,7 @@ impl NodeState {
 /// treated as dead by the allocator until it beats again.
 pub fn node_alive(db: &ParamDb, node: u32, now: f64) -> bool {
     db.get_f64(&ParamDb::key_hb(node))
-        .map_or(true, |last| now - last <= crate::faults::HB_STALE_AFTER)
+        .is_none_or(|last| now - last <= crate::faults::HB_STALE_AFTER)
 }
 
 /// Build a final verdict for a task.
@@ -185,20 +189,23 @@ impl EdgeWorker {
                 std::thread::sleep(std::time::Duration::from_secs_f64(pad.min(0.5)));
             }
         }
-        // Controller update (eqs. 8–9). The band only modulates *upload*
-        // volume, so l_d·t_d is evaluated for d = cloud: outstanding
-        // uploads x the cloud's advertised per-task latency (replicated
-        // via the parameter DB), plus the local wait.
-        {
+        // The shared classify stage (`harness::pipeline::classify_stage`):
+        // controller update (eqs. 8–9), the scheme's band decision, and
+        // the cloud-liveness fallback — the exact code the DES engine runs
+        // per task. This substrate answers the stage's questions through
+        // [`LiveCtx`]; α/β replicate to the parameter DB afterwards.
+        let outcome = {
             let mut ctl = self.controller.lock().unwrap();
-            let backlog = self.metrics.cloud_backlog.load(Ordering::Relaxed) as usize;
-            let t_cloud = self.db.get_f64(&ParamDb::key_t(0)).unwrap_or(0.001);
-            let q_local = self.state.queue.load(Ordering::Relaxed) as usize;
-            let t_local = self.state.estimator.lock().unwrap().estimate();
-            ctl.update(1, backlog as f64 * t_cloud + q_local as f64 * t_local);
+            let outcome = classify_stage(
+                &LiveCtx { worker: self, now: now_fn() },
+                policy_for(self.scheme),
+                &mut ctl,
+                confidence,
+            );
             self.db.put(ParamDb::key_alpha(), Value::F64(ctl.alpha));
             self.db.put(ParamDb::key_beta(), Value::F64(ctl.beta));
-        }
+            outcome
+        };
         // Feedback for tᵢ (eq. 17 fast path + lognormal window).
         self.state
             .estimator
@@ -207,23 +214,12 @@ impl EdgeWorker {
             .observe((now_fn() - t0).max(1e-6));
         self.state.publish(&self.db);
 
-        let decision = match self.scheme {
-            // No cloud available: hard 0.5 decision at the edge.
-            Scheme::EdgeOnly => {
-                if confidence >= 0.5 {
-                    BandDecision::Positive
-                } else {
-                    BandDecision::Negative
-                }
-            }
-            _ => self.controller.lock().unwrap().decide(confidence),
-        };
-        match decision {
-            BandDecision::Positive | BandDecision::Negative => {
+        match outcome.action {
+            EdgeAction::Verdict { positive } => {
                 let v = verdict_from(
                     &task,
                     confidence,
-                    decision == BandDecision::Positive,
+                    positive,
                     Where::Edge(self.state.id),
                     now_fn(),
                     self.query,
@@ -236,28 +232,28 @@ impl EdgeWorker {
                 );
                 Ok(Some(v))
             }
-            BandDecision::Doubtful => {
-                if !node_alive(&self.db, 0, now_fn()) {
-                    // Cloud unreachable (stale heartbeat): answer locally
-                    // with a hard 0.5 split instead of stranding the crop
-                    // on a dead upload path.
-                    self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
-                    let v = verdict_from(
-                        &task,
-                        confidence,
-                        confidence >= 0.5,
-                        Where::Edge(self.state.id),
-                        now_fn(),
-                        self.query,
-                        None,
-                    );
-                    self.metrics.record_verdict(&v);
-                    self.broker.publish(
-                        Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
-                        QoS::AtMostOnce,
-                    );
-                    return Ok(Some(v));
-                }
+            EdgeAction::Degrade { positive } => {
+                // Cloud unreachable (stale heartbeat): answer locally with
+                // a hard 0.5 split instead of stranding the crop on a dead
+                // upload path.
+                self.metrics.degraded.fetch_add(1, Ordering::Relaxed);
+                let v = verdict_from(
+                    &task,
+                    confidence,
+                    positive,
+                    Where::Edge(self.state.id),
+                    now_fn(),
+                    self.query,
+                    None,
+                );
+                self.metrics.record_verdict(&v);
+                self.broker.publish(
+                    Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
+                    QoS::AtMostOnce,
+                );
+                Ok(Some(v))
+            }
+            EdgeAction::Upload => {
                 self.metrics
                     .bandwidth
                     .lock()
@@ -270,6 +266,32 @@ impl EdgeWorker {
                 Ok(None)
             }
         }
+    }
+}
+
+/// The live substrate's answers to the shared classify stage: the eq. 8
+/// congestion signal from atomics + the replicated parameter DB, and cloud
+/// liveness from wall-clock heartbeats.
+struct LiveCtx<'a> {
+    worker: &'a EdgeWorker,
+    now: f64,
+}
+
+impl PipelineCtx for LiveCtx<'_> {
+    /// l_d·t_d for d = cloud: outstanding uploads x the cloud's advertised
+    /// per-task latency (replicated via the parameter DB), plus the local
+    /// wait.
+    fn congestion_signal(&self) -> f64 {
+        let w = self.worker;
+        let backlog = w.metrics.cloud_backlog.load(Ordering::Relaxed) as f64;
+        let t_cloud = w.db.get_f64(&ParamDb::key_t(0)).unwrap_or(0.001);
+        let q_local = w.state.queue.load(Ordering::Relaxed) as f64;
+        let t_local = w.state.estimator.lock().unwrap().estimate();
+        backlog * t_cloud + q_local * t_local
+    }
+
+    fn cloud_alive(&self) -> bool {
+        node_alive(&self.worker.db, 0, self.now)
     }
 }
 
@@ -438,12 +460,11 @@ pub fn live_candidates_from_db(
         .collect()
 }
 
-/// Controller factory per scheme.
+/// Controller factory per scheme — delegates to the scheme's
+/// [`SchemePolicy`](crate::harness::SchemePolicy) so both substrates agree
+/// on controller construction by construction.
 pub fn controller_for(scheme: Scheme, gamma1: f64, gamma2: f64, interval: f64) -> ThresholdController {
-    match scheme {
-        Scheme::SurveilEdgeFixed => ThresholdController::fixed(),
-        _ => ThresholdController::new(0.8, ThresholdConfig { gamma1, gamma2, interval }),
-    }
+    policy_for(scheme).controller(gamma1, gamma2, interval)
 }
 
 /// Stop flag shared across node threads.

@@ -280,6 +280,35 @@ impl Registry {
         self.inner.lock().unwrap().events.len()
     }
 
+    /// Fold another registry's state into this one: counters add, gauges
+    /// overwrite (last merge wins), histograms merge bucket-wise, events
+    /// append in `other`'s recording order. `run_all_schemes` gives each
+    /// concurrent scheme run a private child registry and merges the
+    /// children back in spec order, which makes a shared registry's
+    /// exports byte-identical to a sequential run.
+    pub fn merge_from(&self, other: &Registry) {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return; // same underlying state: nothing to fold
+        }
+        let src = other.inner.lock().unwrap();
+        let mut dst = self.inner.lock().unwrap();
+        for (k, v) in &src.counters {
+            *dst.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &src.gauges {
+            dst.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &src.histograms {
+            match dst.histograms.get_mut(k) {
+                Some(existing) => existing.merge(h),
+                None => {
+                    dst.histograms.insert(k.clone(), h.clone());
+                }
+            }
+        }
+        dst.events.extend(src.events.iter().cloned());
+    }
+
     /// Structured JSONL event log: one JSON object per span event, in
     /// recording order. Deterministic for a deterministic run.
     pub fn export_jsonl(&self) -> String {
@@ -693,6 +722,45 @@ mod tests {
         reg.inc("surveiledge_y_total", &[("a", "1"), ("b", "2")], 1);
         reg.inc("surveiledge_y_total", &[("b", "2"), ("a", "1")], 1);
         assert_eq!(reg.counter("surveiledge_y_total", &[("a", "1"), ("b", "2")]), 2);
+    }
+
+    #[test]
+    fn merge_from_folds_counters_gauges_histograms_events() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.inc("surveiledge_x_total", &[("scheme", "SE")], 2);
+        b.inc("surveiledge_x_total", &[("scheme", "SE")], 3);
+        b.inc("surveiledge_x_total", &[("scheme", "edge-only")], 1);
+        a.gauge_set("surveiledge_g", &[], 1.0);
+        b.gauge_set("surveiledge_g", &[], 2.5);
+        a.observe("surveiledge_h_seconds", &[], 0.010);
+        b.observe("surveiledge_h_seconds", &[], 0.020);
+        b.observe("surveiledge_h2_seconds", &[], 0.5);
+        let ev = |t: f64| SpanEvent {
+            t,
+            task: 0,
+            stage: Stage::Detect,
+            node: 1,
+            dur: 0.0,
+            scheme: "SE".to_string(),
+            detail: String::new(),
+        };
+        a.span(ev(1.0));
+        b.span(ev(2.0));
+        b.span(ev(3.0));
+        a.merge_from(&b);
+        assert_eq!(a.counter("surveiledge_x_total", &[("scheme", "SE")]), 5);
+        assert_eq!(a.counter("surveiledge_x_total", &[("scheme", "edge-only")]), 1);
+        assert_eq!(a.gauge("surveiledge_g", &[]), Some(2.5), "gauge: last merge wins");
+        assert_eq!(a.histogram("surveiledge_h_seconds", &[]).unwrap().count, 2);
+        assert_eq!(a.histogram("surveiledge_h2_seconds", &[]).unwrap().count, 1);
+        let ts: Vec<f64> = a.events().iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![1.0, 2.0, 3.0], "events append in source order");
+        // Merging a clone of self is a no-op, not a double-count.
+        let a2 = a.clone();
+        a.merge_from(&a2);
+        assert_eq!(a.counter("surveiledge_x_total", &[("scheme", "SE")]), 5);
+        assert_eq!(a.event_count(), 3);
     }
 
     #[test]

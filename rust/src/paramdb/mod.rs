@@ -103,7 +103,7 @@ impl ParamDb {
     /// than what we hold (last-writer-wins by version).
     pub fn merge(&self, update: &Update) -> bool {
         let mut map = self.inner.map.lock().unwrap();
-        let apply = map.get(&update.key).map_or(true, |e| update.version > e.version);
+        let apply = map.get(&update.key).is_none_or(|e| update.version > e.version);
         if apply {
             map.insert(update.key.clone(), Entry { value: update.value, version: update.version });
             // Bump the local clock past the remote version so later local

@@ -165,6 +165,17 @@ pub enum BandDecision {
     Doubtful,
 }
 
+impl BandDecision {
+    /// Stable lowercase label (span details, exports).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BandDecision::Positive => "positive",
+            BandDecision::Negative => "negative",
+            BandDecision::Doubtful => "doubtful",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -5,7 +5,7 @@
 
 use surveiledge::config::{Config, Scheme};
 use surveiledge::faults::{CrashWindow, FaultPlan, LinkFaults};
-use surveiledge::harness::{ComputeMode, Harness, SchemeResult};
+use surveiledge::harness::{run_all_schemes, ComputeMode, Harness, RunSpec, SchemeResult};
 
 fn synth() -> ComputeMode {
     ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
@@ -122,4 +122,23 @@ fn edge_only_survives_crash_via_recovery_drain() {
         .map(|(_, l, _)| *l)
         .fold(0.0f64, f64::max);
     assert!(edge1_max > 20.0, "expected a crash stall, max edge-1 latency {edge1_max:.1}s");
+}
+
+#[test]
+fn parallel_chaos_run_matches_per_scheme_sequential_runs() {
+    // The threaded `run_all_schemes` must not perturb fault handling:
+    // each scheme's recovery metrics under the seeded chaos plan are
+    // identical to a standalone sequential run of that scheme.
+    let cfg = chaos_cfg();
+    let results = run_all_schemes(&RunSpec::new(cfg.clone())).expect("parallel chaos run");
+    assert_eq!(results.len(), Scheme::all().len());
+    for (scheme, par) in Scheme::all().into_iter().zip(&results) {
+        let seq = run(&cfg, scheme);
+        assert_eq!(par.row.scheme, seq.row.scheme, "spec order must be preserved");
+        assert_eq!(par.tasks, seq.tasks, "{scheme:?} task count diverged");
+        assert_eq!(par.faults, seq.faults, "{scheme:?} recovery metrics diverged");
+        assert!((par.row.avg_latency - seq.row.avg_latency).abs() < 1e-12);
+        assert!((par.row.bandwidth_mb - seq.row.bandwidth_mb).abs() < 1e-12);
+        assert!((par.row.accuracy - seq.row.accuracy).abs() < 1e-12);
+    }
 }

@@ -146,3 +146,42 @@ fn run_spec_shares_one_registry_across_schemes() {
         assert_eq!(back.get("accuracy_f2"), orig.get("accuracy_f2"));
     }
 }
+
+#[test]
+fn parallel_observed_exports_match_a_sequential_shared_registry() {
+    // `run_all_schemes` runs each scheme on its own thread against a
+    // private child registry, then folds the children into the shared
+    // registry in spec order. The result must be indistinguishable from
+    // running the schemes one at a time against a single shared registry:
+    // same counters, same gauges, same span stream, byte for byte.
+    let cfg = Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() };
+    let schemes = [Scheme::SurveilEdge, Scheme::CloudOnly];
+
+    let par_reg = Registry::new();
+    run_all_schemes(
+        &RunSpec::new(cfg.clone()).schemes(&schemes).observe(par_reg.clone()),
+    )
+    .expect("parallel observed run");
+
+    let seq_reg = Registry::new();
+    for &scheme in &schemes {
+        Harness::builder(cfg.clone())
+            .mode(synth())
+            .observe(seq_reg.clone())
+            .build()
+            .run(scheme)
+            .expect("sequential observed run");
+    }
+
+    assert_eq!(par_reg.event_count(), seq_reg.event_count());
+    assert_eq!(
+        par_reg.export_jsonl(),
+        seq_reg.export_jsonl(),
+        "span stream diverged between parallel and sequential observation"
+    );
+    assert_eq!(
+        par_reg.export_prometheus(),
+        seq_reg.export_prometheus(),
+        "metric export diverged between parallel and sequential observation"
+    );
+}

@@ -1,0 +1,162 @@
+//! Cross-substrate equivalence (DESIGN.md §4's core promise): the same
+//! seeded crops produce identical band decisions and identical threshold
+//! trajectories whether they flow through the shared pipeline stage
+//! directly (as the DES engine drives it) or through a *live*
+//! `EdgeWorker` thread.
+//!
+//! The mirror side recomputes each step with `classify_stage` + a
+//! scripted `PipelineCtx` whose congestion signal is built from the same
+//! inputs the live worker reads (cloud backlog x replicated cloud
+//! latency; the local-queue term is pinned to zero so the wall-clock
+//! estimator cancels out exactly).
+
+use std::sync::{Arc, Mutex};
+
+use surveiledge::bus::Broker;
+use surveiledge::config::Scheme;
+use surveiledge::faults::HB_STALE_AFTER;
+use surveiledge::harness::{
+    classify_stage, finetune_corpus, policy_for, EdgeAction, PipelineCtx,
+};
+use surveiledge::nodes::{controller_for, EdgeWorker, NodeState, RunMetrics};
+use surveiledge::paramdb::{ParamDb, Value};
+use surveiledge::runtime::service::InferenceService;
+use surveiledge::types::{BBox, CameraId, ClassId, Image, NodeId, Task};
+
+const T_CLOUD: f64 = 0.25;
+
+struct Scripted {
+    signal: f64,
+    cloud_alive: bool,
+}
+
+impl PipelineCtx for Scripted {
+    fn congestion_signal(&self) -> f64 {
+        self.signal
+    }
+    fn cloud_alive(&self) -> bool {
+        self.cloud_alive
+    }
+}
+
+fn seeded_crops(n: usize, seed: u64) -> Vec<Image> {
+    let (pixels, _labels) = finetune_corpus(ClassId::Moped, n, seed);
+    let px = 32 * 32 * 3;
+    (0..n)
+        .map(|k| Image { h: 32, w: 32, data: pixels[k * px..(k + 1) * px].to_vec() })
+        .collect()
+}
+
+fn task_for(id: u64, crop: Image) -> Task {
+    Task {
+        id,
+        camera: CameraId(0),
+        frame_seq: id,
+        t_capture: 0.0,
+        t_detected: 0.0,
+        bbox: BBox { y0: 0, x0: 0, y1: 32, x1: 32 },
+        crop,
+        truth: None,
+    }
+}
+
+#[test]
+fn live_edge_worker_matches_pipeline_stage_decisions() {
+    let svc = match InferenceService::spawn("artifacts".into(), vec![1]) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: inference service unavailable: {e}");
+            return;
+        }
+    };
+    let scheme = Scheme::SurveilEdge;
+    let broker = Broker::new();
+    let db = ParamDb::new();
+    let metrics = Arc::new(RunMetrics::default());
+    let worker = EdgeWorker {
+        state: NodeState::new(NodeId(1), T_CLOUD),
+        scheme,
+        controller: Mutex::new(controller_for(scheme, 0.1, 0.25, 1.0)),
+        service: svc.handle.clone(),
+        broker: broker.clone(),
+        db: db.clone(),
+        metrics: metrics.clone(),
+        query: ClassId::Moped,
+        slowdown: 1.0,
+    };
+    // Pin the replicated cloud latency: the worker reads t/0 from the DB,
+    // the mirror uses the same constant. The worker's own queue stays at
+    // zero throughout, so the q·t_local term is exactly 0.0 on both sides
+    // even though the live estimator moves with wall time.
+    db.put(&ParamDb::key_t(0), Value::F64(T_CLOUD));
+
+    let policy = policy_for(scheme);
+    let mut mirror_ctl = controller_for(scheme, 0.1, 0.25, 1.0);
+    let mut mirror_backlog = 0u64;
+
+    // Phase 1: cloud alive. Every crop must get the same action and the
+    // same (α, β) trajectory on both substrates.
+    for (k, crop) in seeded_crops(24, 11).into_iter().enumerate() {
+        // Mirror: identical inference call -> identical confidence (the
+        // service is deterministic per pixel buffer).
+        let probs = svc.handle.edge_infer(1, crop.data.clone()).unwrap();
+        let conf = probs.get(1).copied().unwrap_or(0.0);
+        let ctx = Scripted { signal: mirror_backlog as f64 * T_CLOUD, cloud_alive: true };
+        let outcome = classify_stage(&ctx, policy, &mut mirror_ctl, conf);
+
+        let now = move || 1.0 + k as f64;
+        let verdict = worker.classify(task_for(k as u64, crop), &now).unwrap();
+        match outcome.action {
+            EdgeAction::Verdict { positive } => {
+                let v = verdict.expect("stage answered at the edge, live worker must too");
+                assert_eq!(v.positive, positive, "verdict sign diverged at task {k}");
+            }
+            EdgeAction::Upload => {
+                assert!(verdict.is_none(), "stage uploaded, live worker must too (task {k})");
+                mirror_backlog += 1;
+            }
+            EdgeAction::Degrade { .. } => unreachable!("cloud is alive in phase 1"),
+        }
+        let ctl = worker.controller.lock().unwrap();
+        assert_eq!(ctl.alpha, mirror_ctl.alpha, "alpha trajectory diverged at task {k}");
+        assert_eq!(ctl.beta, mirror_ctl.beta, "beta trajectory diverged at task {k}");
+    }
+    assert_eq!(
+        metrics.cloud_backlog.load(std::sync::atomic::Ordering::Relaxed),
+        mirror_backlog,
+        "upload accounting diverged"
+    );
+
+    // Phase 2: the cloud's heartbeat goes stale — doubtful crops must now
+    // degrade to an edge-local verdict on both substrates.
+    db.put(&ParamDb::key_hb(0), Value::F64(0.0));
+    let stale_now = HB_STALE_AFTER + 1000.0;
+    let mut mirror_degrades = 0u64;
+    for (k, crop) in seeded_crops(24, 23).into_iter().enumerate() {
+        let probs = svc.handle.edge_infer(1, crop.data.clone()).unwrap();
+        let conf = probs.get(1).copied().unwrap_or(0.0);
+        let ctx = Scripted { signal: mirror_backlog as f64 * T_CLOUD, cloud_alive: false };
+        let outcome = classify_stage(&ctx, policy, &mut mirror_ctl, conf);
+
+        let now = move || stale_now;
+        let verdict = worker.classify(task_for(100 + k as u64, crop), &now).unwrap();
+        match outcome.action {
+            EdgeAction::Verdict { positive } | EdgeAction::Degrade { positive } => {
+                let v = verdict.expect("dead cloud: the live worker must answer locally");
+                assert_eq!(v.positive, positive, "verdict sign diverged at stale task {k}");
+                if matches!(outcome.action, EdgeAction::Degrade { .. }) {
+                    mirror_degrades += 1;
+                }
+            }
+            EdgeAction::Upload => unreachable!("cloud is dark in phase 2"),
+        }
+        let ctl = worker.controller.lock().unwrap();
+        assert_eq!(ctl.alpha, mirror_ctl.alpha, "alpha trajectory diverged at stale task {k}");
+        assert_eq!(ctl.beta, mirror_ctl.beta, "beta trajectory diverged at stale task {k}");
+    }
+    assert_eq!(
+        metrics.degraded.load(std::sync::atomic::Ordering::Relaxed),
+        mirror_degrades,
+        "degrade accounting diverged"
+    );
+}
