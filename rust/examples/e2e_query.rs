@@ -150,6 +150,7 @@ fn main() -> anyhow::Result<()> {
             metrics: metrics.clone(),
             query: QUERY,
             slowdown: 1.0,
+            queries: None,
         };
         let clock = clock.clone();
         let base_id = task_counter;

@@ -300,6 +300,86 @@ mod tests {
     }
 
     #[test]
+    fn query_result_topic_matching() {
+        // The query subsystem streams verdicts on `query/<id>/results`;
+        // dashboards watch one query, all queries, or a query's whole
+        // subtree (results + admitted/retired control messages).
+        assert!(topic_matches("query/amber-moped/results", "query/amber-moped/results"));
+        assert!(topic_matches("query/+/results", "query/amber-moped/results"));
+        assert!(topic_matches("query/#", "query/amber-moped/results"));
+        assert!(topic_matches("query/amber-moped/#", "query/amber-moped/results"));
+        assert!(topic_matches("query/amber-moped/#", "query/amber-moped/admitted"));
+        // A single `+` never spans the id *and* the suffix level.
+        assert!(!topic_matches("query/+", "query/amber-moped/results"));
+        // One query's filter must not see another query's stream.
+        assert!(!topic_matches("query/amber-moped/results", "query/person-watch/results"));
+        assert!(!topic_matches("query/amber-moped/#", "query/person-watch/results"));
+        // Dashed ids are one level: `-` is not a separator.
+        assert!(topic_matches("query/+/results", "query/q0/results"));
+        assert!(!topic_matches("query/amber/+/results", "query/amber-moped/results"));
+    }
+
+    #[test]
+    fn prop_query_topic_matches_agree_with_reference() {
+        // Same oracle comparison as `prop_topic_matches_agrees_with_reference`,
+        // but over the query subsystem's topic shape (`query/<id>/<kind>`)
+        // so id-level wildcards get dense coverage.
+        check("query_topic_matches_vs_reference", |rng, _| {
+            let ids = ["amber-moped", "person-watch", "q0", "q1"];
+            let kinds = ["results", "admitted", "retired"];
+            let topic = [
+                "query",
+                ids[rng.range_usize(0, ids.len())],
+                kinds[rng.range_usize(0, kinds.len())],
+            ];
+            let fid = ["amber-moped", "person-watch", "q0", "q1", "+", "#"];
+            let fkind = ["results", "admitted", "retired", "+", "#"];
+            let mut filter = vec!["query"];
+            let id = fid[rng.range_usize(0, fid.len())];
+            filter.push(id);
+            if id != "#" && rng.range_usize(0, 4) > 0 {
+                filter.push(fkind[rng.range_usize(0, fkind.len())]);
+            }
+            let got = topic_matches(&filter.join("/"), &topic.join("/"));
+            let want = reference_matches(&filter, &topic);
+            assert_eq!(got, want, "filter {filter:?} vs topic {topic:?}");
+        });
+    }
+
+    #[test]
+    fn multi_subscriber_fanout_preserves_publish_order() {
+        // N subscribers with overlapping filters over the per-query result
+        // topics: each must receive exactly its matching messages, in
+        // publish order (the broker walks subscriptions per publish, so
+        // per-subscriber order equals global publish order).
+        let b = Broker::new();
+        let (rx_all, _) = b.subscribe("query/+/results", 256);
+        let (rx_tree, _) = b.subscribe("query/#", 256);
+        let (rx_q0, _) = b.subscribe("query/q0/results", 256);
+        let (rx_q1, _) = b.subscribe("query/q1/results", 256);
+        let mut published = Vec::new();
+        for i in 0..60u8 {
+            let id = format!("q{}", i % 3);
+            b.publish(Message::new(format!("query/{id}/results"), vec![i]), QoS::AtLeastOnce);
+            published.push((id, i));
+        }
+        let drain = |rx: &Receiver<Message>| -> Vec<u8> {
+            let mut got = Vec::new();
+            while let Ok(m) = rx.try_recv() {
+                got.push(m.payload[0]);
+            }
+            got
+        };
+        let want = |pred: &dyn Fn(&str) -> bool| -> Vec<u8> {
+            published.iter().filter(|(id, _)| pred(id)).map(|&(_, i)| i).collect()
+        };
+        assert_eq!(drain(&rx_all), want(&|_| true), "query/+/results sees every stream in order");
+        assert_eq!(drain(&rx_tree), want(&|_| true), "query/# sees every stream in order");
+        assert_eq!(drain(&rx_q0), want(&|id| id == "q0"), "exact filter sees only its query");
+        assert_eq!(drain(&rx_q1), want(&|id| id == "q1"), "exact filter sees only its query");
+    }
+
+    #[test]
     fn plus_wildcard_receives_all_edges() {
         let b = Broker::new();
         let (rx, _) = b.subscribe("verdict/+", 16);

@@ -43,20 +43,99 @@ impl TomlValue {
     }
 }
 
-/// A parsed document: `(section, key) -> value`. Top-level keys use the
-/// empty section name.
+/// One `[[name]]` array-of-tables block: its keys in document order.
+#[derive(Clone, Debug)]
+pub struct TomlBlock {
+    name: String,
+    entries: Vec<(String, TomlValue)>,
+}
+
+impl TomlBlock {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<String> {
+        self.get(key).and_then(|v| v.as_str().map(str::to_string))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_i64(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(TomlValue::as_i64)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(TomlValue::as_bool)
+    }
+
+    pub fn get_i64_array(&self, key: &str) -> Option<Vec<i64>> {
+        match self.get(key)? {
+            TomlValue::Array(items) => items.iter().map(TomlValue::as_i64).collect(),
+            _ => None,
+        }
+    }
+
+    /// Keys present in this block, in document order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|(k, _)| k.as_str())
+    }
+
+    /// Reject any key outside `allowed` with a named-key error (`ctx`
+    /// names the block for the message, e.g. `[[query]] block 2 ("q1")`).
+    pub fn ensure_keys(&self, ctx: &str, allowed: &[&str]) -> crate::Result<()> {
+        for k in self.keys() {
+            anyhow::ensure!(
+                allowed.contains(&k),
+                "{ctx}: unknown key {k:?} (expected one of: {})",
+                allowed.join(", ")
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A parsed document: `(section, key) -> value` for `[section]` tables
+/// (top-level keys use the empty section name), plus `[[name]]`
+/// array-of-tables blocks in document order.
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
     entries: HashMap<(String, String), TomlValue>,
+    blocks: Vec<TomlBlock>,
+}
+
+/// Where the next `key = value` line lands while parsing.
+enum Target {
+    Section(String),
+    Block(usize),
 }
 
 impl TomlDoc {
     pub fn parse(text: &str) -> crate::Result<TomlDoc> {
         let mut doc = TomlDoc::default();
-        let mut section = String::new();
+        let mut target = Target::Section(String::new());
+        let valid_name = |s: &str| {
+            !s.is_empty() && s.chars().all(|c| c.is_alphanumeric() || "._-".contains(c))
+        };
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated block header", lineno + 1))?
+                    .trim();
+                anyhow::ensure!(valid_name(name), "line {}: bad block name {name:?}", lineno + 1);
+                doc.blocks.push(TomlBlock { name: name.to_string(), entries: Vec::new() });
+                target = Target::Block(doc.blocks.len() - 1);
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -64,28 +143,36 @@ impl TomlDoc {
                     .strip_suffix(']')
                     .ok_or_else(|| anyhow::anyhow!("line {}: unterminated section", lineno + 1))?
                     .trim();
-                anyhow::ensure!(
-                    !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)),
-                    "line {}: bad section name {name:?}",
-                    lineno + 1
-                );
-                section = name.to_string();
+                anyhow::ensure!(valid_name(name), "line {}: bad section name {name:?}", lineno + 1);
+                target = Target::Section(name.to_string());
                 continue;
             }
             let (key, value) = line
                 .split_once('=')
                 .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
             let key = key.trim();
-            anyhow::ensure!(
-                !key.is_empty() && key.chars().all(|c| c.is_alphanumeric() || "._-".contains(c)),
-                "line {}: bad key {key:?}",
-                lineno + 1
-            );
+            anyhow::ensure!(valid_name(key), "line {}: bad key {key:?}", lineno + 1);
             let value = parse_value(value.trim())
                 .ok_or_else(|| anyhow::anyhow!("line {}: bad value {value:?}", lineno + 1))?;
-            doc.entries.insert((section.clone(), key.to_string()), value);
+            match &target {
+                Target::Section(section) => {
+                    doc.entries.insert((section.clone(), key.to_string()), value);
+                }
+                Target::Block(i) => {
+                    let block = &mut doc.blocks[*i];
+                    match block.entries.iter_mut().find(|(k, _)| k == key) {
+                        Some(slot) => slot.1 = value,
+                        None => block.entries.push((key.to_string(), value)),
+                    }
+                }
+            }
         }
         Ok(doc)
+    }
+
+    /// All `[[name]]` blocks with the given name, in document order.
+    pub fn blocks(&self, name: &str) -> impl Iterator<Item = &TomlBlock> {
+        self.blocks.iter().filter(move |b| b.name == name)
     }
 
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
@@ -246,6 +333,44 @@ mod tests {
         assert!(TomlDoc::parse("x = nope\n").is_err());
         assert!(TomlDoc::parse("x = \"unterminated\n").is_err());
         assert!(TomlDoc::parse("x = [1,\n").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_blocks() {
+        let doc = TomlDoc::parse(
+            "[scenario]\nx = 1\n[[query]]\nid = \"a\"\nalpha = 0.8\n[[query]]\nid = \"b\"\ncams = [0, 1]\n[network]\ny = 2\n",
+        )
+        .unwrap();
+        let blocks: Vec<_> = doc.blocks("query").collect();
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].get_str("id"), Some("a".into()));
+        assert_eq!(blocks[0].get_f64("alpha"), Some(0.8));
+        assert_eq!(blocks[1].get_str("id"), Some("b".into()));
+        assert_eq!(blocks[1].get_i64_array("cams"), Some(vec![0, 1]));
+        // Blocks don't leak into the flat section view and vice versa.
+        assert_eq!(doc.get_i64("scenario", "x"), Some(1));
+        assert_eq!(doc.get_i64("network", "y"), Some(2));
+        assert_eq!(doc.get("query", "id"), None);
+        assert_eq!(doc.blocks("nope").count(), 0);
+    }
+
+    #[test]
+    fn block_keys_in_order_and_ensure_keys_names_offender() {
+        let doc = TomlDoc::parse("[[q]]\nb = 1\na = 2\n").unwrap();
+        let block = doc.blocks("q").next().unwrap();
+        assert_eq!(block.keys().collect::<Vec<_>>(), vec!["b", "a"]);
+        assert!(block.ensure_keys("[[q]]", &["a", "b"]).is_ok());
+        let err = block.ensure_keys("[[q]] block 1", &["a"]).unwrap_err().to_string();
+        assert!(err.contains("[[q]] block 1"), "{err}");
+        assert!(err.contains("\"b\""), "{err}");
+        assert!(err.contains("expected one of: a"), "{err}");
+    }
+
+    #[test]
+    fn bad_block_headers_rejected() {
+        assert!(TomlDoc::parse("[[query\n").is_err());
+        assert!(TomlDoc::parse("[[query]\n").is_err());
+        assert!(TomlDoc::parse("[[ ]]\n").is_err());
     }
 
     #[test]

@@ -19,9 +19,10 @@ use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
 use crate::nodes::node_alive;
 use crate::obs::Stage;
 use crate::paramdb::{ParamDb, Value};
+use crate::query::{QuerySet, QueryVerdict, TaskQueryView};
 use crate::sched::{NodeLoad, ThresholdController};
 use crate::testkit::Rng;
-use crate::types::{Image, NodeId};
+use crate::types::{CameraId, Image, NodeId};
 use crate::video::standard_deployment;
 
 use crate::detect::DetectConfig;
@@ -53,6 +54,13 @@ pub(crate) struct SimTask {
     /// Set once an edge classified it doubtful — from then on its
     /// destination is pinned to the cloud re-check path.
     pub(crate) doubtful: bool,
+    /// Per-query views of this shared task (empty without a query set):
+    /// the detect + edge-infer work runs once; these only fan out the
+    /// threshold decision at verdict time.
+    pub(crate) qviews: Vec<TaskQueryView>,
+    /// eq. 7 deadline weight of the most demanding query covering this
+    /// task's camera at capture (1.0 without a query set).
+    pub(crate) route_weight: f64,
 }
 
 /// DES events.
@@ -246,18 +254,24 @@ impl Des {
 
 /// The DES's view of the shared classify stage, captured at the moment an
 /// edge finishes inference.
-struct DesCtx {
+struct DesCtx<'a> {
     /// eq. 8 signal: uplink backlog drain + cloud queue + rtt.
     signal: f64,
     cloud_alive: bool,
+    /// Attached query set (the engine fans verdicts out itself, but the
+    /// stage layer exposes the same view both substrates see).
+    queries: Option<&'a QuerySet>,
 }
 
-impl PipelineCtx for DesCtx {
+impl PipelineCtx for DesCtx<'_> {
     fn congestion_signal(&self) -> f64 {
         self.signal
     }
     fn cloud_alive(&self) -> bool {
         self.cloud_alive
+    }
+    fn query_set(&self) -> Option<&QuerySet> {
+        self.queries
     }
 }
 
@@ -272,6 +286,7 @@ fn route_task(
     t: f64,
     des: &Des,
     db: &ParamDb,
+    route_weight: f64,
 ) -> NodeId {
     policy.route(&RouteCtx {
         home,
@@ -282,6 +297,7 @@ fn route_task(
         db,
         outage: h.outage,
         obs: h.obs.as_ref(),
+        route_weight,
     })
 }
 
@@ -368,13 +384,10 @@ fn degrade_finish(
         h,
         result,
         policy.name(),
-        task.id,
+        &task,
         conf >= pipeline::EDGE_SPLIT,
-        task.oracle_positive,
-        task.truth_positive,
         t - task.t_capture,
         t,
-        task.home_edge,
         "degraded",
     );
     Ok(())
@@ -382,30 +395,61 @@ fn degrade_finish(
 
 /// Record a final verdict: metrics, the per-frame trace, the
 /// end-of-pipeline span (`dur` = end-to-end latency) and the verdict
-/// counter by site (`edge` / `cloud` / `degraded`).
+/// counter by site (`edge` / `cloud` / `degraded`) — then fan the
+/// per-query threshold decisions out from this one shared result.
 #[allow(clippy::too_many_arguments)]
 fn finish(
     h: &Harness,
     result: &mut SchemeResult,
     name: &str,
-    task_id: u64,
+    task: &SimTask,
     positive: bool,
-    oracle: bool,
-    truth: Option<bool>,
     latency: f64,
     t: f64,
-    home_edge: u32,
     site: &'static str,
 ) {
-    result.vs_oracle.record(positive, oracle);
-    if let Some(tr) = truth {
+    result.vs_oracle.record(positive, task.oracle_positive);
+    if let Some(tr) = task.truth_positive {
         result.vs_truth.record(positive, tr);
     }
     result.latency.record(latency);
-    result.per_frame.push((t, latency, home_edge));
-    h.span(name, t, task_id, Stage::Verdict, home_edge, latency, site);
+    result.per_frame.push((t, latency, task.home_edge));
+    h.span(name, t, task.id, Stage::Verdict, task.home_edge, latency, site);
     if let Some(reg) = &h.obs {
         reg.inc("surveiledge_harness_verdicts_total", &[("scheme", name), ("site", site)], 1);
+    }
+    // Work sharing: detect + edge inference ran once for this task; each
+    // query only re-thresholds the shared per-class result. A query may
+    // adopt the cloud's answer only if the *shared* task paid the upload.
+    if let Some(qs) = &h.queries {
+        let shared_cloud = site == "cloud";
+        for v in &task.qviews {
+            let spec = &qs.specs()[v.query];
+            let (qpos, qsite) = spec.decide(v.confidence, v.oracle, shared_cloud);
+            let qv = QueryVerdict {
+                query: spec.id.clone(),
+                task: task.id,
+                t,
+                positive: qpos,
+                confidence: v.confidence,
+                site: qsite,
+                latency,
+            };
+            if let Some(reg) = &h.obs {
+                reg.inc(
+                    "surveiledge_query_verdicts_total",
+                    &[("query", &spec.id), ("scheme", name), ("site", qsite)],
+                    1,
+                );
+                reg.observe(
+                    "surveiledge_query_latency_seconds",
+                    &[("query", &spec.id), ("scheme", name)],
+                    latency.max(0.0),
+                );
+            }
+            qs.publish_result(&qv);
+            result.query_verdicts.push(qv);
+        }
     }
 }
 
@@ -521,6 +565,8 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
         tasks: 0,
         mean_band_width: 0.0,
         faults: FaultStats::default(),
+        query_verdicts: Vec::new(),
+        per_query: Vec::new(),
     };
     let mut band_width_acc = 0.0f64;
     let mut band_width_n = 0u64;
@@ -551,6 +597,37 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                     {
                         let (oracle_positive, synth_confidence) =
                             h.mode.judge(cfg.query, &det.crop, det.truth_cls, &mut rng)?;
+                        // Per-query views of the one shared result. The
+                        // scenario class reuses the draw above; other
+                        // classes get a task+class-keyed derived stream,
+                        // so admitting or retiring one query never
+                        // shifts another query's confidences.
+                        let (qviews, route_weight) = match &h.queries {
+                            Some(qs) => {
+                                let cam = CameraId(ci as u32);
+                                let mut views = Vec::new();
+                                for (qi, spec) in qs.active(cam, t) {
+                                    let (oracle, conf) = if spec.object == cfg.query {
+                                        (oracle_positive, synth_confidence.unwrap_or(0.5))
+                                    } else {
+                                        let mut qrng = Rng::new(
+                                            cfg.seed
+                                                ^ 0x9E3779B97F4A7C15u64
+                                                    .wrapping_mul(next_task_id.wrapping_add(1))
+                                                ^ ((spec.object.index() as u64) << 48),
+                                        );
+                                        h.mode.judge_shared(spec.object, det.truth_cls, &mut qrng)
+                                    };
+                                    views.push(TaskQueryView {
+                                        query: qi,
+                                        confidence: conf,
+                                        oracle,
+                                    });
+                                }
+                                (views, qs.route_weight(cam, t))
+                            }
+                            None => (Vec::new(), 1.0),
+                        };
                         let task = SimTask {
                             id: next_task_id,
                             t_capture: t - cfg.interval, // crop comes from the middle frame
@@ -567,6 +644,8 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                             attempt: 0,
                             doubtful: false,
                             t_enqueue: t,
+                            qviews,
+                            route_weight,
                         };
                         next_task_id += 1;
                         result.tasks += 1;
@@ -574,7 +653,8 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         // frame; the crop surfaces one interval later.
                         h.span(name, t, task.id, Stage::Detect, task.home_edge, t - task.t_capture, "");
                         // Route (eq. 7 or the scheme's fixed policy).
-                        let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                        let dest =
+                            route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
                         dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
                     }
                     prev_frames[ci] = Some((f_prev, frame.image));
@@ -598,19 +678,7 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                 if node == 0 {
                     // Cloud verdict: the oracle's answer, by definition.
                     let latency = (t - task.t_capture) + cfg.rtt / 2.0;
-                    finish(
-                        h,
-                        &mut result,
-                        name,
-                        task.id,
-                        task.oracle_positive,
-                        task.oracle_positive,
-                        task.truth_positive,
-                        latency,
-                        t,
-                        task.home_edge,
-                        "cloud",
-                    );
+                    finish(h, &mut result, name, &task, task.oracle_positive, latency, t, "cloud");
                 } else {
                     // Edge classify -> the shared band-decision stage.
                     let conf = confidence_of(h, &task)?;
@@ -632,6 +700,7 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         // plan (fault-free runs never schedule
                         // heartbeats).
                         cloud_alive: !faulty || node_alive(&db, 0, t),
+                        queries: h.queries.as_ref(),
                     };
                     let outcome = pipeline::classify_stage(&ctx, policy, &mut controllers[e], conf);
                     band_width_acc += controllers[e].band_width();
@@ -643,13 +712,10 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                                 h,
                                 &mut result,
                                 name,
-                                task.id,
+                                &task,
                                 positive,
-                                task.oracle_positive,
-                                task.truth_positive,
                                 t - task.t_capture,
                                 t,
-                                task.home_edge,
                                 "edge",
                             );
                         }
@@ -730,7 +796,8 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                     for task in stranded {
                         des.fstats.rerouted += 1;
                         h.span(name, t, task.id, Stage::Reroute, node, 0.0, "");
-                        let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                        let dest =
+                            route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
                         dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
                     }
                 }
@@ -746,7 +813,8 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         des.push_uplink(e, task, t);
                     }
                 } else {
-                    let dest = route_task(h, policy, task.home_edge, t, &des, &db);
+                    let dest =
+                        route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
                     dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
                 }
             }
@@ -761,6 +829,9 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
         if band_width_n > 0 { band_width_acc / band_width_n as f64 } else { 0.0 };
     result.faults = des.fstats;
     result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
+    if let Some(qs) = &h.queries {
+        result.per_query = qs.per_query_reports(&result.query_verdicts);
+    }
     if let Some(reg) = &h.obs {
         let sl = [("scheme", name)];
         reg.inc("surveiledge_harness_tasks_total", &sl, result.tasks);

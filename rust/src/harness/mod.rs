@@ -44,6 +44,7 @@ use crate::config::{Config, Scheme};
 use crate::faults::FaultPlan;
 use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
 use crate::obs::{Registry, Report, SpanEvent, Stage};
+use crate::query::{QuerySet, QueryVerdict};
 
 pub use pipeline::{
     classify_stage, detect_crops, finetune_corpus, standard_mode, ComputeMode, DetectedCrop,
@@ -89,6 +90,11 @@ pub struct SchemeResult {
     pub mean_band_width: f64,
     /// Recovery metrics under fault injection (all-zero without a plan).
     pub faults: FaultStats,
+    /// Per-query verdict stream, in verdict order (empty without an
+    /// attached [`QuerySet`]).
+    pub query_verdicts: Vec<QueryVerdict>,
+    /// One `query_run` report per attached query, in id order.
+    pub per_query: Vec<Report>,
 }
 
 impl SchemeResult {
@@ -140,6 +146,11 @@ pub struct Harness {
     /// Observability sink: per-task stage spans + counters/gauges/
     /// histograms accumulate here when attached (`builder(..).observe(..)`).
     pub obs: Option<Registry>,
+    /// Admitted query set: with one attached, every verdict fans out into
+    /// per-query threshold decisions (work sharing) and the result
+    /// carries per-query streams/reports. `None` = classic single-query
+    /// run, byte-identical to pre-query builds.
+    pub queries: Option<QuerySet>,
 }
 
 /// Builder for [`Harness`]:
@@ -158,6 +169,7 @@ pub struct HarnessBuilder {
     outage: Option<EdgeOutage>,
     plan: Option<FaultPlan>,
     obs: Option<Registry>,
+    queries: Option<QuerySet>,
 }
 
 impl HarnessBuilder {
@@ -191,11 +203,18 @@ impl HarnessBuilder {
         self
     }
 
+    /// Attach an admitted query set; the run fans every shared verdict
+    /// out into per-query decisions and result streams.
+    pub fn queries(mut self, queries: QuerySet) -> HarnessBuilder {
+        self.queries = Some(queries);
+        self
+    }
+
     pub fn build(self) -> Harness {
-        let HarnessBuilder { cfg, times, mode, outage, plan, obs } = self;
+        let HarnessBuilder { cfg, times, mode, outage, plan, obs, queries } = self;
         let plan = plan.unwrap_or_else(|| cfg.faults.clone());
         let mode = mode.unwrap_or_else(ComputeMode::synthetic_default);
-        Harness { cfg, times, mode, outage, plan, obs }
+        Harness { cfg, times, mode, outage, plan, obs, queries }
     }
 }
 
@@ -209,6 +228,7 @@ impl Harness {
             outage: None,
             plan: None,
             obs: None,
+            queries: None,
         }
     }
 
@@ -263,11 +283,20 @@ pub struct RunSpec {
     /// Shared registry: every scheme run records into it, labelled by
     /// scheme.
     pub obs: Option<Registry>,
+    /// Query set every scheme runs against (each thread gets a clone).
+    pub queries: Option<QuerySet>,
 }
 
 impl RunSpec {
     pub fn new(cfg: Config) -> RunSpec {
-        RunSpec { cfg, schemes: Scheme::all().to_vec(), plan: None, pjrt: false, obs: None }
+        RunSpec {
+            cfg,
+            schemes: Scheme::all().to_vec(),
+            plan: None,
+            pjrt: false,
+            obs: None,
+            queries: None,
+        }
     }
 
     pub fn schemes(mut self, schemes: &[Scheme]) -> RunSpec {
@@ -287,6 +316,11 @@ impl RunSpec {
 
     pub fn observe(mut self, reg: Registry) -> RunSpec {
         self.obs = Some(reg);
+        self
+    }
+
+    pub fn queries(mut self, queries: QuerySet) -> RunSpec {
+        self.queries = Some(queries);
         self
     }
 }
@@ -317,6 +351,7 @@ pub fn run_all_schemes(spec: &RunSpec) -> crate::Result<Vec<SchemeResult>> {
         {
             let cfg = &spec.cfg;
             let plan = &spec.plan;
+            let queries = &spec.queries;
             let pjrt = spec.pjrt;
             scope.spawn(move || {
                 *slot = Some((|| {
@@ -327,6 +362,9 @@ pub fn run_all_schemes(spec: &RunSpec) -> crate::Result<Vec<SchemeResult>> {
                     }
                     if let Some(reg) = child {
                         b = b.observe(reg.clone());
+                    }
+                    if let Some(qs) = queries {
+                        b = b.queries(qs.clone());
                     }
                     b.build().run(scheme)
                 })());

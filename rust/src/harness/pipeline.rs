@@ -25,6 +25,7 @@
 
 use crate::config::Config;
 use crate::detect::{detect, DetectConfig};
+use crate::query::QuerySet;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ModelRunner, MomentumSgd};
 use crate::sched::{BandDecision, ThresholdController};
@@ -75,33 +76,47 @@ impl ComputeMode {
         rng: &mut Rng,
     ) -> crate::Result<(bool, Option<f32>)> {
         let _ = crop; // only the PJRT arm consumes pixels
+        #[cfg(feature = "pjrt")]
+        if let ComputeMode::Pjrt(ctx) = self {
+            let probs = ctx.cloud_model.infer(&crop.data)?;
+            let best = probs[0]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(usize::MAX);
+            return Ok((best == query.index(), None));
+        }
+        let (oracle, conf) = self.judge_shared(query, truth, rng);
+        Ok((oracle, Some(conf)))
+    }
+
+    /// Oracle + confidence for a *derived* query class, without touching
+    /// compute state: N queries derive per-class results from one shared
+    /// detection. In synthetic mode this consumes the rng exactly like
+    /// [`Self::judge`] (hard examples "flip" with diluted confidence —
+    /// most land in the doubtful band where the cloud can rescue them,
+    /// some are confidently wrong, matching the paper-era calibration of
+    /// the CQ-CNN). The PJRT arm has no side-channel per-class output, so
+    /// derived classes answer with the ground truth at split confidence.
+    pub fn judge_shared(
+        &self,
+        query: ClassId,
+        truth: Option<ClassId>,
+        rng: &mut Rng,
+    ) -> (bool, f32) {
         match self {
             #[cfg(feature = "pjrt")]
-            ComputeMode::Pjrt(ctx) => {
-                let probs = ctx.cloud_model.infer(&crop.data)?;
-                let best = probs[0]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(usize::MAX);
-                Ok((best == query.index(), None))
-            }
+            ComputeMode::Pjrt(_) => (truth.is_some_and(|c| c == query), EDGE_SPLIT),
             ComputeMode::Synthetic { sharpness, edge_flip, oracle_acc } => {
-                let truth_pos = truth.map(|c| c == query).unwrap_or(false);
+                let truth_pos = truth.is_some_and(|c| c == query);
                 let oracle = if rng.bool(*oracle_acc) { truth_pos } else { !truth_pos };
-                // Hard examples ("flips") are seen as the wrong class but
-                // with diluted confidence — most land in the doubtful band
-                // (where the cloud can rescue them), some are confidently
-                // wrong (the edge-only accuracy ceiling), matching the
-                // calibration profile of the paper's CQ-CNN.
                 let (seen_as, sharp) = if rng.bool(*edge_flip) {
                     (!truth_pos, (*sharpness / 3.0).max(1.0))
                 } else {
                     (truth_pos, *sharpness)
                 };
-                let conf = synth_confidence(rng, seen_as, sharp);
-                Ok((oracle, Some(conf)))
+                (oracle, synth_confidence(rng, seen_as, sharp))
             }
         }
     }
@@ -234,6 +249,13 @@ pub trait PipelineCtx {
     /// Confidence split for a degraded (cloud-less) verdict.
     fn degrade_split(&self) -> f32 {
         EDGE_SPLIT
+    }
+
+    /// The admitted query set this substrate runs against. `None` (the
+    /// default) is the classic single-implicit-query run — no fanout, no
+    /// per-query weighting, byte-identical to pre-query builds.
+    fn query_set(&self) -> Option<&QuerySet> {
+        None
     }
 }
 
@@ -404,6 +426,34 @@ mod tests {
                 "edge-only must answer locally at confidence {conf}"
             );
         }
+    }
+
+    #[test]
+    fn judge_and_judge_shared_agree_at_the_same_seed() {
+        // The engine calls `judge` for the primary query and
+        // `judge_shared` for derived ones; both must draw the same
+        // (oracle, confidence) stream or work sharing would skew results.
+        let mut mode = ComputeMode::synthetic_default();
+        for seed in [1u64, 7, 99] {
+            for (query, truth) in
+                [(ClassId::Moped, Some(ClassId::Moped)), (ClassId::Person, Some(ClassId::Car)), (ClassId::Car, None)]
+            {
+                let crop = Image::new(2, 2);
+                let mut r1 = crate::testkit::Rng::new(seed);
+                let mut r2 = crate::testkit::Rng::new(seed);
+                let (o1, c1) = mode.judge(query, &crop, truth, &mut r1).unwrap();
+                let (o2, c2) = mode.judge_shared(query, truth, &mut r2);
+                assert_eq!(o1, o2);
+                assert_eq!(c1, Some(c2));
+                assert_eq!(r1.next_u64(), r2.next_u64(), "rng streams diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_ctx_default_has_no_query_set() {
+        let ctx = Scripted { signal: 0.0, cloud_alive: true };
+        assert!(ctx.query_set().is_none());
     }
 
     #[test]

@@ -21,7 +21,8 @@ use crate::nodes::node_alive;
 use crate::obs::Registry;
 use crate::paramdb::ParamDb;
 use crate::sched::{
-    allocate, record_allocation, BandDecision, NodeLoad, ThresholdConfig, ThresholdController,
+    allocate, record_allocation, weight_penalties, BandDecision, NodeLoad, ThresholdConfig,
+    ThresholdController,
 };
 use crate::types::NodeId;
 
@@ -47,6 +48,10 @@ pub struct RouteCtx<'a> {
     pub outage: Option<EdgeOutage>,
     /// Attached registry (allocation decisions are recorded into it).
     pub obs: Option<&'a Registry>,
+    /// eq. 7 deadline weight of the most demanding query covering this
+    /// task (1.0 without a query set — a uniform scale preserves the
+    /// argmin, so query-less routing is byte-identical).
+    pub route_weight: f64,
 }
 
 /// One scheme's behavior. Default methods encode the common case; each
@@ -124,6 +129,7 @@ impl SchemePolicy for SurveilEdgePolicy {
         if node_alive(ctx.db, 0, ctx.t) {
             cands.push(ctx.nodes[0].load(0, upload));
         }
+        weight_penalties(&mut cands, ctx.route_weight);
         let dest = allocate(&cands).unwrap_or(NodeId(ctx.home));
         if let Some(reg) = ctx.obs {
             record_allocation(reg, self.name(), dest, &cands);

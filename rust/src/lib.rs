@@ -31,6 +31,7 @@ pub mod metrics;
 pub mod nodes;
 pub mod obs;
 pub mod paramdb;
+pub mod query;
 pub mod runtime;
 pub mod sched;
 pub mod simclock;

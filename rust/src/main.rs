@@ -5,6 +5,8 @@
 //!   tables    — reproduce the paper's Tables II/III/IV (all 4 schemes,
 //!               run concurrently on scoped threads; results are
 //!               byte-identical to a sequential run at the same seed)
+//!   query     — run a multi-query spec file: admission control, shared
+//!               detect/classify work, streaming per-query results
 //!   offline   — run the offline stage (profiles, clusters, datasets)
 //!   inspect   — print the artifact manifest summary
 //!   obs-check — validate an `--obs-out` export directory
@@ -16,9 +18,10 @@ use std::path::Path;
 
 use surveiledge::config::{Config, Scheme};
 use surveiledge::coordinator::{offline_stage, OfflineConfig};
-use surveiledge::harness::{run_all_schemes, standard_mode, Harness, RunSpec};
+use surveiledge::harness::{run_all_schemes, standard_mode, Harness, RunSpec, ServiceTimes, HD_SCALE};
 use surveiledge::metrics::render_table;
 use surveiledge::obs::{self, Registry, Report};
+use surveiledge::query::{write_results, AdmissionModel, QueryFile, QueryRegistry};
 use surveiledge::runtime::json::Json;
 use surveiledge::runtime::service::InferenceService;
 use surveiledge::runtime::Manifest;
@@ -30,6 +33,7 @@ surveiledge — real-time cloud-edge video query (SurveilEdge reproduction)
 USAGE:
   surveiledge run       [--config FILE] [--scheme NAME] [--pjrt] [--duration SECS] [--obs-out DIR]
   surveiledge tables    [--setting single|homogeneous|heterogeneous] [--pjrt] [--duration SECS] [--obs-out DIR]
+  surveiledge query     [--spec FILE] [--scheme NAME] [--pjrt] [--duration SECS] [--obs-out DIR]
   surveiledge offline   [--cameras N] [--duration SECS] [--artifacts DIR] [--obs-out DIR]
   surveiledge inspect   [--artifacts DIR]
   surveiledge obs-check DIR
@@ -41,8 +45,12 @@ results and exports are identical to running them one at a time.
 --pjrt runs every classification through the PJRT artifacts (needs `make artifacts`);
 without it, calibrated synthetic confidences are used.
 --obs-out DIR writes events.jsonl (per-task stage spans), metrics.prom
-(Prometheus text exposition) and report.json (stable result schema) into DIR;
-`obs-check DIR` validates all three.";
+(Prometheus text exposition) and report.json (stable result schema) into DIR
+(created if missing); `obs-check DIR` validates all three.
+`query` runs a multi-query spec file ([[query]] blocks + [admission] headroom,
+see rust/configs/queries.toml): queries pass load-aware admission control, share one
+detect + edge-classify pass per frame, and stream per-query verdicts; with
+--obs-out DIR each query also exports a deterministic query_<id>.jsonl.";
 
 fn arg_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
@@ -70,11 +78,11 @@ fn load_config(args: &[String]) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
-/// Write the registry exports plus `report.json` into `--obs-out DIR`.
+/// Write the registry exports plus `report.json` into `--obs-out DIR`
+/// (created, including parents, if missing).
 fn write_obs(dir: &str, reg: &Registry, reports: &[Report]) -> anyhow::Result<()> {
     let dir = Path::new(dir);
-    reg.write_exports(dir)?;
-    std::fs::write(dir.join("report.json"), obs::reports_to_json(reports))?;
+    obs::write_obs_dir(dir, reg, reports)?;
     println!(
         "obs: wrote events.jsonl ({} spans), metrics.prom, report.json to {}",
         reg.event_count(),
@@ -133,6 +141,74 @@ fn cmd_tables(args: &[String]) -> anyhow::Result<()> {
     println!("{}", render_table(title, &rows));
     if let Some(dir) = obs_out {
         let reports: Vec<Report> = results.iter().map(|r| r.report()).collect();
+        write_obs(&dir, &reg, &reports)?;
+    }
+    Ok(())
+}
+
+/// Run a multi-query spec: admission control over the `[[query]]` blocks,
+/// one shared pipeline run for the admitted set, per-query streams out.
+fn cmd_query(args: &[String]) -> anyhow::Result<()> {
+    let spec_path =
+        arg_value(args, "--spec").unwrap_or_else(|| "rust/configs/queries.toml".into());
+    let qf = QueryFile::from_file(Path::new(&spec_path))?;
+    let mut cfg = qf.cfg;
+    if let Some(d) = arg_value(args, "--duration") {
+        cfg.duration = d.parse()?;
+    }
+    let scheme = arg_value(args, "--scheme")
+        .and_then(|s| Scheme::from_name(&s))
+        .unwrap_or(Scheme::SurveilEdge);
+    let obs_out = arg_value(args, "--obs-out");
+    let reg = Registry::new();
+
+    // Admission control: every query passes the projected-load gate
+    // before the run starts; rejections are reported, not fatal.
+    let model = AdmissionModel::from_config(
+        &cfg,
+        ServiceTimes::default().edge_infer,
+        24 * 24 * 3 * HD_SCALE,
+    );
+    let registry = QueryRegistry::new(model, qf.headroom);
+    registry.attach_registry(reg.clone());
+    for spec in qf.queries {
+        let id = spec.id.clone();
+        match registry.admit(spec, 0.0) {
+            Ok(()) => println!(
+                "admitted query {id:?} (projected load {:.3}, headroom {:.3})",
+                registry.projected_load(),
+                qf.headroom
+            ),
+            Err(e) => eprintln!("warning: {e:#}"),
+        }
+    }
+    anyhow::ensure!(!registry.is_empty(), "no queries admitted from {spec_path}");
+    let queries = registry.snapshot();
+
+    let mode = standard_mode(&cfg, has_flag(args, "--pjrt"))?;
+    let mut h = Harness::builder(cfg)
+        .mode(mode)
+        .observe(reg.clone())
+        .queries(queries.clone())
+        .build();
+    let r = h.run(scheme)?;
+    println!("{}", render_table("result", std::slice::from_ref(&r.row)));
+    for q in &r.per_query {
+        println!(
+            "  query {:<16} verdicts={:<6} positives={:<6} cloud={:<5} local={:<5} mean_latency={:.3}s",
+            q.name,
+            q.get("verdicts").unwrap_or(0.0),
+            q.get("positives").unwrap_or(0.0),
+            q.get("doubtful_cloud").unwrap_or(0.0),
+            q.get("doubtful_local").unwrap_or(0.0),
+            q.get("mean_latency_s").unwrap_or(0.0),
+        );
+    }
+    if let Some(dir) = obs_out {
+        let paths = write_results(Path::new(&dir), &r.query_verdicts, queries.specs())?;
+        println!("query: wrote {} per-query JSONL stream(s) to {dir}", paths.len());
+        let mut reports = vec![r.report()];
+        reports.extend(r.per_query);
         write_obs(&dir, &reg, &reports)?;
     }
     Ok(())
@@ -241,6 +317,7 @@ fn main() {
     let result = match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("tables") => cmd_tables(&args[1..]),
+        Some("query") => cmd_query(&args[1..]),
         Some("offline") => cmd_offline(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("obs-check") => cmd_obs_check(&args[1..]),

@@ -23,6 +23,7 @@ use crate::estimator::LatencyEstimator;
 use crate::harness::{classify_stage, policy_for, EdgeAction, PipelineCtx};
 use crate::metrics::{BandwidthMeter, Confusion, LatencyRecorder};
 use crate::paramdb::{ParamDb, Value};
+use crate::query::{QuerySet, QueryVerdict};
 use crate::runtime::service::ServiceHandle;
 use crate::sched::{NodeLoad, ThresholdController};
 use crate::types::{ClassId, NodeId, Task, Verdict, Where};
@@ -172,6 +173,9 @@ pub struct EdgeWorker {
     /// Slowdown multiplier (1.0 = host speed; the paper's Docker core
     /// limits become service-time multipliers here).
     pub slowdown: f64,
+    /// Active multi-query set, if any: every edge verdict additionally
+    /// fans out per-query threshold decisions on `query/<id>/results`.
+    pub queries: Option<QuerySet>,
 }
 
 impl EdgeWorker {
@@ -230,6 +234,7 @@ impl EdgeWorker {
                     Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
                     QoS::AtMostOnce,
                 );
+                self.publish_query_results(&task, confidence, v.latency, now_fn());
                 Ok(Some(v))
             }
             EdgeAction::Degrade { positive } => {
@@ -251,6 +256,7 @@ impl EdgeWorker {
                     Message::new(format!("verdict/{}", self.state.id), encode_verdict(&v)),
                     QoS::AtMostOnce,
                 );
+                self.publish_query_results(&task, confidence, v.latency, now_fn());
                 Ok(Some(v))
             }
             EdgeAction::Upload => {
@@ -265,6 +271,28 @@ impl EdgeWorker {
                     .publish(Message::new("task/cloud", payload), QoS::AtLeastOnce);
                 Ok(None)
             }
+        }
+    }
+
+    /// Work sharing on the live substrate: the one deployed CQ-specific
+    /// CNN ran exactly once for this crop; every query covering the
+    /// task's camera re-thresholds that shared confidence and streams its
+    /// own decision on `query/<id>/results`. An edge-local verdict never
+    /// paid a cloud upload, so per-query doubt resolves locally
+    /// (`shared_cloud = false` in [`QuerySpec::decide`]).
+    fn publish_query_results(&self, task: &Task, confidence: f32, latency: f64, now: f64) {
+        let Some(qs) = &self.queries else { return };
+        for (_, spec) in qs.active(task.camera, now) {
+            let (positive, site) = spec.decide(confidence, false, false);
+            qs.publish_result(&QueryVerdict {
+                query: spec.id.clone(),
+                task: task.id,
+                t: now,
+                positive,
+                confidence,
+                site,
+                latency,
+            });
         }
     }
 }
@@ -292,6 +320,10 @@ impl PipelineCtx for LiveCtx<'_> {
 
     fn cloud_alive(&self) -> bool {
         node_alive(&self.worker.db, 0, self.now)
+    }
+
+    fn query_set(&self) -> Option<&QuerySet> {
+        self.worker.queries.as_ref()
     }
 }
 

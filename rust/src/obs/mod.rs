@@ -52,6 +52,10 @@ pub enum Stage {
     Reroute,
     /// Answered edge-locally because the cloud path was unavailable.
     Degrade,
+    /// A query passed admission control and joined the registry.
+    QueryAdmit,
+    /// A query was retired from the registry.
+    QueryRetire,
 }
 
 impl Stage {
@@ -69,6 +73,9 @@ impl Stage {
     /// The fault/recovery events.
     pub const FAULT_EVENTS: [Stage; 3] = [Stage::Retry, Stage::Reroute, Stage::Degrade];
 
+    /// Query lifecycle events (emitted by `query::QueryRegistry`).
+    pub const QUERY_EVENTS: [Stage; 2] = [Stage::QueryAdmit, Stage::QueryRetire];
+
     pub fn as_str(self) -> &'static str {
         match self {
             Stage::Detect => "detect",
@@ -81,6 +88,8 @@ impl Stage {
             Stage::Retry => "retry",
             Stage::Reroute => "reroute",
             Stage::Degrade => "degrade",
+            Stage::QueryAdmit => "query_admit",
+            Stage::QueryRetire => "query_retire",
         }
     }
 
@@ -88,6 +97,7 @@ impl Stage {
         Stage::PIPELINE
             .into_iter()
             .chain(Stage::FAULT_EVENTS)
+            .chain(Stage::QUERY_EVENTS)
             .find(|stage| stage.as_str() == s)
     }
 
@@ -384,6 +394,17 @@ impl Registry {
         std::fs::write(dir.join("metrics.prom"), self.export_prometheus())?;
         Ok(())
     }
+}
+
+/// The full `--obs-out DIR` export: `events.jsonl`, `metrics.prom`, and
+/// `report.json`. Creates `dir` (and any missing parents) first, so a
+/// fresh output path never errors — every binary subcommand goes
+/// through here.
+pub fn write_obs_dir(dir: &Path, reg: &Registry, reports: &[Report]) -> crate::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    reg.write_exports(dir)?;
+    std::fs::write(dir.join("report.json"), reports_to_json(reports))?;
+    Ok(())
 }
 
 /// Deterministic number formatting shared by both exporters: Rust's
@@ -695,8 +716,11 @@ mod tests {
 
     #[test]
     fn stage_names_round_trip_and_are_unique() {
-        let all: Vec<Stage> =
-            Stage::PIPELINE.into_iter().chain(Stage::FAULT_EVENTS).collect();
+        let all: Vec<Stage> = Stage::PIPELINE
+            .into_iter()
+            .chain(Stage::FAULT_EVENTS)
+            .chain(Stage::QUERY_EVENTS)
+            .collect();
         for s in &all {
             assert_eq!(Stage::parse(s.as_str()), Some(*s));
         }
@@ -707,6 +731,9 @@ mod tests {
         assert_eq!(Stage::parse("nonsense"), None);
         assert!(Stage::Retry.is_fault_event());
         assert!(!Stage::Queue.is_fault_event());
+        assert!(!Stage::QueryAdmit.is_fault_event());
+        assert_eq!(Stage::parse("query_admit"), Some(Stage::QueryAdmit));
+        assert_eq!(Stage::parse("query_retire"), Some(Stage::QueryRetire));
     }
 
     #[test]
@@ -927,5 +954,23 @@ mod tests {
     fn node_labels() {
         assert_eq!(node_label(0), "cloud");
         assert_eq!(node_label(2), "edge2");
+    }
+
+    #[test]
+    fn write_obs_dir_creates_missing_nested_dirs() {
+        let dir = std::env::temp_dir()
+            .join(format!("surveiledge_obs_{}", std::process::id()))
+            .join("does/not/exist/yet");
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Registry::new();
+        reg.inc("surveiledge_x_total", &[("scheme", "SE")], 1);
+        let report = Report::new("scheme_run", "SE");
+        write_obs_dir(&dir, &reg, &[report]).unwrap();
+        for f in ["events.jsonl", "metrics.prom", "report.json"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+        }
+        let arr = Json::parse(&std::fs::read_to_string(dir.join("report.json")).unwrap()).unwrap();
+        assert_eq!(arr.as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

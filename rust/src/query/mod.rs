@@ -1,0 +1,1169 @@
+//! Multi-query frontend: specs, admission control, work sharing, and
+//! streaming results.
+//!
+//! SurveilEdge's point is *querying* surveillance video, yet a bare
+//! harness run answers exactly one implicit query. This module makes
+//! queries first-class:
+//!
+//! * [`QuerySpec`] — target class, camera set, `[β, α]` confidence band,
+//!   deadline class, and active time window, parsed from `[[query]]`
+//!   TOML blocks ([`QueryFile`]).
+//! * [`QueryRegistry`] — admits/retires queries at runtime. Admission is
+//!   load-aware: the projected edge + uplink utilization of the admitted
+//!   set (fed by the `estimator`'s latency predictions) must stay under a
+//!   configurable headroom.
+//! * **Work sharing** — N queries over the same camera run detection and
+//!   edge classification *once* per frame; only the per-query threshold
+//!   decision fans out from the shared result ([`TaskQueryView`],
+//!   [`QuerySpec::decide`]).
+//! * **Streaming results** — every per-query verdict is published on the
+//!   bus topic `query/<id>/results` ([`QuerySet::publish_result`]) and
+//!   exported as deterministic JSONL ([`write_results`]): same seed ⇒
+//!   byte-identical files.
+//!
+//! Both substrates use the same types: the DES engine carries
+//! [`TaskQueryView`]s on its simulated tasks and fans out at verdict
+//! time; the live `nodes::EdgeWorker` holds a [`QuerySet`] and publishes
+//! from its classify path.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::bus::{Broker, Message, QoS};
+use crate::config::toml::TomlDoc;
+use crate::config::Config;
+use crate::estimator::LatencyEstimator;
+use crate::obs::{Registry, Report, SpanEvent, Stage};
+use crate::types::{CameraId, ClassId};
+
+/// How urgently a query needs answers — its weight in eq. 7 routing.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DeadlineClass {
+    /// A user is watching; outbids everything else for fast paths.
+    Interactive,
+    /// The default: the paper's real-time query.
+    Standard,
+    /// Forensic/batch scan; happy to wait out congestion.
+    Batch,
+}
+
+impl DeadlineClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DeadlineClass::Interactive => "interactive",
+            DeadlineClass::Standard => "standard",
+            DeadlineClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeadlineClass> {
+        match s {
+            "interactive" => Some(DeadlineClass::Interactive),
+            "standard" => Some(DeadlineClass::Standard),
+            "batch" => Some(DeadlineClass::Batch),
+            _ => None,
+        }
+    }
+
+    /// Multiplier on the eq. 7 congestion penalty: > 1 makes congested
+    /// paths look worse (the query flees to fast nodes), < 1 makes them
+    /// tolerable. `Standard` is exactly the no-query behavior.
+    pub fn weight(self) -> f64 {
+        match self {
+            DeadlineClass::Interactive => 2.0,
+            DeadlineClass::Standard => 1.0,
+            DeadlineClass::Batch => 0.5,
+        }
+    }
+}
+
+/// One continuous query: "find `object` on `cameras` between `from` and
+/// `until`, deciding locally outside the `[beta, alpha]` doubt band".
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuerySpec {
+    /// Unique id — also the bus topic segment (`query/<id>/results`), so
+    /// it is restricted to `[A-Za-z0-9_-]`.
+    pub id: String,
+    pub object: ClassId,
+    /// Cameras this query watches; empty = every camera.
+    pub cameras: Vec<CameraId>,
+    /// Upper band edge: confidence ≥ α answers positive at the edge.
+    pub alpha: f64,
+    /// Lower band edge: confidence ≤ β answers negative at the edge.
+    pub beta: f64,
+    pub deadline: DeadlineClass,
+    /// Active window start (scenario seconds, inclusive).
+    pub from: f64,
+    /// Active window end (exclusive; `f64::INFINITY` = never retires).
+    pub until: f64,
+}
+
+impl QuerySpec {
+    /// A standard always-on query over every camera with the paper's
+    /// initial band (α₀ = 0.8, β₀ = 0.1).
+    pub fn new(id: &str, object: ClassId) -> QuerySpec {
+        QuerySpec {
+            id: id.to_string(),
+            object,
+            cameras: Vec::new(),
+            alpha: 0.8,
+            beta: 0.1,
+            deadline: DeadlineClass::Standard,
+            from: 0.0,
+            until: f64::INFINITY,
+        }
+    }
+
+    pub fn covers(&self, camera: CameraId) -> bool {
+        self.cameras.is_empty() || self.cameras.contains(&camera)
+    }
+
+    pub fn active_at(&self, t: f64) -> bool {
+        t >= self.from && t < self.until
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            !self.id.is_empty()
+                && self.id.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_'),
+            "query id {:?} must be non-empty [A-Za-z0-9_-] (it names a bus topic)",
+            self.id
+        );
+        anyhow::ensure!(
+            (0.5..=1.0).contains(&self.alpha),
+            "query {:?}: alpha {} outside [0.5, 1]",
+            self.id,
+            self.alpha
+        );
+        anyhow::ensure!(
+            self.beta >= 0.0 && self.beta < self.alpha,
+            "query {:?}: beta {} outside [0, alpha)",
+            self.id,
+            self.beta
+        );
+        anyhow::ensure!(
+            self.from >= 0.0 && self.until > self.from,
+            "query {:?}: window [{}, {}) is empty or negative",
+            self.id,
+            self.from,
+            self.until
+        );
+        Ok(())
+    }
+
+    /// Per-query threshold decision on the *shared* edge confidence.
+    /// Returns `(positive, site)` where site ∈ {"edge", "cloud", "local"}:
+    ///
+    /// * confidence ≥ α → positive at the edge;
+    /// * confidence ≤ β → negative at the edge;
+    /// * doubtful: if the shared task was resolved by the cloud
+    ///   (`shared_cloud`), adopt the oracle answer ("cloud"); otherwise
+    ///   fall back to a local 0.5 split ("local") — the shared pipeline
+    ///   did not pay an upload for this frame, so neither may the query.
+    pub fn decide(&self, confidence: f32, oracle: bool, shared_cloud: bool) -> (bool, &'static str) {
+        if confidence as f64 >= self.alpha {
+            (true, "edge")
+        } else if confidence as f64 <= self.beta {
+            (false, "edge")
+        } else if shared_cloud {
+            (oracle, "cloud")
+        } else {
+            (confidence >= 0.5, "local")
+        }
+    }
+}
+
+/// A query's view of one shared task: which registered query (index into
+/// the sorted [`QuerySet`]) and the shared per-class inference result it
+/// will threshold. Computed once at capture; the decision fans out at
+/// verdict time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskQueryView {
+    /// Index into [`QuerySet::specs`] (sorted by id).
+    pub query: usize,
+    /// Shared edge confidence for this query's object class.
+    pub confidence: f32,
+    /// What the cloud model would answer for this query's object class.
+    pub oracle: bool,
+}
+
+/// One entry of a query's incremental result stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryVerdict {
+    pub query: String,
+    pub task: u64,
+    /// Simulated/wall time the verdict was produced.
+    pub t: f64,
+    pub positive: bool,
+    /// The shared edge confidence this decision thresholded.
+    pub confidence: f32,
+    /// Where the decision came from: "edge", "cloud", or "local".
+    pub site: &'static str,
+    /// End-to-end latency of the shared task (seconds).
+    pub latency: f64,
+}
+
+fn site_code(site: &str) -> u8 {
+    match site {
+        "edge" => 0,
+        "cloud" => 1,
+        _ => 2,
+    }
+}
+
+fn site_from_code(code: u8) -> &'static str {
+    match code {
+        0 => "edge",
+        1 => "cloud",
+        _ => "local",
+    }
+}
+
+/// Wire encoding for `query/<id>/results` payloads (little-endian, fixed
+/// layout — deterministic byte-for-byte).
+pub fn encode_query_verdict(v: &QueryVerdict) -> Vec<u8> {
+    let id = v.query.as_bytes();
+    let mut out = Vec::with_capacity(2 + id.len() + 8 + 8 + 8 + 4 + 2);
+    out.extend_from_slice(&(id.len() as u16).to_le_bytes());
+    out.extend_from_slice(id);
+    out.extend_from_slice(&v.task.to_le_bytes());
+    out.extend_from_slice(&v.t.to_le_bytes());
+    out.extend_from_slice(&v.latency.to_le_bytes());
+    out.extend_from_slice(&v.confidence.to_le_bytes());
+    out.push(u8::from(v.positive));
+    out.push(site_code(v.site));
+    out
+}
+
+pub fn decode_query_verdict(bytes: &[u8]) -> crate::Result<QueryVerdict> {
+    let take = |b: &[u8], at: usize, n: usize| -> crate::Result<Vec<u8>> {
+        anyhow::ensure!(b.len() >= at + n, "query verdict frame truncated at byte {at}");
+        Ok(b[at..at + n].to_vec())
+    };
+    let id_len = u16::from_le_bytes(take(bytes, 0, 2)?.try_into().unwrap()) as usize;
+    let id = String::from_utf8(take(bytes, 2, id_len)?)
+        .map_err(|_| anyhow::anyhow!("query verdict id is not UTF-8"))?;
+    let mut at = 2 + id_len;
+    let task = u64::from_le_bytes(take(bytes, at, 8)?.try_into().unwrap());
+    at += 8;
+    let t = f64::from_le_bytes(take(bytes, at, 8)?.try_into().unwrap());
+    at += 8;
+    let latency = f64::from_le_bytes(take(bytes, at, 8)?.try_into().unwrap());
+    at += 8;
+    let confidence = f32::from_le_bytes(take(bytes, at, 4)?.try_into().unwrap());
+    at += 4;
+    let flags = take(bytes, at, 2)?;
+    anyhow::ensure!(bytes.len() == at + 2, "query verdict frame has trailing bytes");
+    Ok(QueryVerdict {
+        query: id,
+        task,
+        t,
+        positive: flags[0] != 0,
+        confidence,
+        site: site_from_code(flags[1]),
+        latency,
+    })
+}
+
+/// The admitted queries a pipeline run executes against, sorted by id so
+/// every admission order yields the same set (and the same indices for
+/// [`TaskQueryView::query`]).
+#[derive(Clone, Default)]
+pub struct QuerySet {
+    specs: Vec<QuerySpec>,
+    broker: Option<Broker>,
+}
+
+impl QuerySet {
+    pub fn new(mut specs: Vec<QuerySpec>) -> crate::Result<QuerySet> {
+        for s in &specs {
+            s.validate()?;
+        }
+        specs.sort_by(|a, b| a.id.cmp(&b.id));
+        for pair in specs.windows(2) {
+            anyhow::ensure!(pair[0].id != pair[1].id, "duplicate query id {:?}", pair[0].id);
+        }
+        Ok(QuerySet { specs, broker: None })
+    }
+
+    /// Attach a broker: every verdict fans out to `query/<id>/results`.
+    pub fn with_broker(mut self, broker: Broker) -> QuerySet {
+        self.broker = Some(broker);
+        self
+    }
+
+    pub fn specs(&self) -> &[QuerySpec] {
+        &self.specs
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Queries covering `camera` and active at `t`, with their indices.
+    pub fn active(&self, camera: CameraId, t: f64) -> impl Iterator<Item = (usize, &QuerySpec)> {
+        self.specs
+            .iter()
+            .enumerate()
+            .filter(move |(_, s)| s.covers(camera) && s.active_at(t))
+    }
+
+    /// eq. 7 routing weight for a task from `camera` at `t`: the most
+    /// demanding active query's deadline weight (1.0 when no query is
+    /// active — identical to a query-less run).
+    pub fn route_weight(&self, camera: CameraId, t: f64) -> f64 {
+        self.active(camera, t)
+            .map(|(_, s)| s.deadline.weight())
+            .fold(None, |acc: Option<f64>, w| Some(acc.map_or(w, |a| a.max(w))))
+            .unwrap_or(1.0)
+    }
+
+    /// Publish one verdict on `query/<id>/results` (QoS 0 — results are
+    /// a stream; a full subscriber queue drops, it never stalls the
+    /// pipeline).
+    pub fn publish_result(&self, v: &QueryVerdict) {
+        if let Some(b) = &self.broker {
+            let topic = format!("query/{}/results", v.query);
+            b.publish(Message::new(topic, encode_query_verdict(v)), QoS::AtMostOnce);
+        }
+    }
+
+    /// One stable [`Report`] per query (in id order) summarizing its
+    /// verdict stream.
+    pub fn per_query_reports(&self, verdicts: &[QueryVerdict]) -> Vec<Report> {
+        self.specs
+            .iter()
+            .map(|spec| {
+                let mut r = Report::new("query_run", &spec.id);
+                let mine: Vec<&QueryVerdict> =
+                    verdicts.iter().filter(|v| v.query == spec.id).collect();
+                let positives = mine.iter().filter(|v| v.positive).count();
+                let cloud = mine.iter().filter(|v| v.site == "cloud").count();
+                let local = mine.iter().filter(|v| v.site == "local").count();
+                let lat_sum: f64 = mine.iter().map(|v| v.latency).sum();
+                r.push("verdicts", mine.len() as f64);
+                r.push("positives", positives as f64);
+                r.push("negatives", (mine.len() - positives) as f64);
+                r.push("doubtful_cloud", cloud as f64);
+                r.push("doubtful_local", local as f64);
+                r.push(
+                    "mean_latency_s",
+                    if mine.is_empty() { 0.0 } else { lat_sum / mine.len() as f64 },
+                );
+                r
+            })
+            .collect()
+    }
+}
+
+/// Deterministic JSONL rendering of one query's verdict stream (fixed
+/// key order; non-finite numbers render as 0).
+pub fn verdicts_jsonl(verdicts: &[QueryVerdict], id: &str) -> String {
+    fn jf64(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "0".to_string()
+        }
+    }
+    fn jf32(v: f32) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "0".to_string()
+        }
+    }
+    let mut out = String::new();
+    for v in verdicts.iter().filter(|v| v.query == id) {
+        out.push_str(&format!(
+            "{{\"query\":\"{}\",\"task\":{},\"t\":{},\"positive\":{},\"confidence\":{},\"site\":\"{}\",\"latency\":{}}}\n",
+            v.query,
+            v.task,
+            jf64(v.t),
+            v.positive,
+            jf32(v.confidence),
+            v.site,
+            jf64(v.latency)
+        ));
+    }
+    out
+}
+
+/// Write one `query_<id>.jsonl` per spec into `dir` (created if missing;
+/// empty streams still produce an empty file so reruns are comparable
+/// file-by-file). Returns the written paths in id order.
+pub fn write_results(
+    dir: &Path,
+    verdicts: &[QueryVerdict],
+    specs: &[QuerySpec],
+) -> crate::Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let path = dir.join(format!("query_{}.jsonl", spec.id));
+        std::fs::write(&path, verdicts_jsonl(verdicts, &spec.id))?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// Load model behind admission control: projected utilization of the
+/// edge fleet and the uplink as a function of how many cameras the
+/// admitted queries collectively watch. Latencies come from the
+/// `estimator` so the projection tracks the observed system.
+#[derive(Clone, Debug)]
+pub struct AdmissionModel {
+    /// Mean crops (classification tasks) per camera per sampling tick.
+    pub crops_per_tick: f64,
+    /// Query sampling interval `s` (seconds).
+    pub interval: f64,
+    /// Cameras in the deployment (an empty-`cameras` query watches all).
+    pub total_cameras: u32,
+    /// Σ edge speed factors — task-per-`edge_infer`-second capacity unit.
+    pub edge_capacity: f64,
+    /// Fraction of crops that land in the doubt band and ship uplink.
+    pub upload_fraction: f64,
+    edge_est: LatencyEstimator,
+    uplink_est: LatencyEstimator,
+}
+
+impl AdmissionModel {
+    /// `edge_infer` seeds the edge latency estimate (use
+    /// `ServiceTimes::default().edge_infer`); the uplink estimate seeds
+    /// from one crop's wire time on the configured uplink.
+    pub fn from_config(cfg: &Config, edge_infer: f64, crop_wire_bytes: u64) -> AdmissionModel {
+        AdmissionModel {
+            crops_per_tick: 1.5,
+            interval: cfg.interval,
+            total_cameras: cfg.total_cameras(),
+            edge_capacity: cfg.edges.iter().map(|e| e.speed).sum::<f64>().max(1e-9),
+            upload_fraction: 0.35,
+            edge_est: LatencyEstimator::new(edge_infer),
+            uplink_est: LatencyEstimator::new(
+                crop_wire_bytes as f64 / (cfg.uplink_mbps * 125_000.0),
+            ),
+        }
+    }
+
+    /// Feed an observed edge inference latency (tightens the projection).
+    pub fn observe_edge(&mut self, t: f64) {
+        self.edge_est.observe(t);
+    }
+
+    /// Feed an observed uplink transfer latency.
+    pub fn observe_uplink(&mut self, t: f64) {
+        self.uplink_est.observe(t);
+    }
+
+    /// Projected utilization when the admitted queries watch `cameras`
+    /// distinct cameras: the max of edge-compute and uplink load, each a
+    /// dimensionless busy fraction (1.0 = saturated).
+    pub fn utilization(&self, cameras: u32) -> f64 {
+        let rate = cameras as f64 * self.crops_per_tick / self.interval;
+        let edge = rate * self.edge_est.estimate() / self.edge_capacity;
+        let uplink = rate * self.upload_fraction * self.uplink_est.estimate();
+        edge.max(uplink)
+    }
+}
+
+struct RegInner {
+    specs: Vec<QuerySpec>,
+    model: AdmissionModel,
+    headroom: f64,
+    broker: Option<Broker>,
+    obs: Option<Registry>,
+}
+
+/// Runtime query lifecycle: admit (with load-aware rejection) and
+/// retire. Clones share state, so the registry can be polled from the
+/// harness while a control plane admits/retires concurrently.
+#[derive(Clone)]
+pub struct QueryRegistry {
+    inner: Arc<Mutex<RegInner>>,
+}
+
+impl QueryRegistry {
+    pub fn new(model: AdmissionModel, headroom: f64) -> QueryRegistry {
+        QueryRegistry {
+            inner: Arc::new(Mutex::new(RegInner {
+                specs: Vec::new(),
+                model,
+                headroom,
+                broker: None,
+                obs: None,
+            })),
+        }
+    }
+
+    /// Lifecycle events (`query/<id>/admitted|retired`) go on this bus.
+    pub fn attach_broker(&self, broker: Broker) {
+        self.inner.lock().unwrap().broker = Some(broker);
+    }
+
+    /// `query_admit`/`query_retire` spans + counters go here.
+    pub fn attach_registry(&self, reg: Registry) {
+        self.inner.lock().unwrap().obs = Some(reg);
+    }
+
+    /// Distinct cameras the given specs collectively watch (a spec with
+    /// an empty camera set watches all `total_cameras`).
+    fn union_cameras(specs: &[QuerySpec], total: u32) -> u32 {
+        if specs.iter().any(|s| s.cameras.is_empty()) {
+            return total;
+        }
+        let distinct: BTreeSet<CameraId> =
+            specs.iter().flat_map(|s| s.cameras.iter().copied()).collect();
+        (distinct.len() as u32).min(total)
+    }
+
+    /// Admit `spec` at time `now`. Rejects invalid specs, duplicate ids,
+    /// and any admission that would push the projected load over the
+    /// headroom — the error names the query and both load numbers.
+    pub fn admit(&self, spec: QuerySpec, now: f64) -> crate::Result<()> {
+        spec.validate()?;
+        let mut inner = self.inner.lock().unwrap();
+        anyhow::ensure!(
+            !inner.specs.iter().any(|s| s.id == spec.id),
+            "query {:?} is already admitted",
+            spec.id
+        );
+        let mut proposed: Vec<QuerySpec> = inner.specs.clone();
+        proposed.push(spec.clone());
+        let cams = Self::union_cameras(&proposed, inner.model.total_cameras);
+        let load = inner.model.utilization(cams);
+        anyhow::ensure!(
+            load <= inner.headroom,
+            "admission rejected for query {:?}: projected load {:.3} exceeds headroom {:.3}",
+            spec.id,
+            load,
+            inner.headroom
+        );
+        let at = inner.specs.partition_point(|s| s.id < spec.id);
+        inner.specs.insert(at, spec.clone());
+        if let Some(obs) = &inner.obs {
+            obs.span(SpanEvent {
+                t: now,
+                task: 0,
+                stage: Stage::QueryAdmit,
+                node: 0,
+                dur: 0.0,
+                scheme: "registry".to_string(),
+                detail: spec.id.clone(),
+            });
+            obs.inc("surveiledge_query_admitted_total", &[("query", &spec.id)], 1);
+        }
+        if let Some(b) = &inner.broker {
+            b.publish(
+                Message::new(format!("query/{}/admitted", spec.id), Vec::new()),
+                QoS::AtMostOnce,
+            );
+        }
+        Ok(())
+    }
+
+    /// Retire query `id` at time `now`. Unknown ids are an error.
+    pub fn retire(&self, id: &str, now: f64) -> crate::Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        let at = inner
+            .specs
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| anyhow::anyhow!("cannot retire unknown query {id:?}"))?;
+        inner.specs.remove(at);
+        if let Some(obs) = &inner.obs {
+            obs.span(SpanEvent {
+                t: now,
+                task: 0,
+                stage: Stage::QueryRetire,
+                node: 0,
+                dur: 0.0,
+                scheme: "registry".to_string(),
+                detail: id.to_string(),
+            });
+            obs.inc("surveiledge_query_retired_total", &[("query", id)], 1);
+        }
+        if let Some(b) = &inner.broker {
+            b.publish(Message::new(format!("query/{id}/retired"), Vec::new()), QoS::AtMostOnce);
+        }
+        Ok(())
+    }
+
+    /// Projected utilization of the currently admitted set.
+    pub fn projected_load(&self) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        let cams = Self::union_cameras(&inner.specs, inner.model.total_cameras);
+        inner.model.utilization(cams)
+    }
+
+    /// Feed an observed edge inference latency into the admission model.
+    pub fn observe_edge(&self, t: f64) {
+        self.inner.lock().unwrap().model.observe_edge(t);
+    }
+
+    /// Feed an observed uplink transfer latency into the admission model.
+    pub fn observe_uplink(&self, t: f64) {
+        self.inner.lock().unwrap().model.observe_uplink(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().specs.is_empty()
+    }
+
+    /// An immutable [`QuerySet`] of the currently admitted queries (the
+    /// pipeline runs against snapshots, never the live registry).
+    pub fn snapshot(&self) -> QuerySet {
+        let inner = self.inner.lock().unwrap();
+        QuerySet { specs: inner.specs.clone(), broker: inner.broker.clone() }
+    }
+}
+
+/// Allowed keys of a `[[query]]` block — anything else is a named-key
+/// error (satellite: no silent ignoring).
+pub const QUERY_BLOCK_KEYS: [&str; 8] =
+    ["id", "object", "cameras", "alpha", "beta", "deadline", "from", "until"];
+
+/// A parsed `--spec` file: base scenario [`Config`] + `[[query]]` blocks
+/// + `[admission]` headroom.
+#[derive(Clone)]
+pub struct QueryFile {
+    pub cfg: Config,
+    pub queries: Vec<QuerySpec>,
+    /// Admission headroom (max projected utilization; default 0.8).
+    pub headroom: f64,
+}
+
+impl QueryFile {
+    pub fn parse(text: &str) -> crate::Result<QueryFile> {
+        let cfg = Config::from_toml(text)?;
+        let doc = TomlDoc::parse(text)?;
+        let mut queries = Vec::new();
+        for (i, block) in doc.blocks("query").enumerate() {
+            let nth = i + 1;
+            let id = block
+                .get_str("id")
+                .ok_or_else(|| anyhow::anyhow!("[[query]] block {nth}: missing id"))?;
+            let ctx = format!("[[query]] block {nth} ({id:?})");
+            block.ensure_keys(&ctx, &QUERY_BLOCK_KEYS)?;
+            let object_name = block
+                .get_str("object")
+                .ok_or_else(|| anyhow::anyhow!("{ctx}: missing object"))?;
+            let object = ClassId::from_name(&object_name)
+                .ok_or_else(|| anyhow::anyhow!("{ctx}: unknown object {object_name:?}"))?;
+            let mut spec = QuerySpec::new(&id, object);
+            if let Some(cams) = block.get_i64_array("cameras") {
+                for c in &cams {
+                    anyhow::ensure!(*c >= 0, "{ctx}: negative camera id {c}");
+                }
+                spec.cameras = cams.iter().map(|&c| CameraId(c as u32)).collect();
+            } else if block.get("cameras").is_some() {
+                anyhow::bail!("{ctx}: cameras must be an integer array");
+            }
+            if let Some(v) = block.get_f64("alpha") {
+                spec.alpha = v;
+            }
+            if let Some(v) = block.get_f64("beta") {
+                spec.beta = v;
+            }
+            if let Some(d) = block.get_str("deadline") {
+                spec.deadline = DeadlineClass::parse(&d)
+                    .ok_or_else(|| anyhow::anyhow!("{ctx}: unknown deadline class {d:?}"))?;
+            }
+            if let Some(v) = block.get_f64("from") {
+                spec.from = v;
+            }
+            if let Some(v) = block.get_f64("until") {
+                spec.until = v;
+            }
+            spec.validate().map_err(|e| anyhow::anyhow!("{ctx}: {e}"))?;
+            anyhow::ensure!(
+                !queries.iter().any(|q: &QuerySpec| q.id == spec.id),
+                "{ctx}: duplicate query id {:?}",
+                spec.id
+            );
+            queries.push(spec);
+        }
+        let headroom = doc.get_f64("admission", "headroom").unwrap_or(0.8);
+        anyhow::ensure!(headroom > 0.0, "admission.headroom must be positive");
+        Ok(QueryFile { cfg, queries, headroom })
+    }
+
+    pub fn from_file(path: &Path) -> crate::Result<QueryFile> {
+        let text = std::fs::read_to_string(path)?;
+        QueryFile::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Rng};
+
+    fn spec(id: &str, object: ClassId, cams: &[u32]) -> QuerySpec {
+        let mut s = QuerySpec::new(id, object);
+        s.cameras = cams.iter().map(|&c| CameraId(c)).collect();
+        s
+    }
+
+    fn model_for(cfg: &Config) -> AdmissionModel {
+        AdmissionModel::from_config(cfg, 0.28, 24 * 24 * 3 * 225)
+    }
+
+    #[test]
+    fn spec_validation() {
+        assert!(QuerySpec::new("ok-id_1", ClassId::Moped).validate().is_ok());
+        assert!(QuerySpec::new("", ClassId::Moped).validate().is_err());
+        assert!(QuerySpec::new("bad/slash", ClassId::Moped).validate().is_err());
+        let mut s = QuerySpec::new("q", ClassId::Moped);
+        s.alpha = 0.4; // below the 0.5 split
+        assert!(s.validate().is_err());
+        let mut s = QuerySpec::new("q", ClassId::Moped);
+        s.beta = 0.9; // >= alpha
+        assert!(s.validate().is_err());
+        let mut s = QuerySpec::new("q", ClassId::Moped);
+        s.from = 10.0;
+        s.until = 10.0; // empty window
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn decide_bands_and_doubt_resolution() {
+        let s = QuerySpec::new("q", ClassId::Moped);
+        assert_eq!(s.decide(0.9, false, false), (true, "edge"));
+        assert_eq!(s.decide(0.05, true, true), (false, "edge"));
+        // Doubtful + shared task went to the cloud: adopt the oracle.
+        assert_eq!(s.decide(0.5, true, true), (true, "cloud"));
+        assert_eq!(s.decide(0.5, false, true), (false, "cloud"));
+        // Doubtful + no shared upload: local 0.5 split.
+        assert_eq!(s.decide(0.6, true, false), (true, "local"));
+        assert_eq!(s.decide(0.4, true, false), (false, "local"));
+    }
+
+    #[test]
+    fn deadline_weights_and_parse() {
+        for d in [DeadlineClass::Interactive, DeadlineClass::Standard, DeadlineClass::Batch] {
+            assert_eq!(DeadlineClass::parse(d.as_str()), Some(d));
+        }
+        assert_eq!(DeadlineClass::parse("soon"), None);
+        assert!(DeadlineClass::Interactive.weight() > DeadlineClass::Standard.weight());
+        assert!(DeadlineClass::Batch.weight() < DeadlineClass::Standard.weight());
+        assert_eq!(DeadlineClass::Standard.weight(), 1.0);
+    }
+
+    #[test]
+    fn query_set_sorts_and_filters() {
+        let qs = QuerySet::new(vec![
+            spec("zeta", ClassId::Person, &[1]),
+            spec("alpha", ClassId::Moped, &[0, 1]),
+        ])
+        .unwrap();
+        assert_eq!(qs.specs()[0].id, "alpha");
+        assert_eq!(qs.specs()[1].id, "zeta");
+        let on_cam0: Vec<&str> =
+            qs.active(CameraId(0), 5.0).map(|(_, s)| s.id.as_str()).collect();
+        assert_eq!(on_cam0, vec!["alpha"]);
+        let on_cam1: Vec<&str> =
+            qs.active(CameraId(1), 5.0).map(|(_, s)| s.id.as_str()).collect();
+        assert_eq!(on_cam1, vec!["alpha", "zeta"]);
+        assert!(QuerySet::new(vec![
+            spec("dup", ClassId::Moped, &[]),
+            spec("dup", ClassId::Person, &[]),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn time_windows_gate_activity() {
+        let mut s = spec("windowed", ClassId::Moped, &[0]);
+        s.from = 10.0;
+        s.until = 20.0;
+        let qs = QuerySet::new(vec![s]).unwrap();
+        assert_eq!(qs.active(CameraId(0), 5.0).count(), 0);
+        assert_eq!(qs.active(CameraId(0), 10.0).count(), 1);
+        assert_eq!(qs.active(CameraId(0), 19.9).count(), 1);
+        assert_eq!(qs.active(CameraId(0), 20.0).count(), 0);
+    }
+
+    #[test]
+    fn route_weight_takes_most_demanding_active_query() {
+        let mut a = spec("a", ClassId::Moped, &[0]);
+        a.deadline = DeadlineClass::Batch;
+        let mut b = spec("b", ClassId::Person, &[0]);
+        b.deadline = DeadlineClass::Interactive;
+        let qs = QuerySet::new(vec![a, b]).unwrap();
+        assert_eq!(qs.route_weight(CameraId(0), 1.0), 2.0);
+        // No active query on camera 1 -> neutral weight.
+        assert_eq!(qs.route_weight(CameraId(1), 1.0), 1.0);
+        // A lone batch query really does bid below neutral.
+        let mut lone = spec("lone", ClassId::Moped, &[3]);
+        lone.deadline = DeadlineClass::Batch;
+        let qs = QuerySet::new(vec![lone]).unwrap();
+        assert_eq!(qs.route_weight(CameraId(3), 1.0), 0.5);
+    }
+
+    #[test]
+    fn verdict_encode_decode_roundtrip() {
+        for site in ["edge", "cloud", "local"] {
+            let v = QueryVerdict {
+                query: "amber-moped".to_string(),
+                task: 421,
+                t: 17.25,
+                positive: site != "cloud",
+                confidence: 0.625,
+                site,
+                latency: 0.375,
+            };
+            let decoded = decode_query_verdict(&encode_query_verdict(&v)).unwrap();
+            assert_eq!(decoded, v);
+        }
+        assert!(decode_query_verdict(&[1, 0]).is_err());
+        let mut bytes = encode_query_verdict(&QueryVerdict {
+            query: "q".into(),
+            task: 1,
+            t: 0.0,
+            positive: true,
+            confidence: 0.5,
+            site: "edge",
+            latency: 0.0,
+        });
+        bytes.push(0); // trailing garbage
+        assert!(decode_query_verdict(&bytes).is_err());
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_filtered() {
+        let verdicts = vec![
+            QueryVerdict {
+                query: "a".into(),
+                task: 1,
+                t: 1.5,
+                positive: true,
+                confidence: 0.9,
+                site: "edge",
+                latency: 0.25,
+            },
+            QueryVerdict {
+                query: "b".into(),
+                task: 1,
+                t: 1.5,
+                positive: false,
+                confidence: 0.2,
+                site: "local",
+                latency: 0.25,
+            },
+        ];
+        let a1 = verdicts_jsonl(&verdicts, "a");
+        let a2 = verdicts_jsonl(&verdicts, "a");
+        assert_eq!(a1, a2);
+        assert_eq!(
+            a1,
+            "{\"query\":\"a\",\"task\":1,\"t\":1.5,\"positive\":true,\"confidence\":0.9,\"site\":\"edge\",\"latency\":0.25}\n"
+        );
+        assert!(!verdicts_jsonl(&verdicts, "b").contains("\"query\":\"a\""));
+        assert_eq!(verdicts_jsonl(&verdicts, "missing"), "");
+    }
+
+    #[test]
+    fn per_query_reports_in_id_order() {
+        let qs = QuerySet::new(vec![
+            spec("b", ClassId::Person, &[]),
+            spec("a", ClassId::Moped, &[]),
+        ])
+        .unwrap();
+        let verdicts = vec![
+            QueryVerdict {
+                query: "a".into(),
+                task: 1,
+                t: 1.0,
+                positive: true,
+                confidence: 0.9,
+                site: "edge",
+                latency: 0.2,
+            },
+            QueryVerdict {
+                query: "a".into(),
+                task: 2,
+                t: 2.0,
+                positive: false,
+                confidence: 0.5,
+                site: "cloud",
+                latency: 0.4,
+            },
+        ];
+        let reports = qs.per_query_reports(&verdicts);
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].name, "a");
+        assert_eq!(reports[0].kind, "query_run");
+        assert_eq!(reports[0].get("verdicts"), Some(2.0));
+        assert_eq!(reports[0].get("positives"), Some(1.0));
+        assert_eq!(reports[0].get("doubtful_cloud"), Some(1.0));
+        assert!((reports[0].get("mean_latency_s").unwrap() - 0.3).abs() < 1e-12);
+        assert_eq!(reports[1].name, "b");
+        assert_eq!(reports[1].get("verdicts"), Some(0.0));
+        assert_eq!(reports[1].get("mean_latency_s"), Some(0.0));
+    }
+
+    #[test]
+    fn admission_model_utilization_scales_with_cameras() {
+        let m = model_for(&Config::single_edge());
+        assert_eq!(m.utilization(0), 0.0);
+        let u1 = m.utilization(1);
+        let u4 = m.utilization(4);
+        assert!(u1 > 0.0);
+        assert!((u4 - 4.0 * u1).abs() < 1e-9, "linear in cameras: {u4} vs {u1}");
+    }
+
+    #[test]
+    fn registry_rejects_over_headroom_with_named_error() {
+        let cfg = Config::single_edge(); // 4 cameras, 1 edge
+        let m = model_for(&cfg);
+        // Headroom below the single-camera load: nothing fits.
+        let tight = QueryRegistry::new(m.clone(), m.utilization(1) * 0.5);
+        let err = tight.admit(spec("greedy", ClassId::Moped, &[0]), 0.0).unwrap_err().to_string();
+        assert!(err.contains("greedy"), "{err}");
+        assert!(err.contains("headroom"), "{err}");
+        assert!(tight.is_empty());
+        // Headroom for one camera but not two.
+        let mid = QueryRegistry::new(m.clone(), m.utilization(1) * 1.5);
+        mid.admit(spec("first", ClassId::Moped, &[0]), 0.0).unwrap();
+        assert!(mid.admit(spec("second", ClassId::Person, &[1]), 1.0).is_err());
+        // Same camera: no new load, fits.
+        mid.admit(spec("shared", ClassId::Person, &[0]), 2.0).unwrap();
+        assert_eq!(mid.len(), 2);
+    }
+
+    #[test]
+    fn registry_duplicate_and_unknown_ids() {
+        let cfg = Config::single_edge();
+        let reg = QueryRegistry::new(model_for(&cfg), 1e9);
+        reg.admit(spec("q", ClassId::Moped, &[0]), 0.0).unwrap();
+        assert!(reg.admit(spec("q", ClassId::Person, &[1]), 1.0).is_err());
+        assert!(reg.retire("nope", 2.0).is_err());
+        reg.retire("q", 3.0).unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn registry_emits_spans_counters_and_bus_events() {
+        let cfg = Config::single_edge();
+        let reg = QueryRegistry::new(model_for(&cfg), 1e9);
+        let obs = Registry::new();
+        let broker = Broker::new();
+        let (rx, _id) = broker.subscribe("query/+/admitted", 8);
+        let (rx_ret, _id2) = broker.subscribe("query/+/retired", 8);
+        reg.attach_registry(obs.clone());
+        reg.attach_broker(broker);
+        reg.admit(spec("q1", ClassId::Moped, &[0]), 5.0).unwrap();
+        reg.retire("q1", 9.0).unwrap();
+        assert_eq!(obs.counter("surveiledge_query_admitted_total", &[("query", "q1")]), 1);
+        assert_eq!(obs.counter("surveiledge_query_retired_total", &[("query", "q1")]), 1);
+        let events = obs.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].stage, Stage::QueryAdmit);
+        assert_eq!(events[0].detail, "q1");
+        assert_eq!(events[0].t, 5.0);
+        assert_eq!(events[1].stage, Stage::QueryRetire);
+        assert_eq!(events[1].t, 9.0);
+        assert_eq!(rx.try_recv().unwrap().topic, "query/q1/admitted");
+        assert_eq!(rx_ret.try_recv().unwrap().topic, "query/q1/retired");
+    }
+
+    #[test]
+    fn prop_admitted_load_never_exceeds_headroom() {
+        check("query::admitted_load_under_headroom", |rng, _case| {
+            let cfg = Config::homogeneous(); // 12 cameras
+            let m = model_for(&cfg);
+            let headroom = m.utilization(1) * rng.range_f64(0.5, 14.0);
+            let reg = QueryRegistry::new(m, headroom);
+            for i in 0..rng.range_usize(1, 10) {
+                let n_cams = rng.range_usize(0, 4);
+                let cams: Vec<u32> =
+                    (0..n_cams).map(|_| rng.range_usize(0, 12) as u32).collect();
+                let _ = reg.admit(
+                    spec(&format!("q{i}"), ClassId::Moped, &cams),
+                    i as f64,
+                );
+                assert!(
+                    reg.projected_load() <= headroom + 1e-9,
+                    "load {} > headroom {headroom}",
+                    reg.projected_load()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_admission_order_independent_when_all_fit() {
+        check("query::admission_order_independent", |rng, _case| {
+            let cfg = Config::homogeneous();
+            let m = model_for(&cfg);
+            // Headroom above the whole-fleet load: any subset fits, so
+            // every admit order must admit everything.
+            let reg_hdr = m.utilization(cfg.total_cameras()) + 1.0;
+            let n = rng.range_usize(2, 6);
+            let mut specs: Vec<QuerySpec> = (0..n)
+                .map(|i| {
+                    let cams: Vec<u32> =
+                        (0..rng.range_usize(0, 3)).map(|_| rng.range_usize(0, 12) as u32).collect();
+                    spec(&format!("q{i}"), ClassId::Moped, &cams)
+                })
+                .collect();
+            let reg_a = QueryRegistry::new(m.clone(), reg_hdr);
+            for s in &specs {
+                reg_a.admit(s.clone(), 0.0).unwrap();
+            }
+            rng.shuffle(&mut specs);
+            let reg_b = QueryRegistry::new(m, reg_hdr);
+            for s in &specs {
+                reg_b.admit(s.clone(), 0.0).unwrap();
+            }
+            assert_eq!(reg_a.snapshot().specs(), reg_b.snapshot().specs());
+            assert!((reg_a.projected_load() - reg_b.projected_load()).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn prop_retiring_never_perturbs_other_streams() {
+        // Fan the same shared results out through a 3-query set and a
+        // 2-query set (one retired); surviving queries' verdicts must be
+        // identical — retirement cannot perturb another query's stream.
+        check("query::retire_isolation", |rng, _case| {
+            let full = QuerySet::new(vec![
+                spec("keep-a", ClassId::Moped, &[0]),
+                spec("gone", ClassId::Person, &[0]),
+                spec("keep-b", ClassId::Moped, &[0, 1]),
+            ])
+            .unwrap();
+            let reduced = QuerySet::new(vec![
+                spec("keep-a", ClassId::Moped, &[0]),
+                spec("keep-b", ClassId::Moped, &[0, 1]),
+            ])
+            .unwrap();
+            let fan_out = |qs: &QuerySet| -> Vec<QueryVerdict> {
+                let mut shared = Rng::new(0xFA42);
+                let mut out = Vec::new();
+                for task in 0..40u64 {
+                    let t = task as f64 * 0.5;
+                    // Shared per-class results, independent of the set.
+                    let conf_by_class = [shared.f32(), shared.f32()];
+                    let oracle_by_class = [shared.bool(0.5), shared.bool(0.5)];
+                    let went_cloud = shared.bool(0.3);
+                    for (qi, s) in qs.active(CameraId(0), t) {
+                        let ci = usize::from(s.object == ClassId::Person);
+                        let (positive, site) =
+                            s.decide(conf_by_class[ci], oracle_by_class[ci], went_cloud);
+                        out.push(QueryVerdict {
+                            query: qs.specs()[qi].id.clone(),
+                            task,
+                            t,
+                            positive,
+                            confidence: conf_by_class[ci],
+                            site,
+                            latency: 0.1,
+                        });
+                    }
+                }
+                out
+            };
+            let _ = rng.next_u64();
+            let before = fan_out(&full);
+            let after = fan_out(&reduced);
+            for id in ["keep-a", "keep-b"] {
+                assert_eq!(verdicts_jsonl(&before, id), verdicts_jsonl(&after, id), "{id}");
+            }
+        });
+    }
+
+    #[test]
+    fn query_file_parses_presets_defaults_and_rejects_unknown_keys() {
+        let text = r#"
+[scenario]
+duration = 30.0
+seed = 11
+
+[edges]
+speed = [1.0]
+cameras = [2]
+
+[admission]
+headroom = 0.9
+
+[[query]]
+id = "amber-moped"
+object = "moped"
+cameras = [0, 1]
+deadline = "interactive"
+
+[[query]]
+id = "night-person"
+object = "person"
+alpha = 0.9
+beta = 0.05
+from = 5.0
+until = 25.0
+"#;
+        let qf = QueryFile::parse(text).unwrap();
+        assert_eq!(qf.headroom, 0.9);
+        assert_eq!(qf.queries.len(), 2);
+        assert_eq!(qf.queries[0].id, "amber-moped");
+        assert_eq!(qf.queries[0].object, ClassId::Moped);
+        assert_eq!(qf.queries[0].deadline, DeadlineClass::Interactive);
+        assert_eq!(qf.queries[0].alpha, 0.8); // default
+        assert_eq!(qf.queries[1].cameras, Vec::<CameraId>::new()); // all
+        assert_eq!(qf.queries[1].until, 25.0);
+        assert_eq!(qf.cfg.edges[0].cameras, 2);
+
+        let bad = "[[query]]\nid = \"q\"\nobject = \"moped\"\nprioritee = 3\n";
+        let err = QueryFile::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("prioritee"), "{err}");
+        assert!(err.contains("\"q\""), "{err}");
+        assert!(err.contains("expected one of"), "{err}");
+
+        let dup = "[[query]]\nid = \"q\"\nobject = \"moped\"\n[[query]]\nid = \"q\"\nobject = \"person\"\n";
+        assert!(QueryFile::parse(dup).unwrap_err().to_string().contains("duplicate"));
+
+        let bad_obj = "[[query]]\nid = \"q\"\nobject = \"dragon\"\n";
+        assert!(QueryFile::parse(bad_obj).unwrap_err().to_string().contains("dragon"));
+
+        let bad_deadline = "[[query]]\nid = \"q\"\nobject = \"moped\"\ndeadline = \"soon\"\n";
+        assert!(QueryFile::parse(bad_deadline).unwrap_err().to_string().contains("soon"));
+    }
+
+    #[test]
+    fn write_results_creates_dir_and_one_file_per_query() {
+        let dir = std::env::temp_dir()
+            .join(format!("surveiledge_query_{}", std::process::id()))
+            .join("nested/deep");
+        let _ = std::fs::remove_dir_all(&dir);
+        let qs = QuerySet::new(vec![
+            spec("a", ClassId::Moped, &[]),
+            spec("b", ClassId::Person, &[]),
+        ])
+        .unwrap();
+        let verdicts = vec![QueryVerdict {
+            query: "a".into(),
+            task: 7,
+            t: 3.0,
+            positive: true,
+            confidence: 0.95,
+            site: "edge",
+            latency: 0.5,
+        }];
+        let paths = write_results(&dir, &verdicts, qs.specs()).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].ends_with("query_a.jsonl"));
+        let a = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(a.contains("\"task\":7"));
+        // Empty stream still gets a (comparable) empty file.
+        assert_eq!(std::fs::read_to_string(&paths[1]).unwrap(), "");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -54,6 +54,27 @@ pub fn allocate(candidates: &[NodeLoad]) -> Option<NodeId> {
     best.map(|(_, b)| b.node)
 }
 
+/// Scale every candidate's congestion-dependent cost (`Q_i·t_i` +
+/// penalty) by a query deadline weight before eq. 7 runs. Weight > 1
+/// (interactive) makes congested paths look worse than they are, so the
+/// allocator flees to fast nodes sooner; weight < 1 (batch) tolerates
+/// congestion and keeps traffic local. Weight 1 is exactly a no-op, so
+/// query-less runs are untouched.
+///
+/// Implemented by scaling both `t_infer` and `penalty`: the *ordering*
+/// over candidates at a fixed weight is unchanged (a uniform positive
+/// scale preserves argmin), but the recorded queue-depth gauges and any
+/// mixed-weight comparisons see the deadline pressure.
+pub fn weight_penalties(candidates: &mut [NodeLoad], weight: f64) {
+    if !(weight.is_finite() && weight > 0.0) || (weight - 1.0).abs() < 1e-12 {
+        return;
+    }
+    for c in candidates.iter_mut() {
+        c.t_infer *= weight;
+        c.penalty *= weight;
+    }
+}
+
 /// Record one eq. 7 allocation decision into a metric registry: a counter
 /// per chosen destination and a queue-depth gauge per candidate node.
 pub fn record_allocation(reg: &Registry, scheme: &str, dest: NodeId, candidates: &[NodeLoad]) {
@@ -268,6 +289,42 @@ mod tests {
             for l in &c {
                 assert!(chosen_cost <= l.cost() + 1e-9);
             }
+        });
+    }
+
+    #[test]
+    fn weight_penalties_scales_costs_uniformly() {
+        let mut c = vec![load(1, 2, 0.3), load(0, 1, 0.05)];
+        c[1].penalty = 0.4;
+        let base: Vec<f64> = c.iter().map(|l| l.cost()).collect();
+        weight_penalties(&mut c, 2.0);
+        for (l, b) in c.iter().zip(&base) {
+            assert!((l.cost() - 2.0 * b).abs() < 1e-12);
+        }
+        // Weight 1 and degenerate weights are exact no-ops.
+        let snapshot: Vec<f64> = c.iter().map(|l| l.cost()).collect();
+        weight_penalties(&mut c, 1.0);
+        weight_penalties(&mut c, 0.0);
+        weight_penalties(&mut c, f64::NAN);
+        let after: Vec<f64> = c.iter().map(|l| l.cost()).collect();
+        assert_eq!(snapshot, after);
+    }
+
+    #[test]
+    fn prop_uniform_weight_preserves_allocation() {
+        check("weight_preserves_argmin", |rng, _| {
+            let n = rng.range_usize(1, 8);
+            let mut c: Vec<NodeLoad> = (0..n)
+                .map(|i| NodeLoad {
+                    node: NodeId(i as u32),
+                    queue: rng.range_usize(0, 50),
+                    t_infer: rng.range_f64(0.01, 2.0),
+                    penalty: rng.range_f64(0.0, 1.0),
+                })
+                .collect();
+            let before = allocate(&c);
+            weight_penalties(&mut c, rng.range_f64(0.25, 4.0));
+            assert_eq!(allocate(&c), before, "uniform scaling must not move the argmin");
         });
     }
 
