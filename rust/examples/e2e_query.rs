@@ -151,6 +151,7 @@ fn main() -> anyhow::Result<()> {
             query: QUERY,
             slowdown: 1.0,
             queries: None,
+            overload: None,
         };
         let clock = clock.clone();
         let base_id = task_counter;

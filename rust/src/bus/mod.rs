@@ -5,17 +5,19 @@
 //! * topic levels separated by `/`,
 //! * `+` matches exactly one level, `#` matches the remaining levels,
 //! * retained messages are delivered to late subscribers,
-//! * QoS 0 (fire and forget, may drop on a full queue) and QoS 1
-//!   (blocking enqueue — at-least-once within the process).
+//! * QoS 0 (fire and forget; a full subscriber queue evicts its *oldest*
+//!   message — freshest-data-wins, counted in
+//!   `surveiledge_bus_dropped_total`) and QoS 1 (blocking enqueue —
+//!   at-least-once within the process).
 //!
 //! Nodes exchange three kinds of traffic over it (same topics the paper's
 //! prototype uses conceptually): crop uploads (`task/...`), verdicts
 //! (`verdict/...`), and parameter-DB replication (`paramdb/...`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// A published message. Payloads are opaque bytes; the `meta` map carries
 /// small typed fields so hot-path messages avoid serialisation.
@@ -69,10 +71,178 @@ pub trait LinkFault: Send + Sync {
     fn drop_publish(&self, topic: &str, seq: u64) -> bool;
 }
 
+/// Shared state of one subscription's bounded queue. The overflow policy
+/// is defined here once: **drop-oldest** for QoS 0 (a camera feed wants
+/// the freshest frame, not the stalest), blocking for QoS 1.
+struct SubQueue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct QueueState {
+    buf: VecDeque<Message>,
+    cap: usize,
+    /// Receiver still held? A dropped receiver makes every push fail, so
+    /// the broker prunes the subscription.
+    rx_alive: bool,
+    /// Subscription still registered? Cleared on unsubscribe/prune so a
+    /// blocked `recv` wakes up with a disconnect instead of hanging.
+    tx_alive: bool,
+}
+
+impl SubQueue {
+    fn new(cap: usize) -> Arc<SubQueue> {
+        Arc::new(SubQueue {
+            state: Mutex::new(QueueState {
+                buf: VecDeque::new(),
+                cap: cap.max(1),
+                rx_alive: true,
+                tx_alive: true,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        })
+    }
+
+    /// QoS-0 push: never blocks. On overflow the *oldest* queued message
+    /// is evicted to make room; returns `Ok(evicted_count)` (0 or 1), or
+    /// `Err(())` when the receiver is gone.
+    fn push_drop_oldest(&self, msg: Message) -> Result<usize, ()> {
+        let mut st = self.state.lock().unwrap();
+        if !st.rx_alive {
+            return Err(());
+        }
+        let mut evicted = 0;
+        if st.buf.len() >= st.cap {
+            st.buf.pop_front();
+            evicted = 1;
+        }
+        st.buf.push_back(msg);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(evicted)
+    }
+
+    /// QoS-1 push: blocks until the queue has room (or the receiver is
+    /// dropped, which returns `Err(())`).
+    fn push_blocking(&self, msg: Message) -> Result<(), ()> {
+        let mut st = self.state.lock().unwrap();
+        while st.rx_alive && st.buf.len() >= st.cap {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if !st.rx_alive {
+            return Err(());
+        }
+        st.buf.push_back(msg);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+}
+
+/// `try_recv` failure: nothing queued, or the subscription is gone.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TryRecvError {
+    Empty,
+    Disconnected,
+}
+
+/// `recv` failure: the subscription was removed and its queue drained.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct RecvError;
+
+/// `recv_timeout` failure.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
+/// Receiving end of a subscription (the bus's replacement for
+/// `std::sync::mpsc::Receiver`): same `recv` / `try_recv` /
+/// `recv_timeout` surface, backed by the broker's bounded drop-oldest
+/// queue.
+pub struct BusReceiver {
+    q: Arc<SubQueue>,
+}
+
+impl BusReceiver {
+    pub fn try_recv(&self) -> Result<Message, TryRecvError> {
+        let mut st = self.q.state.lock().unwrap();
+        if let Some(m) = st.buf.pop_front() {
+            drop(st);
+            self.q.not_full.notify_one();
+            return Ok(m);
+        }
+        if st.tx_alive {
+            Err(TryRecvError::Empty)
+        } else {
+            Err(TryRecvError::Disconnected)
+        }
+    }
+
+    pub fn recv(&self) -> Result<Message, RecvError> {
+        let mut st = self.q.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.buf.pop_front() {
+                drop(st);
+                self.q.not_full.notify_one();
+                return Ok(m);
+            }
+            if !st.tx_alive {
+                return Err(RecvError);
+            }
+            st = self.q.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Message, RecvTimeoutError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.q.state.lock().unwrap();
+        loop {
+            if let Some(m) = st.buf.pop_front() {
+                drop(st);
+                self.q.not_full.notify_one();
+                return Ok(m);
+            }
+            if !st.tx_alive {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, _) = self.q.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+}
+
+impl Drop for BusReceiver {
+    fn drop(&mut self) {
+        let mut st = self.q.state.lock().unwrap();
+        st.rx_alive = false;
+        drop(st);
+        // Wake blocked QoS-1 publishers so they error out and prune.
+        self.q.not_full.notify_all();
+    }
+}
+
 struct Subscription {
     filter: String,
-    sender: SyncSender<Message>,
+    queue: Arc<SubQueue>,
     id: u64,
+}
+
+impl Drop for Subscription {
+    fn drop(&mut self) {
+        let mut st = self.queue.state.lock().unwrap();
+        st.tx_alive = false;
+        drop(st);
+        // Wake a blocked `recv` so it sees the disconnect.
+        self.queue.not_empty.notify_all();
+    }
 }
 
 struct BrokerInner {
@@ -143,9 +313,11 @@ impl Broker {
 
     /// Subscribe with a bounded queue; returns the receiving end and the
     /// subscription id (for unsubscribe). Retained messages matching the
-    /// filter are delivered immediately.
-    pub fn subscribe(&self, filter: &str, capacity: usize) -> (Receiver<Message>, u64) {
-        let (tx, rx) = sync_channel(capacity.max(1));
+    /// filter are delivered immediately. Queue overflow is drop-oldest
+    /// (see [`SubQueue`]); evictions land in [`BusStats::dropped`] and
+    /// `surveiledge_bus_dropped_total`.
+    pub fn subscribe(&self, filter: &str, capacity: usize) -> (BusReceiver, u64) {
+        let q = SubQueue::new(capacity);
         let id = {
             let mut next = self.inner.next_id.lock().unwrap();
             let id = *next;
@@ -157,16 +329,16 @@ impl Broker {
             let retained = self.inner.retained.lock().unwrap();
             for (topic, msg) in retained.iter() {
                 if topic_matches(filter, topic) {
-                    let _ = tx.try_send(msg.clone());
+                    let _ = q.push_drop_oldest(msg.clone());
                 }
             }
         }
         self.inner.subs.lock().unwrap().push(Subscription {
             filter: filter.to_string(),
-            sender: tx,
+            queue: q.clone(),
             id,
         });
-        (rx, id)
+        (BusReceiver { q }, id)
     }
 
     pub fn unsubscribe(&self, id: u64) {
@@ -210,23 +382,27 @@ impl Broker {
         // prevent other threads from publishing (deadlock otherwise: a
         // consumer that needs to publish its own result to make progress
         // would wait on the registry lock forever).
-        let targets: Vec<(u64, SyncSender<Message>)> = {
+        let targets: Vec<(u64, Arc<SubQueue>)> = {
             let subs = self.inner.subs.lock().unwrap();
             subs.iter()
                 .filter(|s| topic_matches(&s.filter, &msg.topic))
-                .map(|s| (s.id, s.sender.clone()))
+                .map(|s| (s.id, s.queue.clone()))
                 .collect()
         };
-        for (id, sender) in targets {
+        for (id, q) in targets {
             match qos {
-                QoS::AtMostOnce => match sender.try_send(msg.clone()) {
-                    Ok(()) => delivered += 1,
-                    Err(TrySendError::Full(_)) => dropped += 1,
-                    Err(TrySendError::Disconnected(_)) => dead.push(id),
+                // QoS 0 overflow = drop-oldest: the new message always
+                // lands; the evicted one counts as dropped.
+                QoS::AtMostOnce => match q.push_drop_oldest(msg.clone()) {
+                    Ok(evicted) => {
+                        delivered += 1;
+                        dropped += evicted;
+                    }
+                    Err(()) => dead.push(id),
                 },
-                QoS::AtLeastOnce => match sender.send(msg.clone()) {
+                QoS::AtLeastOnce => match q.push_blocking(msg.clone()) {
                     Ok(()) => delivered += 1,
-                    Err(_) => dead.push(id),
+                    Err(()) => dead.push(id),
                 },
             }
         }
@@ -363,7 +539,7 @@ mod tests {
             b.publish(Message::new(format!("query/{id}/results"), vec![i]), QoS::AtLeastOnce);
             published.push((id, i));
         }
-        let drain = |rx: &Receiver<Message>| -> Vec<u8> {
+        let drain = |rx: &BusReceiver| -> Vec<u8> {
             let mut got = Vec::new();
             while let Ok(m) = rx.try_recv() {
                 got.push(m.payload[0]);
@@ -410,13 +586,42 @@ mod tests {
     }
 
     #[test]
-    fn qos0_drops_on_full_queue() {
+    fn qos0_overflow_is_drop_oldest() {
+        // The overflow contract, pinned: a QoS-0 publish into a full
+        // queue evicts the *oldest* queued message and delivers the new
+        // one — freshest data wins, and the eviction is counted.
         let b = Broker::new();
-        let (_rx, _) = b.subscribe("x", 1);
+        let reg = crate::obs::Registry::new();
+        b.attach_registry(reg.clone());
+        let (rx, _) = b.subscribe("x", 2);
         assert_eq!(b.publish(Message::new("x", vec![1]), QoS::AtMostOnce), 1);
-        // queue full now
-        assert_eq!(b.publish(Message::new("x", vec![2]), QoS::AtMostOnce), 0);
+        assert_eq!(b.publish(Message::new("x", vec![2]), QoS::AtMostOnce), 1);
+        // Queue full: this publish still lands; [1] is evicted.
+        assert_eq!(b.publish(Message::new("x", vec![3]), QoS::AtMostOnce), 1);
         assert_eq!(b.stats().dropped, 1);
+        assert_eq!(reg.counter("surveiledge_bus_dropped_total", &[]), 1);
+        let got: Vec<u8> = [rx.try_recv().unwrap(), rx.try_recv().unwrap()]
+            .iter()
+            .map(|m| m.payload[0])
+            .collect();
+        assert_eq!(got, vec![2, 3], "oldest evicted, order of survivors preserved");
+        assert_eq!(rx.try_recv().unwrap_err(), TryRecvError::Empty);
+    }
+
+    #[test]
+    fn recv_sees_disconnect_after_unsubscribe() {
+        let b = Broker::new();
+        let (rx, id) = b.subscribe("t", 4);
+        b.publish(Message::new("t", vec![7]), QoS::AtLeastOnce);
+        b.unsubscribe(id);
+        // Queued messages still drain, then the disconnect surfaces.
+        assert_eq!(rx.recv().unwrap().payload[0], 7);
+        assert_eq!(rx.recv().unwrap_err(), RecvError);
+        assert_eq!(rx.try_recv().unwrap_err(), TryRecvError::Disconnected);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)).unwrap_err(),
+            RecvTimeoutError::Disconnected
+        );
     }
 
     #[test]

@@ -153,7 +153,7 @@ fn client_loop(stream: TcpStream, broker: Broker, stop: Arc<AtomicBool>) {
                                     break;
                                 }
                             }
-                            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                            Err(super::RecvTimeoutError::Timeout) => continue,
                             Err(_) => break,
                         }
                     }

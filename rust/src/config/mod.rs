@@ -7,7 +7,8 @@
 
 pub mod toml;
 
-use crate::faults::{CrashWindow, FaultPlan, SlowWindow};
+use crate::faults::{BurstWindow, CrashWindow, FaultPlan, SlowWindow};
+use crate::overload::OverloadConfig;
 use crate::types::ClassId;
 use std::path::Path;
 use toml::TomlDoc;
@@ -87,6 +88,9 @@ pub struct Config {
     /// Fault schedule for chaos scenarios (`[faults]` in TOML). Empty by
     /// default: no injection, zero overhead.
     pub faults: FaultPlan,
+    /// Overload control (`[overload]` in TOML). Disabled by default: no
+    /// bounded queues, no breaker, no ladder — an exact no-op.
+    pub overload: OverloadConfig,
 }
 
 impl Default for Config {
@@ -110,6 +114,7 @@ impl Default for Config {
             seed: 7,
             artifacts: "artifacts".into(),
             faults: FaultPlan::none(),
+            overload: OverloadConfig::default(),
         }
     }
 }
@@ -244,6 +249,68 @@ impl Config {
                 .map(|(&n, (&f, (&u, &x)))| SlowWindow { node: n as u32, from: f, until: u, factor: x })
                 .collect();
         }
+        // Overload control: the *presence* of `[overload]` enables the
+        // subsystem; without the block every consumer treats it as absent
+        // and existing runs stay byte-identical.
+        if doc.has_section("overload") {
+            cfg.overload.enabled = true;
+            if let Some(v) = doc.get_i64("overload", "node_queue_cap") {
+                anyhow::ensure!(v >= 0, "overload.node_queue_cap must be >= 0");
+                cfg.overload.node_queue_cap = v as usize;
+            }
+            if let Some(v) = doc.get_i64("overload", "uplink_queue_cap") {
+                anyhow::ensure!(v >= 0, "overload.uplink_queue_cap must be >= 0");
+                cfg.overload.uplink_queue_cap = v as usize;
+            }
+            if let Some(v) = doc.get_i64("overload", "retry_budget") {
+                anyhow::ensure!(v >= 0, "overload.retry_budget must be >= 0");
+                cfg.overload.retry_budget = v as u32;
+            }
+            if let Some(v) = doc.get_i64("overload", "trip_after") {
+                anyhow::ensure!(v >= 1, "overload.trip_after must be >= 1");
+                cfg.overload.breaker.trip_after = v as u32;
+            }
+            if let Some(v) = doc.get_f64("overload", "cooldown") {
+                cfg.overload.breaker.cooldown = v;
+            }
+            if let Some(v) = doc.get_f64("overload", "cooldown_max") {
+                cfg.overload.breaker.cooldown_max = v;
+            }
+            if let Some(v) = doc.get_i64("overload", "probe_successes") {
+                anyhow::ensure!(v >= 1, "overload.probe_successes must be >= 1");
+                cfg.overload.breaker.probe_successes = v as u32;
+            }
+            if let Some(up) = doc.get_f64_array("overload", "ladder_up") {
+                anyhow::ensure!(up.len() == 3, "overload.ladder_up needs exactly 3 thresholds");
+                cfg.overload.ladder.up = [up[0], up[1], up[2]];
+            }
+            if let Some(v) = doc.get_f64("overload", "ladder_slack") {
+                cfg.overload.ladder.slack = v;
+            }
+            if let Some(v) = doc.get_f64("overload", "ladder_sustain") {
+                cfg.overload.ladder.sustain = v;
+            }
+            if let Some(v) = doc.get_f64("overload", "subsample_drop") {
+                cfg.overload.subsample_drop = v;
+            }
+            // Burst windows use the same parallel-array idiom as crash
+            // windows: every detection in [burst_from[i], burst_until[i])
+            // yields burst_factor[i] tasks.
+            if let Some(from) = doc.get_f64_array("overload", "burst_from") {
+                let until = doc.get_f64_array("overload", "burst_until").unwrap_or_default();
+                let factor = doc.get_i64_array("overload", "burst_factor").unwrap_or_default();
+                anyhow::ensure!(
+                    until.len() == from.len() && factor.len() == from.len(),
+                    "overload.burst_from/burst_until/burst_factor length mismatch"
+                );
+                cfg.overload.bursts = from
+                    .iter()
+                    .zip(until.iter().zip(factor.iter()))
+                    .map(|(&f, (&u, &x))| BurstWindow { from: f, until: u, factor: x as u32 })
+                    .collect();
+            }
+            cfg.overload.validate()?;
+        }
         anyhow::ensure!(!cfg.edges.is_empty(), "at least one edge required");
         anyhow::ensure!(cfg.interval > 0.0, "interval must be positive");
         Ok(cfg)
@@ -376,6 +443,62 @@ slow_factor = [2.5]
         assert!(c.faults.is_down(2, 52.0));
         assert_eq!(c.faults.slowdown(3, 10.0), 2.5);
         assert!(!c.faults.is_empty());
+    }
+
+    #[test]
+    fn parse_overload_block() {
+        let text = r#"
+[overload]
+node_queue_cap = 6
+uplink_queue_cap = 4
+retry_budget = 2
+trip_after = 4
+cooldown = 1.5
+cooldown_max = 12.0
+probe_successes = 3
+ladder_up = [0.4, 0.6, 0.8]
+ladder_slack = 0.2
+ladder_sustain = 3.0
+subsample_drop = 0.25
+burst_from = [20.0, 70.0]
+burst_until = [40.0, 80.0]
+burst_factor = [3, 2]
+"#;
+        let c = Config::from_toml(text).unwrap();
+        let o = &c.overload;
+        assert!(o.enabled, "presence of [overload] enables the subsystem");
+        assert_eq!(o.node_queue_cap, 6);
+        assert_eq!(o.uplink_queue_cap, 4);
+        assert_eq!(o.retry_budget, 2);
+        assert_eq!(o.breaker.trip_after, 4);
+        assert_eq!(o.breaker.cooldown, 1.5);
+        assert_eq!(o.breaker.cooldown_max, 12.0);
+        assert_eq!(o.breaker.probe_successes, 3);
+        assert_eq!(o.ladder.up, [0.4, 0.6, 0.8]);
+        assert_eq!(o.ladder.slack, 0.2);
+        assert_eq!(o.ladder.sustain, 3.0);
+        assert_eq!(o.subsample_drop, 0.25);
+        assert_eq!(o.bursts.len(), 2);
+        assert_eq!(o.burst_factor(25.0), 3);
+        assert_eq!(o.burst_factor(50.0), 1);
+    }
+
+    #[test]
+    fn parse_overload_absent_stays_disabled() {
+        let c = Config::from_toml("[query]\nobject = \"person\"\n").unwrap();
+        assert!(!c.overload.enabled, "no [overload] block = subsystem inert");
+    }
+
+    #[test]
+    fn parse_overload_validates() {
+        assert!(Config::from_toml("[overload]\nsubsample_drop = 1.5\n").is_err());
+        assert!(Config::from_toml("[overload]\nladder_up = [0.9, 0.5, 0.7]\n").is_err());
+        assert!(Config::from_toml("[overload]\nladder_up = [0.5, 0.7]\n").is_err());
+        assert!(Config::from_toml("[overload]\ntrip_after = 0\n").is_err());
+        let mismatched = "[overload]\nburst_from = [1.0]\nburst_until = [5.0, 9.0]\nburst_factor = [2]\n";
+        assert!(Config::from_toml(mismatched).is_err());
+        let inverted = "[overload]\nburst_from = [10.0]\nburst_until = [5.0]\nburst_factor = [2]\n";
+        assert!(Config::from_toml(inverted).is_err());
     }
 
     #[test]

@@ -209,6 +209,13 @@ impl TomlDoc {
         }
     }
 
+    /// Does any key live under `[section]`? An empty section header
+    /// leaves no entries, so it is indistinguishable from an absent one —
+    /// presence-gated features (e.g. `[overload]`) need at least one key.
+    pub fn has_section(&self, section: &str) -> bool {
+        self.entries.keys().any(|(s, _)| s == section)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

@@ -81,6 +81,23 @@ pub struct SlowWindow {
     pub factor: f64,
 }
 
+/// A camera-burst window for the overload scenarios: every detection in
+/// `t ∈ [from, until)` yields `factor` tasks instead of one. Lives here
+/// with the other scripted windows; consumed via
+/// `overload::OverloadConfig::burst_factor`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BurstWindow {
+    pub from: f64,
+    pub until: f64,
+    pub factor: u32,
+}
+
+impl BurstWindow {
+    pub fn covers(&self, t: f64) -> bool {
+        t >= self.from && t < self.until
+    }
+}
+
 /// Per-message link fault parameters.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LinkFaults {

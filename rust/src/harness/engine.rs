@@ -14,12 +14,15 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::estimator::LatencyEstimator;
-use crate::faults::{backoff, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
+use crate::faults::{backoff, unit_hash, FaultPlan, HB_INTERVAL, HB_STALE_AFTER, MAX_DISPATCH_ATTEMPTS};
 use crate::metrics::{Confusion, FaultStats, LatencyRecorder, SchemeRow};
 use crate::nodes::node_alive;
-use crate::obs::Stage;
+use crate::obs::{node_label, Stage};
+use crate::overload::{
+    shed_victim, CircuitBreaker, DegradationLadder, LoadLevel, OverloadConfig, Transition,
+};
 use crate::paramdb::{ParamDb, Value};
-use crate::query::{QuerySet, QueryVerdict, TaskQueryView};
+use crate::query::{DeadlineClass, QuerySet, QueryVerdict, TaskQueryView};
 use crate::sched::{NodeLoad, ThresholdController};
 use crate::testkit::Rng;
 use crate::types::{CameraId, Image, NodeId};
@@ -61,6 +64,10 @@ pub(crate) struct SimTask {
     /// eq. 7 deadline weight of the most demanding query covering this
     /// task's camera at capture (1.0 without a query set).
     pub(crate) route_weight: f64,
+    /// Deadline class of the most demanding covering query at capture
+    /// (`Standard` without a query set) — what the overload shed policy
+    /// protects: batch sheds first, interactive last.
+    pub(crate) class: DeadlineClass,
 }
 
 /// DES events.
@@ -184,6 +191,20 @@ pub(crate) struct Des {
     pub(crate) times: ServiceTimes,
     pub(crate) uplink_bps: f64,
     pub(crate) fx: FaultCtx,
+    /// Overload control (`[overload]`). `enabled == false` gates every
+    /// consumer below, so a config without the block replays the exact
+    /// event/RNG/metric sequence it always had.
+    pub(crate) ocfg: OverloadConfig,
+    /// Per-uplink circuit breakers (index 0 = edge 1's uplink).
+    pub(crate) breakers: Vec<CircuitBreaker>,
+    /// Per-edge degradation ladders.
+    pub(crate) ladders: Vec<DegradationLadder>,
+    /// In-flight ack-timeout retries per home edge (the bounded retry
+    /// budget that keeps a slow-node window from becoming a retry storm).
+    pub(crate) retry_inflight: Vec<u32>,
+    /// Deepest node queue observed (overload runs only; exported as a
+    /// gauge for the retry-budget regression test).
+    pub(crate) max_depth: u64,
 }
 
 impl Des {
@@ -261,6 +282,9 @@ struct DesCtx<'a> {
     /// Attached query set (the engine fans verdicts out itself, but the
     /// stage layer exposes the same view both substrates see).
     queries: Option<&'a QuerySet>,
+    /// This edge's degradation-ladder level (`Normal` without an
+    /// `[overload]` block — the stage layer's default behavior).
+    level: LoadLevel,
 }
 
 impl PipelineCtx for DesCtx<'_> {
@@ -273,12 +297,16 @@ impl PipelineCtx for DesCtx<'_> {
     fn query_set(&self) -> Option<&QuerySet> {
         self.queries
     }
+    fn overload_level(&self) -> LoadLevel {
+        self.level
+    }
 }
 
 fn confidence_of(h: &mut Harness, task: &SimTask) -> crate::Result<f32> {
     h.mode.edge_confidence(&task.crop, task.synth_confidence)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn route_task(
     h: &Harness,
     policy: &dyn SchemePolicy,
@@ -287,6 +315,7 @@ fn route_task(
     des: &Des,
     db: &ParamDb,
     route_weight: f64,
+    cloud_uplink_open: bool,
 ) -> NodeId {
     policy.route(&RouteCtx {
         home,
@@ -298,7 +327,162 @@ fn route_task(
         outage: h.outage,
         obs: h.obs.as_ref(),
         route_weight,
+        cloud_uplink_open,
     })
+}
+
+/// Record a circuit-breaker transition: a span (`circuit_open` /
+/// `circuit_probe` / `circuit_close`) plus the matching counter.
+fn breaker_transition(
+    h: &Harness,
+    name: &str,
+    e: usize,
+    t: f64,
+    task: u64,
+    tr: Option<Transition>,
+) {
+    let Some(tr) = tr else { return };
+    let (stage, counter) = match tr {
+        Transition::Opened => (Stage::CircuitOpen, "surveiledge_overload_trips_total"),
+        Transition::HalfOpened => (Stage::CircuitProbe, "surveiledge_overload_probes_total"),
+        Transition::Closed => (Stage::CircuitClose, "surveiledge_overload_closes_total"),
+    };
+    h.span(name, t, task, stage, e as u32 + 1, 0.0, "");
+    if let Some(reg) = &h.obs {
+        let el = node_label(e as u32 + 1);
+        reg.inc(counter, &[("scheme", name), ("edge", el.as_str())], 1);
+    }
+}
+
+/// Is `home`'s uplink breaker refusing traffic right now? Polls the
+/// breaker (an elapsed dwell half-opens here) and records any transition.
+/// Always `false` without an `[overload]` block.
+fn breaker_open(h: &Harness, name: &str, des: &mut Des, home: u32, t: f64, task: u64) -> bool {
+    if !des.ocfg.enabled {
+        return false;
+    }
+    let e = (home - 1) as usize;
+    let (ok, tr) = des.breakers[e].allows(t);
+    breaker_transition(h, name, e, t, task, tr);
+    !ok
+}
+
+/// Explicitly drop a task under overload control. Never silent: the shed
+/// is counted in [`FaultStats`], spanned, and fanned out to every
+/// covering query as a `site = "shed"` accounting record (always
+/// negative, so precision/recall see a miss rather than nothing).
+fn shed_finish(
+    h: &Harness,
+    name: &str,
+    task: &SimTask,
+    t: f64,
+    des: &mut Des,
+    result: &mut SchemeResult,
+    reason: &'static str,
+) {
+    des.fstats.shed += 1;
+    h.span(name, t, task.id, Stage::Shed, task.home_edge, (t - task.t_capture).max(0.0), reason);
+    if let Some(reg) = &h.obs {
+        reg.inc(
+            "surveiledge_overload_shed_total",
+            &[("scheme", name), ("class", task.class.as_str()), ("reason", reason)],
+            1,
+        );
+    }
+    if let Some(qs) = &h.queries {
+        for v in &task.qviews {
+            let spec = &qs.specs()[v.query];
+            let qv = QueryVerdict {
+                query: spec.id.clone(),
+                task: task.id,
+                t,
+                positive: false,
+                confidence: v.confidence,
+                site: "shed",
+                latency: (t - task.t_capture).max(0.0),
+            };
+            if let Some(reg) = &h.obs {
+                reg.inc(
+                    "surveiledge_query_verdicts_total",
+                    &[("query", &spec.id), ("scheme", name), ("site", "shed")],
+                    1,
+                );
+            }
+            qs.publish_result(&qv);
+            result.query_verdicts.push(qv);
+        }
+    }
+}
+
+/// Admit `task` to node `n`'s bounded queue. On overflow the
+/// deadline-class shed policy picks a victim — batch first, then
+/// standard, youngest first; the in-service front is untouchable — or
+/// sheds the incoming task itself when nothing queued is cheaper.
+/// Unbounded (the original `enqueue_node`) without `[overload]`.
+fn enqueue_node_bounded(
+    h: &Harness,
+    name: &str,
+    des: &mut Des,
+    n: usize,
+    task: SimTask,
+    t: f64,
+    result: &mut SchemeResult,
+) {
+    let cap = des.ocfg.node_queue_cap;
+    if des.ocfg.enabled && cap > 0 && des.nodes[n].queue.len() >= cap {
+        let start = des.nodes[n].busy as usize;
+        let classes: Vec<DeadlineClass> = des.nodes[n].queue.iter().map(|q| q.class).collect();
+        match shed_victim(&classes, start, task.class) {
+            Some(i) => {
+                let victim = des.nodes[n].queue.remove(i).expect("victim index in range");
+                shed_finish(h, name, &victim, t, des, result, "queue_full");
+                des.enqueue_node(n, task, t);
+            }
+            None => shed_finish(h, name, &task, t, des, result, "queue_full"),
+        }
+    } else {
+        des.enqueue_node(n, task, t);
+    }
+    if des.ocfg.enabled {
+        des.max_depth = des.max_depth.max(des.nodes[n].queue.len() as u64);
+    }
+}
+
+/// Admit `task` to edge `e`'s bounded uplink queue. Overflow is both a
+/// shed (same class policy as nodes) and a breaker failure signal — a
+/// persistently saturated uplink trips open, and routing stops feeding
+/// it. Unbounded without `[overload]`.
+fn push_uplink_bounded(
+    h: &Harness,
+    name: &str,
+    des: &mut Des,
+    e: usize,
+    task: SimTask,
+    t: f64,
+    result: &mut SchemeResult,
+) {
+    let cap = des.ocfg.uplink_queue_cap;
+    if des.ocfg.enabled && cap > 0 && des.uplinks[e].queue.len() >= cap {
+        let tr = des.breakers[e].on_failure(t);
+        breaker_transition(h, name, e, t, task.id, tr);
+        let start = des.uplinks[e].busy as usize;
+        let classes: Vec<DeadlineClass> = des.uplinks[e].queue.iter().map(|q| q.class).collect();
+        match shed_victim(&classes, start, task.class) {
+            Some(i) => {
+                let victim = des.uplinks[e].queue.remove(i).expect("victim index in range");
+                des.uplinks[e].queued_bytes =
+                    des.uplinks[e].queued_bytes.saturating_sub(victim.wire_bytes);
+                // The victim never crosses the wire: unwind its bytes
+                // from the bandwidth accounting `push_uplink` charged.
+                des.cloud_bytes = des.cloud_bytes.saturating_sub(victim.wire_bytes);
+                shed_finish(h, name, &victim, t, des, result, "uplink_full");
+                des.push_uplink(e, task, t);
+            }
+            None => shed_finish(h, name, &task, t, des, result, "uplink_full"),
+        }
+    } else {
+        des.push_uplink(e, task, t);
+    }
 }
 
 /// Send `task` toward `dest` (as chosen by the policy's route). Under a
@@ -318,7 +502,7 @@ fn dispatch(
     let home = task.home_edge;
     if dest.is_cloud() {
         // Uplink transfer; transit faults apply at delivery time.
-        des.push_uplink((home - 1) as usize, task, t);
+        push_uplink_bounded(h, policy.name(), des, (home - 1) as usize, task, t, result);
     } else if dest.0 != home
         && (des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(dest.0, t))
     {
@@ -326,7 +510,7 @@ fn dispatch(
         retry_or_degrade(h, policy, task, t, des, db, result)?;
     } else {
         let delay = if dest.0 != home { des.fx.plan.delay_of(task.id) } else { 0.0 };
-        des.enqueue_node(dest.0 as usize, task, t + delay);
+        enqueue_node_bounded(h, policy.name(), des, dest.0 as usize, task, t + delay, result);
     }
     Ok(())
 }
@@ -359,9 +543,28 @@ fn retry_or_degrade(
             }
             // Unclassified task: fall back to local processing.
             let home = task.home_edge as usize;
-            des.enqueue_node(home, task, t);
+            enqueue_node_bounded(h, policy.name(), des, home, task, t, result);
             return Ok(());
         }
+    }
+    // Bounded retry budget: a slow-node window must not multiply into a
+    // retry storm. Once this home edge has `retry_budget` re-dispatches
+    // in flight, give up gracefully instead of queueing another.
+    if des.ocfg.enabled && des.ocfg.retry_budget > 0 {
+        let e = (task.home_edge - 1) as usize;
+        if des.retry_inflight[e] >= des.ocfg.retry_budget {
+            if policy.falls_back_to_edge() {
+                if task.doubtful {
+                    return degrade_finish(h, policy, task, t, des, result);
+                }
+                let home = task.home_edge as usize;
+                enqueue_node_bounded(h, policy.name(), des, home, task, t, result);
+                return Ok(());
+            }
+            shed_finish(h, policy.name(), &task, t, des, result, "retry_budget");
+            return Ok(());
+        }
+        des.retry_inflight[e] += 1;
     }
     des.schedule(t + backoff(attempt), Event::Redispatch { task });
     Ok(())
@@ -514,6 +717,11 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
         times: h.times,
         uplink_bps,
         fx: FaultCtx { plan: h.plan.clone(), outage: h.outage },
+        ocfg: cfg.overload.clone(),
+        breakers: (0..n_edges).map(|_| CircuitBreaker::new(cfg.overload.breaker)).collect(),
+        ladders: (0..n_edges).map(|_| DegradationLadder::new(cfg.overload.ladder)).collect(),
+        retry_inflight: vec![0; n_edges as usize],
+        max_depth: 0,
     };
     des.schedule(cfg.interval, Event::Sample);
     // Heartbeats + scripted crash transitions only exist under a
@@ -583,6 +791,40 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                 if t + cfg.interval <= cfg.duration {
                     des.schedule(t + cfg.interval, Event::Sample);
                 }
+                // Overload: refresh each edge's ladder from its queue
+                // pressure (worst of node occupancy and uplink occupancy
+                // against the configured caps) before admitting this
+                // tick's detections.
+                if des.ocfg.enabled {
+                    for e in 0..n_edges as usize {
+                        let node_q = des.nodes[e + 1].queue.len();
+                        let up_q = des.uplinks[e].queue.len();
+                        let node_occ = if des.ocfg.node_queue_cap > 0 {
+                            node_q as f64 / des.ocfg.node_queue_cap as f64
+                        } else {
+                            0.0
+                        };
+                        let up_occ = if des.ocfg.uplink_queue_cap > 0 {
+                            up_q as f64 / des.ocfg.uplink_queue_cap as f64
+                        } else {
+                            0.0
+                        };
+                        let pressure = node_occ.max(up_occ);
+                        des.ladders[e].observe(pressure, t);
+                        if let Some(reg) = &h.obs {
+                            let el = node_label(e as u32 + 1);
+                            let lbl = [("scheme", name), ("edge", el.as_str())];
+                            reg.gauge_set("surveiledge_overload_pressure", &lbl, pressure);
+                            reg.gauge_set(
+                                "surveiledge_overload_ladder_level",
+                                &lbl,
+                                des.ladders[e].level() as u8 as f64,
+                            );
+                            reg.gauge_set("surveiledge_overload_queue_depth", &lbl, node_q as f64);
+                            reg.gauge_set("surveiledge_overload_uplink_depth", &lbl, up_q as f64);
+                        }
+                    }
+                }
                 // Detect on every camera at this tick (the shared detect
                 // stage, pipeline::detect_crops).
                 for ci in 0..cameras.len() {
@@ -592,9 +834,41 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         prev_frames[ci] = Some((frame.image.clone(), frame.image));
                         continue;
                     };
+                    let home = cam_edge[ci];
+                    // Ladder level at this edge, and the scenario's burst
+                    // multiplier: each detection is admitted `reps` times
+                    // during a burst window (always 1 without overload).
+                    let lvl = if des.ocfg.enabled {
+                        des.ladders[(home - 1) as usize].level()
+                    } else {
+                        LoadLevel::Normal
+                    };
+                    let reps = if des.ocfg.enabled { des.ocfg.burst_factor(t) } else { 1 };
                     for det in
                         pipeline::detect_crops(&f_prev2, &f_prev, &frame.image, &truth, &detect_cfg)
                     {
+                    for _rep in 0..reps {
+                        // Ladder rung 1 — frame subsampling: thin the
+                        // offered load before it becomes a task. The
+                        // decision is a stateless hash of (seed, id), so
+                        // same-seed reruns skip the same detections. A
+                        // skipped detection consumes its task id but is
+                        // never counted as a task, so it cannot read as
+                        // "lost".
+                        if lvl >= LoadLevel::Subsample
+                            && unit_hash(cfg.seed, 0x5AB5, next_task_id) < des.ocfg.subsample_drop
+                        {
+                            h.span(name, t, next_task_id, Stage::Subsample, home, 0.0, "");
+                            if let Some(reg) = &h.obs {
+                                reg.inc(
+                                    "surveiledge_overload_subsampled_total",
+                                    &[("scheme", name)],
+                                    1,
+                                );
+                            }
+                            next_task_id += 1;
+                            continue;
+                        }
                         let (oracle_positive, synth_confidence) =
                             h.mode.judge(cfg.query, &det.crop, det.truth_cls, &mut rng)?;
                         // Per-query views of the one shared result. The
@@ -602,7 +876,7 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         // classes get a task+class-keyed derived stream,
                         // so admitting or retiring one query never
                         // shifts another query's confidences.
-                        let (qviews, route_weight) = match &h.queries {
+                        let (qviews, route_weight, class) = match &h.queries {
                             Some(qs) => {
                                 let cam = CameraId(ci as u32);
                                 let mut views = Vec::new();
@@ -624,19 +898,19 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                                         oracle,
                                     });
                                 }
-                                (views, qs.route_weight(cam, t))
+                                (views, qs.route_weight(cam, t), qs.dominant_class(cam, t))
                             }
-                            None => (Vec::new(), 1.0),
+                            None => (Vec::new(), 1.0, DeadlineClass::Standard),
                         };
                         let task = SimTask {
                             id: next_task_id,
                             t_capture: t - cfg.interval, // crop comes from the middle frame
-                            home_edge: cam_edge[ci],
+                            home_edge: home,
                             wire_bytes: (det.expanded.area() as u64) * 3 * HD_SCALE,
                             truth_positive: det.truth_cls.map(|c| c == cfg.query),
                             crop: match &h.mode {
                                 #[cfg(feature = "pjrt")]
-                                ComputeMode::Pjrt(_) => det.crop.data,
+                                ComputeMode::Pjrt(_) => det.crop.data.clone(),
                                 ComputeMode::Synthetic { .. } => Vec::new(),
                             },
                             oracle_positive,
@@ -646,16 +920,40 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                             t_enqueue: t,
                             qviews,
                             route_weight,
+                            class,
                         };
                         next_task_id += 1;
                         result.tasks += 1;
                         // Detection span: frame-diff ran on the middle
                         // frame; the crop surfaces one interval later.
                         h.span(name, t, task.id, Stage::Detect, task.home_edge, t - task.t_capture, "");
-                        // Route (eq. 7 or the scheme's fixed policy).
-                        let dest =
-                            route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
+                        // Ladder rung 3 — admission shedding: at the top
+                        // rung, batch-class work is dropped outright (an
+                        // explicit shed, not a loss); standard and
+                        // interactive still ride the bounded queues.
+                        if des.ocfg.enabled
+                            && lvl >= LoadLevel::Shed
+                            && task.class == DeadlineClass::Batch
+                        {
+                            shed_finish(h, name, &task, t, &mut des, &mut result, "ladder");
+                            continue;
+                        }
+                        // Route (eq. 7 or the scheme's fixed policy). An
+                        // open uplink breaker removes the cloud from
+                        // candidacy before the allocator runs.
+                        let open = breaker_open(h, name, &mut des, task.home_edge, t, task.id);
+                        let dest = route_task(
+                            h,
+                            policy,
+                            task.home_edge,
+                            t,
+                            &des,
+                            &db,
+                            task.route_weight,
+                            open,
+                        );
                         dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
+                    }
                     }
                     prev_frames[ci] = Some((f_prev, frame.image));
                 }
@@ -691,6 +989,10 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                     // only changes the *upload* volume, so the eq. 8
                     // signal tracks the doubtful path. (Edge queueing is
                     // the allocator's job, eq. 7.)
+                    // An open breaker on this task's uplink blocks the
+                    // doubtful upload path exactly like a dead cloud —
+                    // the stage layer degrades to an edge-local verdict.
+                    let blocked = breaker_open(h, name, &mut des, task.home_edge, t, task.id);
                     let ctx = DesCtx {
                         signal: des.uplinks[e].queued_bytes as f64 / uplink_bps
                             + (des.nodes[0].queue.len() + des.nodes[0].busy as usize) as f64
@@ -699,8 +1001,13 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                         // Graceful degradation only exists under a fault
                         // plan (fault-free runs never schedule
                         // heartbeats).
-                        cloud_alive: !faulty || node_alive(&db, 0, t),
+                        cloud_alive: (!faulty || node_alive(&db, 0, t)) && !blocked,
                         queries: h.queries.as_ref(),
+                        level: if des.ocfg.enabled {
+                            des.ladders[e].level()
+                        } else {
+                            LoadLevel::Normal
+                        },
                     };
                     let outcome = pipeline::classify_stage(&ctx, policy, &mut controllers[e], conf);
                     band_width_acc += controllers[e].band_width();
@@ -729,7 +1036,7 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                             result.uploads += 1;
                             task.doubtful = true;
                             let e = (task.home_edge - 1) as usize;
-                            des.push_uplink(e, task, t);
+                            push_uplink_bounded(h, name, &mut des, e, task, t, &mut result);
                         }
                     }
                 }
@@ -750,7 +1057,19 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                 des.kick_uplink(e, t);
                 // Uplink span covers queue wait + the wire transfer.
                 h.span(name, t, task.id, Stage::Uplink, edge + 1, t - task.t_enqueue, "");
-                if des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t) {
+                let failed = des.fx.plan.drops(task.id, task.attempt) || des.fx.plan.is_down(0, t);
+                // Breaker feedback: every completed transfer is either an
+                // ack (success) or an ack-timeout (failure). Consecutive
+                // timeouts trip the circuit open.
+                if des.ocfg.enabled {
+                    let tr = if failed {
+                        des.breakers[e].on_failure(t)
+                    } else {
+                        des.breakers[e].on_success(t)
+                    };
+                    breaker_transition(h, name, e, t, task.id, tr);
+                }
+                if failed {
                     // Lost in transit, or the cloud is down: no ack
                     // arrives before the timeout.
                     retry_or_degrade(h, policy, task, t, &mut des, &db, &mut result)?;
@@ -758,7 +1077,7 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                     // Deliver to the cloud queue after half an RTT (+ any
                     // injected one-way delay).
                     let arrival = t + cfg.rtt / 2.0 + des.fx.plan.delay_of(task.id);
-                    des.enqueue_node(0, task, arrival);
+                    enqueue_node_bounded(h, name, &mut des, 0, task, arrival, &mut result);
                 }
             }
             Event::Heartbeat => {
@@ -796,25 +1115,52 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
                     for task in stranded {
                         des.fstats.rerouted += 1;
                         h.span(name, t, task.id, Stage::Reroute, node, 0.0, "");
-                        let dest =
-                            route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
+                        let open = breaker_open(h, name, &mut des, task.home_edge, t, task.id);
+                        let dest = route_task(
+                            h,
+                            policy,
+                            task.home_edge,
+                            t,
+                            &des,
+                            &db,
+                            task.route_weight,
+                            open,
+                        );
                         dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
                     }
                 }
             }
             Event::Redispatch { task } => {
+                // The retry this event carried is no longer in flight —
+                // release its slot in the per-edge budget.
+                if des.ocfg.enabled && des.ocfg.retry_budget > 0 {
+                    let e = (task.home_edge - 1) as usize;
+                    des.retry_inflight[e] = des.retry_inflight[e].saturating_sub(1);
+                }
                 if task.doubtful {
-                    if !node_alive(&db, 0, t) {
-                        // Still no cloud: answer locally instead of
-                        // re-uploading into a dead path.
+                    if !node_alive(&db, 0, t)
+                        || breaker_open(h, name, &mut des, task.home_edge, t, task.id)
+                    {
+                        // Still no cloud (dead, or its uplink is shunned):
+                        // answer locally instead of re-uploading into a
+                        // dead path.
                         degrade_finish(h, policy, task, t, &mut des, &mut result)?;
                     } else {
                         let e = (task.home_edge - 1) as usize;
-                        des.push_uplink(e, task, t);
+                        push_uplink_bounded(h, name, &mut des, e, task, t, &mut result);
                     }
                 } else {
-                    let dest =
-                        route_task(h, policy, task.home_edge, t, &des, &db, task.route_weight);
+                    let open = breaker_open(h, name, &mut des, task.home_edge, t, task.id);
+                    let dest = route_task(
+                        h,
+                        policy,
+                        task.home_edge,
+                        t,
+                        &des,
+                        &db,
+                        task.route_weight,
+                        open,
+                    );
                     dispatch(h, policy, task, dest, t, &mut des, &db, &mut result)?;
                 }
             }
@@ -828,7 +1174,12 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
     result.mean_band_width =
         if band_width_n > 0 { band_width_acc / band_width_n as f64 } else { 0.0 };
     result.faults = des.fstats;
-    result.faults.lost = result.tasks.saturating_sub(result.latency.len() as u64);
+    // Zero-lost invariant: every admitted task is completed, degraded, or
+    // *explicitly* shed. Only the unaccounted remainder is "lost".
+    result.faults.lost = result
+        .tasks
+        .saturating_sub(result.latency.len() as u64)
+        .saturating_sub(result.faults.shed);
     if let Some(qs) = &h.queries {
         result.per_query = qs.per_query_reports(&result.query_verdicts);
     }
@@ -846,6 +1197,12 @@ pub(crate) fn run_scheme(h: &mut Harness, policy: &dyn SchemePolicy) -> crate::R
         reg.inc("surveiledge_faults_degraded_total", &sl, result.faults.degraded);
         reg.inc("surveiledge_faults_lost_total", &sl, result.faults.lost);
         reg.gauge_set("surveiledge_faults_time_to_reroute_seconds", &sl, result.faults.time_to_reroute);
+        // Overload runs only — an [overload]-free export stays
+        // byte-identical to the pre-overload key set.
+        if des.ocfg.enabled {
+            reg.inc("surveiledge_faults_shed_total", &sl, result.faults.shed);
+            reg.gauge_set("surveiledge_overload_max_queue_depth", &sl, des.max_depth as f64);
+        }
     }
     Ok(result)
 }
@@ -908,6 +1265,11 @@ mod tests {
                 times: ServiceTimes::default(),
                 uplink_bps: 1.0,
                 fx: FaultCtx { plan: FaultPlan::none(), outage: None },
+                ocfg: OverloadConfig::default(),
+                breakers: Vec::new(),
+                ladders: Vec::new(),
+                retry_inflight: Vec::new(),
+                max_depth: 0,
             };
             for _ in 0..32 {
                 // Repeated times exercise the seq tie-break.
@@ -941,6 +1303,11 @@ mod tests {
             times: ServiceTimes::default(),
             uplink_bps: 1.0,
             fx: FaultCtx { plan: FaultPlan::none(), outage: None },
+            ocfg: OverloadConfig::default(),
+            breakers: Vec::new(),
+            ladders: Vec::new(),
+            retry_inflight: Vec::new(),
+            max_depth: 0,
         };
         des.schedule(f64::NAN, Event::Heartbeat);
     }

@@ -25,6 +25,7 @@
 
 use crate::config::Config;
 use crate::detect::{detect, DetectConfig};
+use crate::overload::LoadLevel;
 use crate::query::QuerySet;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, ModelRunner, MomentumSgd};
@@ -257,6 +258,15 @@ pub trait PipelineCtx {
     fn query_set(&self) -> Option<&QuerySet> {
         None
     }
+
+    /// The degradation ladder's current response level for this edge
+    /// (`crate::overload`). At `EdgeLocal` or above, doubtful crops stop
+    /// uploading and answer at the edge even while the cloud is alive.
+    /// The default (`Normal`) is the pre-overload behavior, so substrates
+    /// without overload control are byte-identical.
+    fn overload_level(&self) -> LoadLevel {
+        LoadLevel::Normal
+    }
 }
 
 /// What to do with a task after the edge classified it.
@@ -300,7 +310,10 @@ pub fn classify_stage(
             EdgeAction::Verdict { positive: decision == BandDecision::Positive }
         }
         BandDecision::Doubtful => {
-            if ctx.cloud_alive() {
+            // Upload only while the cloud is reachable AND the ladder has
+            // not escalated to edge-local responses — a pressured uplink
+            // degrades exactly like a dark cloud (PR 2's path).
+            if ctx.cloud_alive() && ctx.overload_level() < LoadLevel::EdgeLocal {
                 EdgeAction::Upload
             } else {
                 EdgeAction::Degrade { positive: confidence >= ctx.degrade_split() }
@@ -362,6 +375,13 @@ mod tests {
     struct Scripted {
         signal: f64,
         cloud_alive: bool,
+        level: LoadLevel,
+    }
+
+    impl Scripted {
+        fn new(signal: f64, cloud_alive: bool) -> Scripted {
+            Scripted { signal, cloud_alive, level: LoadLevel::Normal }
+        }
     }
 
     impl PipelineCtx for Scripted {
@@ -371,13 +391,16 @@ mod tests {
         fn cloud_alive(&self) -> bool {
             self.cloud_alive
         }
+        fn overload_level(&self) -> LoadLevel {
+            self.level
+        }
     }
 
     #[test]
     fn classify_stage_maps_band_to_action() {
         let policy = policy_for(Scheme::SurveilEdge);
         let mut ctl = policy.controller(0.0, 0.25, 1.0); // γ₁=0: band stays [0.05, 0.8]
-        let ctx = Scripted { signal: 0.0, cloud_alive: true };
+        let ctx = Scripted::new(0.0, true);
         let hi = classify_stage(&ctx, policy, &mut ctl, 0.95);
         assert!(matches!(hi.action, EdgeAction::Verdict { positive: true }));
         assert_eq!(hi.band(), "positive");
@@ -392,7 +415,7 @@ mod tests {
     fn classify_stage_degrades_when_cloud_is_dark() {
         let policy = policy_for(Scheme::SurveilEdge);
         let mut ctl = policy.controller(0.0, 0.25, 1.0);
-        let ctx = Scripted { signal: 0.0, cloud_alive: false };
+        let ctx = Scripted::new(0.0, false);
         let up = classify_stage(&ctx, policy, &mut ctl, 0.6);
         assert!(matches!(up.action, EdgeAction::Degrade { positive: true }));
         let down = classify_stage(&ctx, policy, &mut ctl, 0.4);
@@ -409,7 +432,7 @@ mod tests {
         let a0 = ctl.alpha;
         // A heavily congested doubtful path must narrow the band on the
         // very call that decides.
-        let ctx = Scripted { signal: 50.0, cloud_alive: true };
+        let ctx = Scripted::new(50.0, true);
         let _ = classify_stage(&ctx, policy, &mut ctl, 0.7);
         assert!(ctl.alpha < a0, "congestion must pull α down ({} -> {})", a0, ctl.alpha);
     }
@@ -418,7 +441,7 @@ mod tests {
     fn edge_only_never_uploads_through_the_stage() {
         let policy = policy_for(Scheme::EdgeOnly);
         let mut ctl = policy.controller(0.1, 0.25, 1.0);
-        let ctx = Scripted { signal: 0.0, cloud_alive: true };
+        let ctx = Scripted::new(0.0, true);
         for conf in [0.0f32, 0.3, 0.5, 0.7, 1.0] {
             let out = classify_stage(&ctx, policy, &mut ctl, conf);
             assert!(
@@ -426,6 +449,25 @@ mod tests {
                 "edge-only must answer locally at confidence {conf}"
             );
         }
+    }
+
+    #[test]
+    fn classify_stage_degrades_at_edge_local_ladder_level() {
+        let policy = policy_for(Scheme::SurveilEdge);
+        let mut ctl = policy.controller(0.0, 0.25, 1.0);
+        // Cloud alive, but the ladder escalated to edge-local verdicts:
+        // doubtful crops must degrade instead of uploading.
+        let mut ctx = Scripted::new(0.0, true);
+        ctx.level = LoadLevel::EdgeLocal;
+        let out = classify_stage(&ctx, policy, &mut ctl, 0.6);
+        assert!(matches!(out.action, EdgeAction::Degrade { positive: true }));
+        ctx.level = LoadLevel::Shed;
+        let out = classify_stage(&ctx, policy, &mut ctl, 0.4);
+        assert!(matches!(out.action, EdgeAction::Degrade { positive: false }));
+        // Subsample is below the edge-local rung: uploads still flow.
+        ctx.level = LoadLevel::Subsample;
+        let out = classify_stage(&ctx, policy, &mut ctl, 0.5);
+        assert!(matches!(out.action, EdgeAction::Upload));
     }
 
     #[test]
@@ -452,7 +494,7 @@ mod tests {
 
     #[test]
     fn pipeline_ctx_default_has_no_query_set() {
-        let ctx = Scripted { signal: 0.0, cloud_alive: true };
+        let ctx = Scripted::new(0.0, true);
         assert!(ctx.query_set().is_none());
     }
 

@@ -21,8 +21,8 @@ use crate::nodes::node_alive;
 use crate::obs::Registry;
 use crate::paramdb::ParamDb;
 use crate::sched::{
-    allocate, record_allocation, weight_penalties, BandDecision, NodeLoad, ThresholdConfig,
-    ThresholdController,
+    allocate, record_allocation, record_exclusion, weight_penalties, BandDecision, NodeLoad,
+    ThresholdConfig, ThresholdController,
 };
 use crate::types::NodeId;
 
@@ -52,6 +52,11 @@ pub struct RouteCtx<'a> {
     /// task (1.0 without a query set — a uniform scale preserves the
     /// argmin, so query-less routing is byte-identical).
     pub route_weight: f64,
+    /// Is this edge's uplink circuit breaker open (`crate::overload`)?
+    /// An open breaker removes the cloud from candidacy even while its
+    /// heartbeat is fresh — the *link* is the problem, not the node.
+    /// Always `false` without an `[overload]` block.
+    pub cloud_uplink_open: bool,
 }
 
 /// One scheme's behavior. Default methods encode the common case; each
@@ -127,7 +132,16 @@ impl SchemePolicy for SurveilEdgePolicy {
         let upload = ctx.cfg.rtt
             + (backlog + 24.0 * 24.0 * 3.0 * HD_SCALE as f64) / (ctx.cfg.uplink_mbps * 125_000.0);
         if node_alive(ctx.db, 0, ctx.t) {
-            cands.push(ctx.nodes[0].load(0, upload));
+            if ctx.cloud_uplink_open {
+                // Breaker open: the cloud is alive but its uplink is
+                // shunned. Composes with the heartbeat exclusion above
+                // (a dead cloud is never a candidate either way).
+                if let Some(reg) = ctx.obs {
+                    record_exclusion(reg, self.name(), NodeId::CLOUD, "circuit_open");
+                }
+            } else {
+                cands.push(ctx.nodes[0].load(0, upload));
+            }
         }
         weight_penalties(&mut cands, ctx.route_weight);
         let dest = allocate(&cands).unwrap_or(NodeId(ctx.home));

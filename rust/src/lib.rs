@@ -30,6 +30,7 @@ pub mod harness;
 pub mod metrics;
 pub mod nodes;
 pub mod obs;
+pub mod overload;
 pub mod paramdb;
 pub mod query;
 pub mod runtime;

@@ -50,7 +50,12 @@ without it, calibrated synthetic confidences are used.
 `query` runs a multi-query spec file ([[query]] blocks + [admission] headroom,
 see rust/configs/queries.toml): queries pass load-aware admission control, share one
 detect + edge-classify pass per frame, and stream per-query verdicts; with
---obs-out DIR each query also exports a deterministic query_<id>.jsonl.";
+--obs-out DIR each query also exports a deterministic query_<id>.jsonl.
+An [overload] block (see rust/configs/overload.toml) turns on overload control:
+bounded node/uplink queues with deadline-class-aware shedding (batch first,
+interactive last), a per-uplink circuit breaker, and a degradation ladder
+(subsample -> edge-local verdicts -> shed). Configs without the block behave
+byte-identically to earlier releases.";
 
 fn arg_value(args: &[String], flag: &str) -> Option<String> {
     args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
@@ -98,6 +103,7 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         .unwrap_or(Scheme::SurveilEdge);
     let mode = standard_mode(&cfg, has_flag(args, "--pjrt"))?;
     let obs_out = arg_value(args, "--obs-out");
+    let overload_on = cfg.overload.enabled;
     let reg = Registry::new();
     let mut builder = Harness::builder(cfg).mode(mode);
     if obs_out.is_some() {
@@ -114,6 +120,12 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
         r.latency.percentile(0.99),
         r.latency.std()
     );
+    if overload_on {
+        println!(
+            "overload: shed={} degraded={} retried={} lost={}",
+            r.faults.shed, r.faults.degraded, r.faults.retried, r.faults.lost
+        );
+    }
     if let Some(dir) = obs_out {
         write_obs(&dir, &reg, &[r.report()])?;
     }
@@ -186,6 +198,7 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     let queries = registry.snapshot();
 
     let mode = standard_mode(&cfg, has_flag(args, "--pjrt"))?;
+    let overload_on = cfg.overload.enabled;
     let mut h = Harness::builder(cfg)
         .mode(mode)
         .observe(reg.clone())
@@ -195,13 +208,20 @@ fn cmd_query(args: &[String]) -> anyhow::Result<()> {
     println!("{}", render_table("result", std::slice::from_ref(&r.row)));
     for q in &r.per_query {
         println!(
-            "  query {:<16} verdicts={:<6} positives={:<6} cloud={:<5} local={:<5} mean_latency={:.3}s",
+            "  query {:<16} verdicts={:<6} positives={:<6} cloud={:<5} local={:<5} shed={:<5} mean_latency={:.3}s",
             q.name,
             q.get("verdicts").unwrap_or(0.0),
             q.get("positives").unwrap_or(0.0),
             q.get("doubtful_cloud").unwrap_or(0.0),
             q.get("doubtful_local").unwrap_or(0.0),
+            q.get("shed").unwrap_or(0.0),
             q.get("mean_latency_s").unwrap_or(0.0),
+        );
+    }
+    if overload_on {
+        println!(
+            "overload: shed={} degraded={} retried={} lost={}",
+            r.faults.shed, r.faults.degraded, r.faults.retried, r.faults.lost
         );
     }
     if let Some(dir) = obs_out {

@@ -248,6 +248,11 @@ pub struct FaultStats {
     pub degraded: u64,
     /// Tasks that never received a verdict by the end of the run.
     pub lost: u64,
+    /// Tasks *explicitly* shed by overload control (bounded-queue
+    /// overflow, ladder shed level, or an exhausted retry budget). Shed
+    /// tasks are accounted, not lost: each gets a `shed` span and a
+    /// per-query `site = "shed"` record.
+    pub shed: u64,
     /// Seconds from the first crash to its failover sweep (0.0 when no
     /// sweep re-queued anything).
     pub time_to_reroute: f64,
@@ -256,16 +261,22 @@ pub struct FaultStats {
 impl FaultStats {
     /// Did the run see any fault-recovery activity at all?
     pub fn any(&self) -> bool {
-        self.retried + self.rerouted + self.degraded + self.lost > 0
+        self.retried + self.rerouted + self.degraded + self.lost + self.shed > 0
     }
 
     /// Contribute the recovery metrics to a [`crate::obs::Report`] (the
     /// one stable schema every consumer reads results through).
+    /// `faults_shed` appears only when overload control actually shed
+    /// something, so reports from runs without an `[overload]` block stay
+    /// byte-identical to pre-overload builds.
     pub fn fill_report(&self, r: &mut crate::obs::Report) {
         r.push("faults_retried", self.retried as f64);
         r.push("faults_rerouted", self.rerouted as f64);
         r.push("faults_degraded", self.degraded as f64);
         r.push("faults_lost", self.lost as f64);
+        if self.shed > 0 {
+            r.push("faults_shed", self.shed as f64);
+        }
         r.push("time_to_reroute_s", self.time_to_reroute);
     }
 }
@@ -324,9 +335,23 @@ mod tests {
     fn fault_stats_default_is_quiet() {
         let f = FaultStats::default();
         assert!(!f.any());
-        assert_eq!(f, FaultStats { retried: 0, rerouted: 0, degraded: 0, lost: 0, time_to_reroute: 0.0 });
+        assert_eq!(
+            f,
+            FaultStats { retried: 0, rerouted: 0, degraded: 0, lost: 0, shed: 0, time_to_reroute: 0.0 }
+        );
         assert!(FaultStats { retried: 1, ..FaultStats::default() }.any());
         assert!(FaultStats { lost: 1, ..FaultStats::default() }.any());
+        assert!(FaultStats { shed: 1, ..FaultStats::default() }.any());
+    }
+
+    #[test]
+    fn fill_report_emits_shed_only_when_nonzero() {
+        let mut quiet = crate::obs::Report::new("scheme_run", "test");
+        FaultStats::default().fill_report(&mut quiet);
+        assert!(quiet.get("faults_shed").is_none(), "no-shed reports stay schema-identical");
+        let mut shed = crate::obs::Report::new("scheme_run", "test");
+        FaultStats { shed: 3, ..FaultStats::default() }.fill_report(&mut shed);
+        assert_eq!(shed.get("faults_shed"), Some(3.0));
     }
 
     #[test]

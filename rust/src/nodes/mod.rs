@@ -22,6 +22,7 @@ use crate::config::Scheme;
 use crate::estimator::LatencyEstimator;
 use crate::harness::{classify_stage, policy_for, EdgeAction, PipelineCtx};
 use crate::metrics::{BandwidthMeter, Confusion, LatencyRecorder};
+use crate::overload::{DegradationLadder, LoadLevel};
 use crate::paramdb::{ParamDb, Value};
 use crate::query::{QuerySet, QueryVerdict};
 use crate::runtime::service::ServiceHandle;
@@ -123,6 +124,9 @@ pub struct RunMetrics {
     /// cloud's heartbeat was stale (graceful degradation: latency over
     /// accuracy, the §IV-D tradeoff taken to its failure-mode limit).
     pub degraded: AtomicU64,
+    /// Tasks explicitly dropped by overload control (the degradation
+    /// ladder's top rung) — never silently lost.
+    pub shed: AtomicU64,
     /// Optional metric registry mirroring every recorded verdict
     /// ([`RunMetrics::attach_registry`]).
     obs: Mutex<Option<crate::obs::Registry>>,
@@ -158,6 +162,33 @@ impl RunMetrics {
             reg.observe("surveiledge_node_latency_seconds", &[("site", site)], v.latency);
         }
     }
+
+    /// Count an explicit overload shed (mirrored into the registry when
+    /// one is attached).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        if let Some(reg) = self.obs.lock().unwrap().as_ref() {
+            reg.inc("surveiledge_node_shed_total", &[], 1);
+        }
+    }
+}
+
+/// Live-mode overload control for one edge: the same
+/// [`DegradationLadder`] the DES engine runs, fed from the worker's
+/// admitted-queue occupancy against a configured cap. `Subsample` lives
+/// in the frame feeder, not here; this worker enforces the `EdgeLocal`
+/// rung (through the shared classify stage) and the `Shed` rung.
+pub struct LiveOverload {
+    pub ladder: Mutex<DegradationLadder>,
+    /// Queue occupancy = `NodeState::queue / queue_cap` (cap 0 = no
+    /// pressure signal; the ladder then never escalates).
+    pub queue_cap: usize,
+}
+
+impl LiveOverload {
+    pub fn new(ladder: DegradationLadder, queue_cap: usize) -> LiveOverload {
+        LiveOverload { ladder: Mutex::new(ladder), queue_cap }
+    }
 }
 
 /// The per-edge classification worker (live mode).
@@ -176,13 +207,32 @@ pub struct EdgeWorker {
     /// Active multi-query set, if any: every edge verdict additionally
     /// fans out per-query threshold decisions on `query/<id>/results`.
     pub queries: Option<QuerySet>,
+    /// Overload control, if configured (`None` = the pre-overload
+    /// behavior, bit for bit).
+    pub overload: Option<LiveOverload>,
 }
 
 impl EdgeWorker {
     /// Process one task fully. Returns the verdict if answered at the
-    /// edge, `None` if the crop was uploaded for cloud re-classification.
+    /// edge, `None` if the crop was uploaded for cloud re-classification
+    /// — or explicitly shed by the degradation ladder's top rung
+    /// ([`RunMetrics::shed`] distinguishes the two).
     pub fn classify(&self, task: Task, now_fn: &dyn Fn() -> f64) -> crate::Result<Option<Verdict>> {
         let t0 = now_fn();
+        // Overload: refresh this edge's ladder from queue occupancy, and
+        // at the top rung drop the task before spending inference on it.
+        if let Some(ov) = &self.overload {
+            let pressure = if ov.queue_cap > 0 {
+                self.state.queue.load(Ordering::Relaxed) as f64 / ov.queue_cap as f64
+            } else {
+                0.0
+            };
+            let level = ov.ladder.lock().unwrap().observe(pressure, t0);
+            if level >= LoadLevel::Shed {
+                self.metrics.record_shed();
+                return Ok(None);
+            }
+        }
         let probs = self.service.edge_infer(self.state.id.0, task.crop.data.clone())?;
         let confidence = probs.get(1).copied().unwrap_or(0.0);
         // Heterogeneity: pad the measured service time by the slowdown.
@@ -324,6 +374,16 @@ impl PipelineCtx for LiveCtx<'_> {
 
     fn query_set(&self) -> Option<&QuerySet> {
         self.worker.queries.as_ref()
+    }
+
+    /// The live ladder level: at `EdgeLocal` and above the shared stage
+    /// answers doubtful crops locally instead of uploading — the same
+    /// behavior the DES engine shows under queue pressure.
+    fn overload_level(&self) -> LoadLevel {
+        self.worker
+            .overload
+            .as_ref()
+            .map_or(LoadLevel::Normal, |ov| ov.ladder.lock().unwrap().level())
     }
 }
 
@@ -644,6 +704,29 @@ mod tests {
         let adaptive = controller_for(Scheme::SurveilEdge, 0.1, 0.25, 1.0);
         assert!(adaptive.alpha >= 0.5);
         assert!(adaptive.beta < adaptive.alpha);
+    }
+
+    #[test]
+    fn run_metrics_count_explicit_sheds() {
+        let m = RunMetrics::default();
+        let reg = crate::obs::Registry::new();
+        m.attach_registry(reg.clone());
+        m.record_shed();
+        m.record_shed();
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2);
+        assert_eq!(reg.counter("surveiledge_node_shed_total", &[]), 2);
+    }
+
+    #[test]
+    fn live_overload_ladder_reaches_shed_under_sustained_pressure() {
+        use crate::overload::{LadderConfig, LoadLevel};
+        let ov = LiveOverload::new(DegradationLadder::new(LadderConfig::default()), 4);
+        // Saturated queue: pressure 1.0 escalates straight to the top rung.
+        assert_eq!(ov.ladder.lock().unwrap().observe(1.0, 0.0), LoadLevel::Shed);
+        // Cap 0 means no pressure signal — the ladder never escalates,
+        // matching the "no [overload] block" inert default.
+        let quiet = LiveOverload::new(DegradationLadder::new(LadderConfig::default()), 0);
+        assert_eq!(quiet.ladder.lock().unwrap().observe(0.0, 0.0), LoadLevel::Normal);
     }
 
     #[test]

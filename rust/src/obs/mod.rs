@@ -56,6 +56,18 @@ pub enum Stage {
     QueryAdmit,
     /// A query was retired from the registry.
     QueryRetire,
+    /// Overload control explicitly dropped the task (bounded-queue
+    /// overflow, ladder shed level, or exhausted retry budget).
+    Shed,
+    /// The degradation ladder dropped the detection before it became a
+    /// task (frame subsampling).
+    Subsample,
+    /// An uplink circuit breaker tripped open.
+    CircuitOpen,
+    /// An open breaker half-opened to probe the uplink.
+    CircuitProbe,
+    /// A half-open breaker closed after successful probes.
+    CircuitClose,
 }
 
 impl Stage {
@@ -76,6 +88,16 @@ impl Stage {
     /// Query lifecycle events (emitted by `query::QueryRegistry`).
     pub const QUERY_EVENTS: [Stage; 2] = [Stage::QueryAdmit, Stage::QueryRetire];
 
+    /// Overload-control events (emitted only when `[overload]` is
+    /// configured; see `crate::overload`).
+    pub const OVERLOAD_EVENTS: [Stage; 5] = [
+        Stage::Shed,
+        Stage::Subsample,
+        Stage::CircuitOpen,
+        Stage::CircuitProbe,
+        Stage::CircuitClose,
+    ];
+
     pub fn as_str(self) -> &'static str {
         match self {
             Stage::Detect => "detect",
@@ -90,6 +112,11 @@ impl Stage {
             Stage::Degrade => "degrade",
             Stage::QueryAdmit => "query_admit",
             Stage::QueryRetire => "query_retire",
+            Stage::Shed => "shed",
+            Stage::Subsample => "subsample",
+            Stage::CircuitOpen => "circuit_open",
+            Stage::CircuitProbe => "circuit_probe",
+            Stage::CircuitClose => "circuit_close",
         }
     }
 
@@ -98,6 +125,7 @@ impl Stage {
             .into_iter()
             .chain(Stage::FAULT_EVENTS)
             .chain(Stage::QUERY_EVENTS)
+            .chain(Stage::OVERLOAD_EVENTS)
             .find(|stage| stage.as_str() == s)
     }
 
@@ -720,6 +748,7 @@ mod tests {
             .into_iter()
             .chain(Stage::FAULT_EVENTS)
             .chain(Stage::QUERY_EVENTS)
+            .chain(Stage::OVERLOAD_EVENTS)
             .collect();
         for s in &all {
             assert_eq!(Stage::parse(s.as_str()), Some(*s));
@@ -734,6 +763,9 @@ mod tests {
         assert!(!Stage::QueryAdmit.is_fault_event());
         assert_eq!(Stage::parse("query_admit"), Some(Stage::QueryAdmit));
         assert_eq!(Stage::parse("query_retire"), Some(Stage::QueryRetire));
+        assert_eq!(Stage::parse("shed"), Some(Stage::Shed));
+        assert_eq!(Stage::parse("circuit_open"), Some(Stage::CircuitOpen));
+        assert!(!Stage::Shed.is_fault_event(), "shed is an overload event, not recovery");
     }
 
     #[test]

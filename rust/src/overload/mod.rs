@@ -1,0 +1,724 @@
+//! Overload control (DESIGN.md §11): bounded queues with deadline-aware
+//! shedding, an uplink circuit breaker, and a degradation ladder.
+//!
+//! The paper's controller (eqs. 8–9) and allocator (eq. 7) trade accuracy
+//! for latency under *steady* load, but nothing bounds a backlog once the
+//! offered load exceeds capacity: a camera burst or a slow-node window
+//! grows queues without limit and interactive queries silently blow their
+//! deadlines. This module adds the missing layer between admission
+//! control (PR 9) and fault tolerance (PR 2):
+//!
+//! * [`OverloadConfig`] — the `[overload]` TOML block: queue capacities,
+//!   breaker thresholds, ladder thresholds, burst windows. A config
+//!   without the block leaves `enabled == false` and every consumer
+//!   treats the whole subsystem as absent — existing runs stay
+//!   byte-identical.
+//! * [`CircuitBreaker`] — per-uplink closed → open → half-open state
+//!   machine over ack-timeouts/queue-full failures, with a doubling
+//!   open-dwell (hysteresis) so an oscillating fault plan cannot make it
+//!   flap.
+//! * [`DegradationLadder`] — queue-pressure-driven response levels:
+//!   subsample first, then edge-local verdicts (PR 2's degrade path),
+//!   then shedding; recovery steps back down one level at a time and only
+//!   after sustained slack.
+//! * [`shed_victim`] — the deadline-class-aware shed policy: batch sheds
+//!   first, then standard; interactive is shed-last.
+//!
+//! Everything here is pure state fed with simulated (or wall) time — no
+//! RNG, no clock reads — so both substrates drive it deterministically.
+
+use crate::faults::BurstWindow;
+use crate::query::DeadlineClass;
+
+/// Circuit-breaker thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failures (ack timeout / queue full) that trip the
+    /// breaker open.
+    pub trip_after: u32,
+    /// Base open dwell (seconds) before the breaker half-opens to probe.
+    pub cooldown: f64,
+    /// Hysteresis cap: each failed probe doubles the dwell up to here, so
+    /// a persistently flapping uplink is probed ever more rarely.
+    pub cooldown_max: f64,
+    /// Consecutive half-open probe successes required to close again.
+    pub probe_successes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig { trip_after: 3, cooldown: 2.0, cooldown_max: 16.0, probe_successes: 2 }
+    }
+}
+
+/// Breaker state: `Closed` (traffic flows), `Open` (uplink shunned),
+/// `HalfOpen` (probing).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// A state-machine edge actually taken — the caller turns these into
+/// `circuit_open` / `circuit_probe` / `circuit_close` span events.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Transition {
+    /// Closed → Open or HalfOpen → Open.
+    Opened,
+    /// Open → HalfOpen (dwell elapsed; probing starts).
+    HalfOpened,
+    /// HalfOpen → Closed (probes succeeded; dwell resets).
+    Closed,
+}
+
+/// Per-uplink circuit breaker. Transitions only along
+/// closed → open → half-open → {closed, open}; the open dwell doubles on
+/// every failed probe (up to [`BreakerConfig::cooldown_max`]) so the
+/// machine cannot flap under an oscillating fault plan.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    /// Consecutive failures while closed.
+    failures: u32,
+    /// Consecutive probe successes while half-open.
+    successes: u32,
+    opened_at: f64,
+    /// Current open dwell (grows ×2 per failed probe, capped).
+    dwell: f64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            state: BreakerState::Closed,
+            failures: 0,
+            successes: 0,
+            opened_at: 0.0,
+            dwell: cfg.cooldown,
+            cfg,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// Current open dwell (diagnostics; grows under hysteresis).
+    pub fn dwell(&self) -> f64 {
+        self.dwell
+    }
+
+    /// Advance time: an open breaker whose dwell has elapsed half-opens.
+    pub fn poll(&mut self, t: f64) -> Option<Transition> {
+        if self.state == BreakerState::Open && t >= self.opened_at + self.dwell {
+            self.state = BreakerState::HalfOpen;
+            self.successes = 0;
+            return Some(Transition::HalfOpened);
+        }
+        None
+    }
+
+    /// May traffic use the guarded path at `t`? Polls first, so an
+    /// expired dwell lets a probe through. Returns the transition taken
+    /// (if any) alongside the verdict.
+    pub fn allows(&mut self, t: f64) -> (bool, Option<Transition>) {
+        let tr = self.poll(t);
+        (self.state != BreakerState::Open, tr)
+    }
+
+    /// An ack arrived (delivery succeeded).
+    pub fn on_success(&mut self, t: f64) -> Option<Transition> {
+        let _ = self.poll(t);
+        match self.state {
+            BreakerState::Closed => {
+                self.failures = 0;
+                None
+            }
+            BreakerState::HalfOpen => {
+                self.successes += 1;
+                if self.successes >= self.cfg.probe_successes.max(1) {
+                    self.state = BreakerState::Closed;
+                    self.failures = 0;
+                    self.dwell = self.cfg.cooldown;
+                    Some(Transition::Closed)
+                } else {
+                    None
+                }
+            }
+            // A straggler ack from before the trip: ignored.
+            BreakerState::Open => None,
+        }
+    }
+
+    /// An ack timeout / queue-full failure on the guarded path.
+    pub fn on_failure(&mut self, t: f64) -> Option<Transition> {
+        let _ = self.poll(t);
+        match self.state {
+            BreakerState::Closed => {
+                self.failures += 1;
+                if self.failures >= self.cfg.trip_after.max(1) {
+                    self.trip(t);
+                    Some(Transition::Opened)
+                } else {
+                    None
+                }
+            }
+            BreakerState::HalfOpen => {
+                // Failed probe: reopen and back the dwell off (hysteresis).
+                self.dwell = (self.dwell * 2.0).min(self.cfg.cooldown_max.max(self.cfg.cooldown));
+                self.trip(t);
+                Some(Transition::Opened)
+            }
+            BreakerState::Open => None,
+        }
+    }
+
+    fn trip(&mut self, t: f64) {
+        self.state = BreakerState::Open;
+        self.opened_at = t;
+        self.failures = 0;
+        self.successes = 0;
+    }
+}
+
+/// Degradation-ladder response level, ordered by severity.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum LoadLevel {
+    /// No overload response.
+    Normal,
+    /// Thin the offered load: drop a deterministic fraction of detections
+    /// before they become tasks.
+    Subsample,
+    /// Answer doubtful crops at the edge instead of uploading (PR 2's
+    /// degrade path, now driven by pressure instead of a dead cloud).
+    EdgeLocal,
+    /// Shed batch-class tasks at admission (bounded queues shed on
+    /// overflow at every level).
+    Shed,
+}
+
+impl LoadLevel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LoadLevel::Normal => "normal",
+            LoadLevel::Subsample => "subsample",
+            LoadLevel::EdgeLocal => "edge_local",
+            LoadLevel::Shed => "shed",
+        }
+    }
+
+    fn step_down(self) -> LoadLevel {
+        match self {
+            LoadLevel::Normal | LoadLevel::Subsample => LoadLevel::Normal,
+            LoadLevel::EdgeLocal => LoadLevel::Subsample,
+            LoadLevel::Shed => LoadLevel::EdgeLocal,
+        }
+    }
+}
+
+/// Ladder thresholds over the queue-pressure signal (pressure = worst
+/// queue-occupancy fraction across the edge's node queue and uplink).
+#[derive(Clone, Copy, Debug)]
+pub struct LadderConfig {
+    /// Pressure at or above `up[k]` escalates to level `k+1`
+    /// (Subsample / EdgeLocal / Shed). Must be non-decreasing.
+    pub up: [f64; 3],
+    /// Pressure at or below this counts as slack.
+    pub slack: f64,
+    /// Seconds of *sustained* slack required per step back down.
+    pub sustain: f64,
+}
+
+impl Default for LadderConfig {
+    fn default() -> LadderConfig {
+        LadderConfig { up: [0.5, 0.75, 0.9], slack: 0.35, sustain: 5.0 }
+    }
+}
+
+/// The per-edge degradation ladder: escalates immediately when pressure
+/// crosses a threshold, steps down one level at a time only after
+/// [`LadderConfig::sustain`] seconds of uninterrupted slack.
+#[derive(Clone, Debug)]
+pub struct DegradationLadder {
+    cfg: LadderConfig,
+    level: LoadLevel,
+    slack_since: Option<f64>,
+}
+
+impl DegradationLadder {
+    pub fn new(cfg: LadderConfig) -> DegradationLadder {
+        DegradationLadder { cfg, level: LoadLevel::Normal, slack_since: None }
+    }
+
+    pub fn level(&self) -> LoadLevel {
+        self.level
+    }
+
+    /// Feed one pressure observation at time `t`; returns the (possibly
+    /// new) level. Escalation is immediate; de-escalation needs sustained
+    /// slack and moves one rung per sustain window.
+    pub fn observe(&mut self, pressure: f64, t: f64) -> LoadLevel {
+        let target = if pressure >= self.cfg.up[2] {
+            LoadLevel::Shed
+        } else if pressure >= self.cfg.up[1] {
+            LoadLevel::EdgeLocal
+        } else if pressure >= self.cfg.up[0] {
+            LoadLevel::Subsample
+        } else {
+            LoadLevel::Normal
+        };
+        if target > self.level {
+            self.level = target;
+            self.slack_since = None;
+        } else if pressure <= self.cfg.slack {
+            match self.slack_since {
+                None => self.slack_since = Some(t),
+                Some(since) if t - since >= self.cfg.sustain => {
+                    if self.level > LoadLevel::Normal {
+                        self.level = self.level.step_down();
+                    }
+                    // Restart the window: one rung per sustain period.
+                    self.slack_since = Some(t);
+                }
+                Some(_) => {}
+            }
+        } else {
+            // Pressure between slack and the current level's threshold:
+            // hold the level, reset the slack clock.
+            self.slack_since = None;
+        }
+        self.level
+    }
+}
+
+/// Deadline-class-aware shed policy for a full queue: given the classes
+/// of the queued tasks (`classes[..start]` are in service and
+/// untouchable) and the class of the arriving task, pick the victim.
+///
+/// Returns `Some(index)` of the queued task to evict — the *youngest*
+/// entry of the least-demanding class, so batch sheds first and the work
+/// already closest to service survives — or `None` when the incoming task
+/// itself is the cheapest to drop (its class is no more demanding than
+/// everything queued).
+pub fn shed_victim(
+    classes: &[DeadlineClass],
+    start: usize,
+    incoming: DeadlineClass,
+) -> Option<usize> {
+    let mut victim: Option<(usize, f64)> = None;
+    for (i, c) in classes.iter().enumerate().skip(start) {
+        let w = c.weight();
+        // `>=` keeps scanning: the youngest (back-most) minimal entry wins.
+        if victim.is_none_or(|(_, bw)| bw >= w) {
+            victim = Some((i, w));
+        }
+    }
+    match victim {
+        Some((i, w)) if w < incoming.weight() => Some(i),
+        _ => None,
+    }
+}
+
+/// The `[overload]` TOML block. `enabled == false` (no block present)
+/// means the whole subsystem is inert: no bounded queues, no breaker, no
+/// ladder, no new metric series — existing runs stay byte-identical.
+#[derive(Clone, Debug)]
+pub struct OverloadConfig {
+    pub enabled: bool,
+    /// Per-node queue capacity (tasks, including the one in service);
+    /// 0 = unbounded.
+    pub node_queue_cap: usize,
+    /// Per-uplink queue capacity (transfers, including in flight);
+    /// 0 = unbounded.
+    pub uplink_queue_cap: usize,
+    /// Max in-flight ack-timeout retries per home edge (0 = unlimited):
+    /// caps PR 2's retry storm so a slow-node window cannot multiply
+    /// queue depth.
+    pub retry_budget: u32,
+    pub breaker: BreakerConfig,
+    pub ladder: LadderConfig,
+    /// Fraction of detections dropped (deterministically, by task hash)
+    /// while the ladder is at `Subsample` or above.
+    pub subsample_drop: f64,
+    /// Camera-burst windows: every detection in `[from, until)` yields
+    /// `factor` tasks instead of one (the seeded overload scenario).
+    pub bursts: Vec<BurstWindow>,
+}
+
+impl Default for OverloadConfig {
+    fn default() -> OverloadConfig {
+        OverloadConfig {
+            enabled: false,
+            node_queue_cap: 16,
+            uplink_queue_cap: 8,
+            retry_budget: 8,
+            breaker: BreakerConfig::default(),
+            ladder: LadderConfig::default(),
+            subsample_drop: 0.5,
+            bursts: Vec::new(),
+        }
+    }
+}
+
+impl OverloadConfig {
+    /// Task multiplier at time `t` (1 outside every burst window;
+    /// overlapping windows multiply).
+    pub fn burst_factor(&self, t: f64) -> u32 {
+        let mut f = 1u32;
+        for b in &self.bursts {
+            if b.covers(t) {
+                f = f.saturating_mul(b.factor.max(1));
+            }
+        }
+        f
+    }
+
+    /// Validate ranges (called by the config parser).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.subsample_drop),
+            "overload.subsample_drop must be in [0,1]"
+        );
+        anyhow::ensure!(
+            self.ladder.up[0] <= self.ladder.up[1] && self.ladder.up[1] <= self.ladder.up[2],
+            "overload.ladder_up must be non-decreasing"
+        );
+        anyhow::ensure!(self.breaker.cooldown > 0.0, "overload.cooldown must be positive");
+        anyhow::ensure!(
+            self.breaker.cooldown_max >= self.breaker.cooldown,
+            "overload.cooldown_max must be >= overload.cooldown"
+        );
+        anyhow::ensure!(self.ladder.sustain > 0.0, "overload.ladder_sustain must be positive");
+        for b in &self.bursts {
+            anyhow::ensure!(b.until > b.from, "overload burst window must have until > from");
+            anyhow::ensure!(b.factor >= 1, "overload burst_factor must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+
+    fn bcfg() -> BreakerConfig {
+        BreakerConfig { trip_after: 3, cooldown: 2.0, cooldown_max: 16.0, probe_successes: 2 }
+    }
+
+    #[test]
+    fn breaker_trips_after_consecutive_failures_only() {
+        let mut b = CircuitBreaker::new(bcfg());
+        assert_eq!(b.on_failure(1.0), None);
+        assert_eq!(b.on_failure(1.1), None);
+        // A success in between resets the streak.
+        assert_eq!(b.on_success(1.2), None);
+        assert_eq!(b.on_failure(1.3), None);
+        assert_eq!(b.on_failure(1.4), None);
+        assert_eq!(b.on_failure(1.5), Some(Transition::Opened));
+        assert_eq!(b.state(), BreakerState::Open);
+        // Open: traffic blocked until the dwell elapses.
+        assert!(!b.allows(2.0).0);
+        let (ok, tr) = b.allows(1.5 + 2.0);
+        assert!(ok, "dwell elapsed: probe traffic allowed");
+        assert_eq!(tr, Some(Transition::HalfOpened));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+    }
+
+    #[test]
+    fn breaker_half_open_closes_after_probe_successes() {
+        let mut b = CircuitBreaker::new(bcfg());
+        for i in 0..3 {
+            b.on_failure(i as f64 * 0.1);
+        }
+        b.poll(10.0);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.on_success(10.1), None, "one probe is not enough");
+        assert_eq!(b.on_success(10.2), Some(Transition::Closed));
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.dwell(), 2.0, "closing resets the dwell to the base cooldown");
+    }
+
+    #[test]
+    fn breaker_failed_probe_reopens_with_doubled_dwell() {
+        let mut b = CircuitBreaker::new(bcfg());
+        for i in 0..3 {
+            b.on_failure(i as f64 * 0.1);
+        }
+        b.poll(10.0);
+        assert_eq!(b.on_failure(10.1), Some(Transition::Opened));
+        assert_eq!(b.dwell(), 4.0, "failed probe doubles the dwell");
+        assert!(!b.allows(12.0).0, "the longer dwell holds");
+        assert!(b.allows(14.2).0);
+        // Keep failing probes: the dwell saturates at cooldown_max.
+        for _ in 0..8 {
+            let t = b.opened_at + b.dwell;
+            b.poll(t);
+            b.on_failure(t + 0.01);
+        }
+        assert_eq!(b.dwell(), 16.0);
+    }
+
+    #[test]
+    fn prop_breaker_transitions_stay_on_allowed_edges() {
+        check("breaker_edges", |rng, _| {
+            let cfg = BreakerConfig {
+                trip_after: rng.range_usize(1, 5) as u32,
+                cooldown: rng.range_f64(0.5, 4.0),
+                cooldown_max: rng.range_f64(4.0, 32.0),
+                probe_successes: rng.range_usize(1, 4) as u32,
+            };
+            let mut b = CircuitBreaker::new(cfg);
+            let mut t = 0.0;
+            for _ in 0..200 {
+                t += rng.range_f64(0.01, 3.0);
+                // Surface the dwell-elapse edge first: on_success/on_failure
+                // poll internally, so without this a single call could take
+                // the composite Open -> HalfOpen -> {Open, Closed} path and
+                // look like an illegal edge from the outside.
+                let pre = b.state();
+                if let Some(tr) = b.poll(t) {
+                    assert_eq!(pre, BreakerState::Open);
+                    assert_eq!(tr, Transition::HalfOpened);
+                    assert_eq!(b.state(), BreakerState::HalfOpen);
+                }
+                let before = b.state();
+                let tr = match rng.range_usize(0, 3) {
+                    0 => b.on_success(t),
+                    1 => b.on_failure(t),
+                    _ => b.poll(t),
+                };
+                let after = b.state();
+                match (before, after) {
+                    // Self-loops carry no transition event.
+                    (a, b2) if a == b2 => assert_eq!(tr, None, "{a:?} self-loop emitted {tr:?}"),
+                    (BreakerState::Closed, BreakerState::Open)
+                    | (BreakerState::HalfOpen, BreakerState::Open) => {
+                        assert_eq!(tr, Some(Transition::Opened))
+                    }
+                    (BreakerState::Open, BreakerState::HalfOpen) => {
+                        assert_eq!(tr, Some(Transition::HalfOpened))
+                    }
+                    (BreakerState::HalfOpen, BreakerState::Closed) => {
+                        assert_eq!(tr, Some(Transition::Closed))
+                    }
+                    (a, b2) => panic!("illegal transition {a:?} -> {b2:?}"),
+                }
+                // Invariant: dwell stays within [cooldown, max(cooldown, cooldown_max)].
+                assert!(b.dwell() >= cfg.cooldown - 1e-12);
+                assert!(b.dwell() <= cfg.cooldown_max.max(cfg.cooldown) + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_breaker_never_flaps_under_an_oscillating_oracle() {
+        // An adversarial on/off fault oracle: while "down" every delivery
+        // fails, while "up" every delivery succeeds, with a random
+        // oscillation period. Hysteresis must make the gaps between
+        // consecutive re-openings (with no close in between)
+        // non-decreasing — the breaker probes a flapping link ever more
+        // rarely instead of chattering.
+        check("breaker_no_flap", |rng, _| {
+            let cfg = bcfg();
+            let mut b = CircuitBreaker::new(cfg);
+            let period = rng.range_f64(0.3, 6.0);
+            let dt = 0.05;
+            let mut t = 0.0;
+            // Openings since the last close: a close resets the dwell to
+            // the base cooldown, so the monotone-gap claim only holds
+            // within one open/probe/re-open run.
+            let mut openings: Vec<f64> = Vec::new();
+            let mut total_openings = 0usize;
+            let mut gap_floor = 0.0f64;
+            while t < 240.0 {
+                t += dt;
+                let down = ((t / period) as u64) % 2 == 0;
+                let (ok, _) = b.allows(t);
+                if !ok {
+                    continue; // open: no traffic offered
+                }
+                let tr = if down { b.on_failure(t) } else { b.on_success(t) };
+                match tr {
+                    Some(Transition::Opened) => {
+                        total_openings += 1;
+                        if let Some(&prev) = openings.last() {
+                            let gap = t - prev;
+                            assert!(
+                                gap + 1e-9 >= gap_floor.min(cfg.cooldown_max),
+                                "re-opened after {gap:.2}s, floor was {gap_floor:.2}s"
+                            );
+                            gap_floor = gap_floor.max(gap.min(cfg.cooldown_max));
+                        } else {
+                            gap_floor = b.dwell();
+                        }
+                        openings.push(t);
+                    }
+                    Some(Transition::Closed) => {
+                        gap_floor = 0.0;
+                        openings.clear();
+                    }
+                    _ => {}
+                }
+            }
+            // Hard bound: with a doubling dwell the breaker can open at
+            // most ~ horizon/cooldown + log2(max/base) times; far below
+            // the per-tick chatter an unhysteresised machine would show.
+            assert!(
+                total_openings as f64 <= 240.0 / cfg.cooldown + 8.0,
+                "breaker flapped: {total_openings} openings"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_breaker_trajectory_is_seed_deterministic() {
+        // The same event sequence must drive two breakers through the
+        // same trajectory — no hidden state, no clock reads.
+        check("breaker_determinism", |rng, _| {
+            let cfg = BreakerConfig {
+                trip_after: rng.range_usize(1, 5) as u32,
+                cooldown: rng.range_f64(0.5, 4.0),
+                cooldown_max: rng.range_f64(4.0, 32.0),
+                probe_successes: rng.range_usize(1, 4) as u32,
+            };
+            let script: Vec<(f64, u8)> = {
+                let mut t = 0.0;
+                (0..128)
+                    .map(|_| {
+                        t += rng.range_f64(0.01, 2.0);
+                        (t, rng.range_usize(0, 3) as u8)
+                    })
+                    .collect()
+            };
+            let mut a = CircuitBreaker::new(cfg);
+            let mut b = CircuitBreaker::new(cfg);
+            for &(t, op) in &script {
+                let (ta, tb) = match op {
+                    0 => (a.on_success(t), b.on_success(t)),
+                    1 => (a.on_failure(t), b.on_failure(t)),
+                    _ => (a.poll(t), b.poll(t)),
+                };
+                assert_eq!(ta, tb);
+                assert_eq!(a.state(), b.state());
+                assert_eq!(a.dwell(), b.dwell());
+            }
+        });
+    }
+
+    #[test]
+    fn ladder_escalates_immediately_and_recovers_slowly() {
+        let mut l = DegradationLadder::new(LadderConfig::default());
+        assert_eq!(l.observe(0.2, 0.0), LoadLevel::Normal);
+        assert_eq!(l.observe(0.6, 1.0), LoadLevel::Subsample);
+        // Straight to Shed on a spike — no rung-at-a-time on the way up.
+        assert_eq!(l.observe(0.95, 2.0), LoadLevel::Shed);
+        // Slack must be *sustained*: a blip resets the clock.
+        assert_eq!(l.observe(0.1, 3.0), LoadLevel::Shed);
+        assert_eq!(l.observe(0.5, 5.0), LoadLevel::Shed, "pressure blip resets slack");
+        assert_eq!(l.observe(0.1, 6.0), LoadLevel::Shed);
+        assert_eq!(l.observe(0.1, 10.0), LoadLevel::Shed, "4s < sustain window");
+        assert_eq!(l.observe(0.1, 11.0), LoadLevel::EdgeLocal, "one rung down after 5s slack");
+        assert_eq!(l.observe(0.1, 16.0), LoadLevel::Subsample);
+        assert_eq!(l.observe(0.1, 21.0), LoadLevel::Normal);
+        assert_eq!(l.observe(0.1, 26.0), LoadLevel::Normal, "floor holds");
+    }
+
+    #[test]
+    fn ladder_holds_level_between_slack_and_threshold() {
+        let mut l = DegradationLadder::new(LadderConfig::default());
+        l.observe(0.8, 0.0);
+        assert_eq!(l.level(), LoadLevel::EdgeLocal);
+        // 0.4 is below every up-threshold but above slack: hold.
+        for i in 1..20 {
+            assert_eq!(l.observe(0.4, i as f64), LoadLevel::EdgeLocal);
+        }
+    }
+
+    #[test]
+    fn shed_victim_sheds_batch_first_interactive_last() {
+        use DeadlineClass::*;
+        let q = [Interactive, Batch, Standard, Batch, Standard];
+        // Youngest batch entry (index 3) goes first.
+        assert_eq!(shed_victim(&q, 0, Interactive), Some(3));
+        assert_eq!(shed_victim(&q, 0, Standard), Some(3));
+        // An incoming batch task never evicts anyone of its own class.
+        assert_eq!(shed_victim(&q, 0, Batch), None);
+        // All-interactive queue: an incoming standard task sheds itself.
+        assert_eq!(shed_victim(&[Interactive, Interactive], 0, Standard), None);
+        // Interactive incoming evicts the youngest standard.
+        assert_eq!(shed_victim(&[Standard, Interactive, Standard], 0, Interactive), Some(2));
+        // The in-service prefix is untouchable.
+        assert_eq!(shed_victim(&[Batch, Interactive], 1, Standard), None);
+        assert_eq!(shed_victim(&[Batch, Batch, Interactive], 1, Standard), Some(1));
+        // Empty scan range: shed the incoming task.
+        assert_eq!(shed_victim(&[], 0, Batch), None);
+    }
+
+    #[test]
+    fn prop_shed_victim_never_picks_a_more_demanding_class() {
+        use DeadlineClass::*;
+        let classes = [Interactive, Standard, Batch];
+        check("shed_victim_order", |rng, _| {
+            let n = rng.range_usize(0, 10);
+            let q: Vec<DeadlineClass> =
+                (0..n).map(|_| classes[rng.range_usize(0, 3)]).collect();
+            let start = if n == 0 { 0 } else { rng.range_usize(0, n + 1) };
+            let incoming = classes[rng.range_usize(0, 3)];
+            match shed_victim(&q, start, incoming) {
+                Some(i) => {
+                    assert!(i >= start, "victim {i} inside the in-service prefix");
+                    let vw = q[i].weight();
+                    assert!(vw < incoming.weight(), "victim not cheaper than incoming");
+                    for (j, c) in q.iter().enumerate().skip(start) {
+                        assert!(
+                            c.weight() >= vw,
+                            "queued {j} ({c:?}) is cheaper than the victim"
+                        );
+                        if c.weight() == vw {
+                            assert!(j <= i, "victim must be the youngest minimal entry");
+                        }
+                    }
+                }
+                None => {
+                    // Correct iff nothing strictly cheaper is evictable.
+                    assert!(q
+                        .iter()
+                        .skip(start)
+                        .all(|c| c.weight() >= incoming.weight()));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn overload_config_defaults_disabled_and_validates() {
+        let c = OverloadConfig::default();
+        assert!(!c.enabled);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.burst_factor(10.0), 1);
+        let mut bad = OverloadConfig { subsample_drop: 1.5, ..OverloadConfig::default() };
+        assert!(bad.validate().is_err());
+        bad.subsample_drop = 0.5;
+        bad.ladder.up = [0.9, 0.5, 0.7];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn burst_windows_multiply() {
+        let c = OverloadConfig {
+            bursts: vec![
+                BurstWindow { from: 10.0, until: 20.0, factor: 3 },
+                BurstWindow { from: 15.0, until: 30.0, factor: 2 },
+            ],
+            ..OverloadConfig::default()
+        };
+        assert_eq!(c.burst_factor(5.0), 1);
+        assert_eq!(c.burst_factor(12.0), 3);
+        assert_eq!(c.burst_factor(16.0), 6, "overlapping windows multiply");
+        assert_eq!(c.burst_factor(25.0), 2);
+        assert_eq!(c.burst_factor(30.0), 1, "half-open interval");
+    }
+}

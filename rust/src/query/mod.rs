@@ -198,7 +198,9 @@ pub struct QueryVerdict {
     pub positive: bool,
     /// The shared edge confidence this decision thresholded.
     pub confidence: f32,
-    /// Where the decision came from: "edge", "cloud", or "local".
+    /// Where the decision came from: "edge", "cloud", or "local" — or
+    /// "shed" when overload control explicitly dropped the task (the row
+    /// is accounting, not an answer: `positive` is always false).
     pub site: &'static str,
     /// End-to-end latency of the shared task (seconds).
     pub latency: f64,
@@ -208,6 +210,7 @@ fn site_code(site: &str) -> u8 {
     match site {
         "edge" => 0,
         "cloud" => 1,
+        "shed" => 3,
         _ => 2,
     }
 }
@@ -216,6 +219,7 @@ fn site_from_code(code: u8) -> &'static str {
     match code {
         0 => "edge",
         1 => "cloud",
+        3 => "shed",
         _ => "local",
     }
 }
@@ -323,6 +327,19 @@ impl QuerySet {
             .unwrap_or(1.0)
     }
 
+    /// The most demanding active deadline class for a task from `camera`
+    /// at `t` — what overload control's shed policy protects. `Standard`
+    /// when no query is active (matching [`QuerySet::route_weight`]'s
+    /// 1.0 default).
+    pub fn dominant_class(&self, camera: CameraId, t: f64) -> DeadlineClass {
+        self.active(camera, t)
+            .map(|(_, s)| s.deadline)
+            .fold(None, |acc: Option<DeadlineClass>, c| {
+                Some(acc.map_or(c, |a| if c.weight() > a.weight() { c } else { a }))
+            })
+            .unwrap_or(DeadlineClass::Standard)
+    }
+
     /// Publish one verdict on `query/<id>/results` (QoS 0 — results are
     /// a stream; a full subscriber queue drops, it never stalls the
     /// pipeline).
@@ -340,8 +357,18 @@ impl QuerySet {
             .iter()
             .map(|spec| {
                 let mut r = Report::new("query_run", &spec.id);
-                let mine: Vec<&QueryVerdict> =
-                    verdicts.iter().filter(|v| v.query == spec.id).collect();
+                // Shed rows are accounting, not answers: they carry their
+                // own counter and stay out of every answer statistic, so
+                // a run that sheds nothing reports byte-identically to a
+                // pre-overload build.
+                let shed = verdicts
+                    .iter()
+                    .filter(|v| v.query == spec.id && v.site == "shed")
+                    .count();
+                let mine: Vec<&QueryVerdict> = verdicts
+                    .iter()
+                    .filter(|v| v.query == spec.id && v.site != "shed")
+                    .collect();
                 let positives = mine.iter().filter(|v| v.positive).count();
                 let cloud = mine.iter().filter(|v| v.site == "cloud").count();
                 let local = mine.iter().filter(|v| v.site == "local").count();
@@ -355,6 +382,9 @@ impl QuerySet {
                     "mean_latency_s",
                     if mine.is_empty() { 0.0 } else { lat_sum / mine.len() as f64 },
                 );
+                if shed > 0 {
+                    r.push("shed", shed as f64);
+                }
                 r
             })
             .collect()
@@ -811,7 +841,7 @@ mod tests {
 
     #[test]
     fn verdict_encode_decode_roundtrip() {
-        for site in ["edge", "cloud", "local"] {
+        for site in ["edge", "cloud", "local", "shed"] {
             let v = QueryVerdict {
                 query: "amber-moped".to_string(),
                 task: 421,
@@ -909,6 +939,57 @@ mod tests {
         assert_eq!(reports[1].name, "b");
         assert_eq!(reports[1].get("verdicts"), Some(0.0));
         assert_eq!(reports[1].get("mean_latency_s"), Some(0.0));
+    }
+
+    #[test]
+    fn dominant_class_takes_most_demanding_active_query() {
+        let mut a = spec("a", ClassId::Moped, &[0]);
+        a.deadline = DeadlineClass::Batch;
+        let mut b = spec("b", ClassId::Person, &[0]);
+        b.deadline = DeadlineClass::Interactive;
+        let qs = QuerySet::new(vec![a, b]).unwrap();
+        assert_eq!(qs.dominant_class(CameraId(0), 1.0), DeadlineClass::Interactive);
+        // No active query -> standard, matching route_weight's 1.0.
+        assert_eq!(qs.dominant_class(CameraId(1), 1.0), DeadlineClass::Standard);
+        let mut lone = spec("lone", ClassId::Moped, &[3]);
+        lone.deadline = DeadlineClass::Batch;
+        let qs = QuerySet::new(vec![lone]).unwrap();
+        assert_eq!(qs.dominant_class(CameraId(3), 1.0), DeadlineClass::Batch);
+    }
+
+    #[test]
+    fn per_query_reports_count_shed_separately() {
+        let qs = QuerySet::new(vec![spec("a", ClassId::Moped, &[])]).unwrap();
+        let answered = QueryVerdict {
+            query: "a".into(),
+            task: 1,
+            t: 1.0,
+            positive: true,
+            confidence: 0.9,
+            site: "edge",
+            latency: 0.2,
+        };
+        let shed = QueryVerdict {
+            query: "a".into(),
+            task: 2,
+            t: 2.0,
+            positive: false,
+            confidence: 0.5,
+            site: "shed",
+            latency: 3.0,
+        };
+        let with_shed = qs.per_query_reports(&[answered.clone(), shed])[0].clone();
+        assert_eq!(with_shed.get("shed"), Some(1.0));
+        assert_eq!(with_shed.get("verdicts"), Some(1.0), "shed rows are not answers");
+        assert_eq!(with_shed.get("negatives"), Some(0.0));
+        assert!(
+            (with_shed.get("mean_latency_s").unwrap() - 0.2).abs() < 1e-12,
+            "shed latency stays out of answer statistics"
+        );
+        // No shed -> the metric is absent, keeping the schema identical
+        // to pre-overload reports.
+        let without = qs.per_query_reports(&[answered])[0].clone();
+        assert!(without.get("shed").is_none());
     }
 
     #[test]

@@ -94,6 +94,20 @@ pub fn record_allocation(reg: &Registry, scheme: &str, dest: NodeId, candidates:
     }
 }
 
+/// Record one candidate exclusion into a metric registry: a node that eq.
+/// 7 never considered and why (`reason`: "circuit_open", "stale_hb",
+/// ...). Overload control uses this when an open uplink breaker removes
+/// the cloud from candidacy, composing with the stale-heartbeat exclusion
+/// that simply never pushes dead nodes.
+pub fn record_exclusion(reg: &Registry, scheme: &str, node: NodeId, reason: &str) {
+    let nl = node_label(node.0);
+    reg.inc(
+        "surveiledge_sched_skipped_total",
+        &[("scheme", scheme), ("node", nl.as_str()), ("reason", reason)],
+        1,
+    );
+}
+
 /// Configuration for the eq. 8–9 controller.
 #[derive(Clone, Copy, Debug)]
 pub struct ThresholdConfig {
@@ -227,6 +241,20 @@ mod tests {
         let c = vec![load(7, 3, 1.0), load(5, 2, 0.5), load(2, 2, 0.5)];
         // costs: 3.0, 1.0, 1.0 -> tie between id 5 and id 2 -> id 2
         assert_eq!(allocate(&c), Some(NodeId(2)));
+    }
+
+    #[test]
+    fn record_exclusion_labels_node_and_reason() {
+        let reg = Registry::new();
+        record_exclusion(&reg, "SE", NodeId::CLOUD, "circuit_open");
+        record_exclusion(&reg, "SE", NodeId::CLOUD, "circuit_open");
+        assert_eq!(
+            reg.counter(
+                "surveiledge_sched_skipped_total",
+                &[("scheme", "SE"), ("node", "cloud"), ("reason", "circuit_open")],
+            ),
+            2
+        );
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //! recovery metrics exactly. Runs entirely in simulated time.
 
 use surveiledge::config::{Config, Scheme};
-use surveiledge::faults::{CrashWindow, FaultPlan, LinkFaults};
+use surveiledge::faults::{BurstWindow, CrashWindow, FaultPlan, LinkFaults};
 use surveiledge::harness::{run_all_schemes, ComputeMode, Harness, RunSpec, SchemeResult};
+use surveiledge::obs::Registry;
+use surveiledge::overload::{BreakerConfig, OverloadConfig};
 
 fn synth() -> ComputeMode {
     ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
@@ -122,6 +124,89 @@ fn edge_only_survives_crash_via_recovery_drain() {
         .map(|(_, l, _)| *l)
         .fold(0.0f64, f64::max);
     assert!(edge1_max > 20.0, "expected a crash stall, max edge-1 latency {edge1_max:.1}s");
+}
+
+#[test]
+fn combined_crash_and_burst_sheds_explicitly_and_loses_nothing() {
+    // The hardest seeded scenario: edge 1 crashes at t=10s while a x3
+    // detection burst lands on everyone, with tight bounded queues. The
+    // zero-lost invariant must still hold — overload control converts
+    // overflow into *explicit* sheds, never silent loss.
+    let mut cfg = chaos_cfg();
+    cfg.overload = OverloadConfig {
+        enabled: true,
+        node_queue_cap: 4,
+        uplink_queue_cap: 3,
+        bursts: vec![BurstWindow { from: 20.0, until: 50.0, factor: 3 }],
+        ..OverloadConfig::default()
+    };
+    let r = run(&cfg, Scheme::SurveilEdge);
+    assert!(r.faults.shed > 0, "x3 burst into cap-4 queues during a crash must shed");
+    assert_eq!(r.faults.lost, 0, "crash + burst must not lose tasks silently");
+    assert_eq!(
+        r.latency.len() as u64 + r.faults.shed,
+        r.tasks,
+        "answered + shed must equal emitted under crash + burst"
+    );
+    // Both layers fired: fault recovery *and* overload control.
+    assert!(r.faults.retried + r.faults.rerouted + r.faults.degraded > 0);
+}
+
+#[test]
+fn retry_budget_caps_the_retry_storm() {
+    // Regression for the unbounded-retry amplification: under a heavy
+    // drop window, every timed-out upload used to re-enter the uplink
+    // immediately, so retransmissions multiplied queue depth. The
+    // per-node retry budget bounds how many retries may be in flight;
+    // excess work is shed explicitly instead of snowballing.
+    let base = || {
+        let mut cfg = Config { duration: 60.0, frame_h: 48, frame_w: 64, ..Config::single_edge() };
+        cfg.faults = FaultPlan {
+            seed: 9,
+            link: LinkFaults { drop_p: 0.35, ..LinkFaults::default() },
+            ..FaultPlan::none()
+        };
+        cfg.overload = OverloadConfig {
+            enabled: true,
+            node_queue_cap: 0,  // unbounded: isolate the retry budget
+            uplink_queue_cap: 0,
+            // A breaker that never trips, for the same reason.
+            breaker: BreakerConfig { trip_after: 100_000, ..BreakerConfig::default() },
+            ..OverloadConfig::default()
+        };
+        cfg
+    };
+    let run_with_budget = |budget: u32| {
+        let mut cfg = base();
+        cfg.overload.retry_budget = budget;
+        let reg = Registry::new();
+        let r = Harness::builder(cfg)
+            .mode(synth())
+            .observe(reg.clone())
+            .build()
+            .run(Scheme::CloudOnly)
+            .expect("run");
+        let depth = reg
+            .gauge("surveiledge_overload_max_queue_depth", &[("scheme", "cloud-only")])
+            .unwrap_or(0.0);
+        (r, depth)
+    };
+    let (unbounded, depth_unbounded) = run_with_budget(0);
+    let (capped, depth_capped) = run_with_budget(1);
+    assert!(unbounded.faults.retried > 0, "a 35% drop rate must force retries");
+    assert!(
+        capped.faults.retried < unbounded.faults.retried,
+        "budget 1 must strictly cut retries: {} vs {}",
+        capped.faults.retried,
+        unbounded.faults.retried
+    );
+    assert!(
+        depth_capped <= depth_unbounded,
+        "capping retries must not deepen queues: {depth_capped} vs {depth_unbounded}"
+    );
+    // Bounded does not mean lossy: what the budget refuses is shed.
+    assert_eq!(capped.faults.lost, 0);
+    assert_eq!(capped.latency.len() as u64 + capped.faults.shed, capped.tasks);
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! Overload-control integration: the shipped `configs/overload.toml`
+//! preset (under-provisioned edge + x3 mid-run burst) must shed batch
+//! work first while interactive deadlines stay bounded, account for
+//! every task (answered + shed = emitted, zero lost), and reproduce
+//! byte-identical exports on same-seed reruns. Runs entirely in
+//! simulated time.
+
+use surveiledge::config::Scheme;
+use surveiledge::harness::{ComputeMode, Harness, SchemeResult};
+use surveiledge::obs::Registry;
+use surveiledge::overload::OverloadConfig;
+use surveiledge::query::{verdicts_jsonl, QueryFile, QuerySet};
+
+fn synth() -> ComputeMode {
+    ComputeMode::Synthetic { sharpness: 10.0, edge_flip: 0.15, oracle_acc: 0.99 }
+}
+
+fn preset() -> QueryFile {
+    let path = format!("{}/configs/overload.toml", env!("CARGO_MANIFEST_DIR"));
+    QueryFile::from_file(std::path::Path::new(&path)).expect("overload preset")
+}
+
+fn run_preset(reg: Option<Registry>) -> SchemeResult {
+    let qf = preset();
+    let qs = QuerySet::new(qf.queries).expect("valid specs");
+    let mut b = Harness::builder(qf.cfg).mode(synth()).queries(qs);
+    if let Some(reg) = reg {
+        b = b.observe(reg);
+    }
+    b.build().run(Scheme::SurveilEdge).expect("run")
+}
+
+fn shed_count(r: &SchemeResult, query: &str) -> usize {
+    r.query_verdicts.iter().filter(|v| v.query == query && v.site == "shed").count()
+}
+
+#[test]
+fn shipped_overload_preset_parses() {
+    let qf = preset();
+    let o = &qf.cfg.overload;
+    assert!(o.enabled, "presence of [overload] must enable the subsystem");
+    assert!(o.node_queue_cap > 0 && o.uplink_queue_cap > 0);
+    assert_eq!(o.burst_factor(70.0), 3, "burst window must cover t=70");
+    assert_eq!(o.burst_factor(10.0), 1, "no burst off-window");
+    assert_eq!(qf.queries.len(), 2);
+    assert_eq!(qf.queries[0].id, "amber-interactive");
+    assert_eq!(qf.queries[1].id, "forensic-batch");
+}
+
+#[test]
+fn burst_sheds_batch_first_and_keeps_interactive_deadlines() {
+    let r = run_preset(None);
+    let batch_shed = shed_count(&r, "forensic-batch");
+    let interactive_shed = shed_count(&r, "amber-interactive");
+    // The burst rides the batch camera's busy window, so the overload
+    // machinery (ladder admission shedding + cheapest-victim eviction)
+    // must drop batch work...
+    assert!(batch_shed > 0, "the seeded burst must force batch shedding");
+    // ...while the interactive class is shed last: any interactive loss
+    // stays an order of magnitude below the batch loss.
+    assert!(
+        interactive_shed * 10 <= batch_shed,
+        "interactive shed {interactive_shed} vs batch shed {batch_shed}: batch must shed first"
+    );
+    // The protected class still gets answers, and its tail latency stays
+    // bounded — the queue caps turn unbounded waiting into shedding.
+    let mut lat: Vec<f64> = r
+        .query_verdicts
+        .iter()
+        .filter(|v| v.query == "amber-interactive" && v.site != "shed")
+        .map(|v| v.latency)
+        .collect();
+    assert!(lat.len() > 20, "interactive query too quiet: {} answers", lat.len());
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = lat[((lat.len() - 1) as f64 * 0.99) as usize];
+    assert!(p99 < 8.0, "interactive p99 {p99:.2}s blew the deadline under burst");
+}
+
+#[test]
+fn overload_run_accounts_for_every_task() {
+    let r = run_preset(None);
+    assert!(r.faults.shed > 0, "tight caps under burst must shed");
+    // Zero-lost invariant: every emitted task is either answered or
+    // *explicitly* shed — nothing falls through the cracks silently.
+    assert_eq!(r.faults.lost, 0, "shedding must be explicit, never silent loss");
+    assert_eq!(
+        r.latency.len() as u64 + r.faults.shed,
+        r.tasks,
+        "answered + shed must equal emitted"
+    );
+}
+
+#[test]
+fn same_seed_overload_reruns_are_byte_identical() {
+    let (ra, rb) = (Registry::new(), Registry::new());
+    let a = run_preset(Some(ra.clone()));
+    let b = run_preset(Some(rb.clone()));
+    assert_eq!(a.faults, b.faults, "shed/trip accounting must be seed-deterministic");
+    assert_eq!(ra.export_prometheus(), rb.export_prometheus());
+    assert_eq!(ra.export_jsonl(), rb.export_jsonl());
+    for id in ["amber-interactive", "forensic-batch"] {
+        assert_eq!(
+            verdicts_jsonl(&a.query_verdicts, id),
+            verdicts_jsonl(&b.query_verdicts, id),
+            "{id}: same seed must export byte-identical verdict JSONL"
+        );
+    }
+}
+
+#[test]
+fn overload_machinery_reports_in_obs() {
+    let reg = Registry::new();
+    let _ = run_preset(Some(reg.clone()));
+    let prom = reg.export_prometheus();
+    assert!(prom.contains("surveiledge_overload_shed_total"), "shed counter missing");
+    assert!(prom.contains("surveiledge_overload_pressure"), "pressure gauge missing");
+    assert!(prom.contains("surveiledge_overload_ladder_level"), "ladder gauge missing");
+    assert!(prom.contains("surveiledge_overload_max_queue_depth"), "depth gauge missing");
+    let events = reg.export_jsonl();
+    assert!(events.contains("\"shed\""), "shed spans missing from the event log");
+}
+
+#[test]
+fn disabling_the_block_makes_the_subsystem_inert() {
+    let qf = preset();
+    let mut cfg = qf.cfg;
+    cfg.overload = OverloadConfig::default(); // as if the block were absent
+    let qs = QuerySet::new(qf.queries).expect("valid specs");
+    let reg = Registry::new();
+    let r = Harness::builder(cfg)
+        .mode(synth())
+        .queries(qs)
+        .observe(reg.clone())
+        .build()
+        .run(Scheme::SurveilEdge)
+        .expect("run");
+    // No caps, no burst, no ladder: every task is answered and not one
+    // overload metric leaks into the export.
+    assert_eq!(r.faults.shed, 0);
+    assert_eq!(r.latency.len() as u64, r.tasks);
+    assert!(
+        !reg.export_prometheus().contains("surveiledge_overload"),
+        "disabled overload control must leave exports untouched"
+    );
+}

@@ -84,6 +84,7 @@ fn live_edge_worker_matches_pipeline_stage_decisions() {
         query: ClassId::Moped,
         slowdown: 1.0,
         queries: None,
+        overload: None,
     };
     // Pin the replicated cloud latency: the worker reads t/0 from the DB,
     // the mirror uses the same constant. The worker's own queue stays at
